@@ -1,0 +1,43 @@
+"""Paper Fig. 1c: energy & area breakdown of the NAIVE sparse HDC system.
+
+Reproduced with the switching-activity cost model (core/hwmodel.py) on
+synthetic patient-11 LBP streams.  Derived value = energy share of
+binding + one-hot decoder (paper: 51.3%)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier, hwmodel
+from repro.data import ieeg
+
+
+def run() -> list[dict]:
+    cfg = classifier.HDCConfig(spatial_threshold=1)
+    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
+    es, asc = hwmodel.calibration_factors(params, codes, cfg)
+    r = hwmodel.report("sparse_naive", params, codes, cfg, e_scale=es, a_scale=asc)
+    rows = []
+    for mod in r["energy_nj"]:
+        rows.append({
+            "name": f"fig1c.{mod}",
+            "us_per_call": "",
+            "derived": (f"E%={100 * r['energy_breakdown'][mod]:.1f}"
+                        f";A%={100 * r['area_breakdown'].get(mod, 0):.1f}"),
+        })
+    bind_dec = r["energy_breakdown"]["binding"] + r["energy_breakdown"]["decoder"]
+    rows.append({"name": "fig1c.binding_plus_decoder_energy_share",
+                 "us_per_call": "",
+                 "derived": f"{100 * bind_dec:.1f}% (paper: 51.3%)"})
+    rows.append({"name": "fig1c.naive_total",
+                 "us_per_call": "",
+                 "derived": (f"E={r['energy_total_nj']:.1f}nJ"
+                             f";A={r['area_total_mm2']:.4f}mm2")})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,104 @@
+"""Roofline aggregation: read artifacts/dryrun/*.json -> the §Roofline table.
+
+Per (arch x shape) on the single-pod mesh: the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line suggestion for
+the dominant term.  Also emits the multi-pod pass/fail summary."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+SUGGESTIONS = {
+    "compute": ("shed non-useful FLOPs: GQA-KV TP replication, remat policy, "
+                "MoE capacity slack"),
+    "memory": ("raise arithmetic intensity: larger per-device batch, fuse "
+               "attention chunks, bf16 intermediates"),
+    "collective": ("reshard to cut gathered bytes: FSDP prefetch granularity, "
+                   "MoE all-to-all instead of gather, overlap with compute"),
+}
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | "
+                f"{r['reason'][:60]} |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | "
+                f"{r.get('error', '')[:60]} |")
+    if "roofline" not in r:   # hdc serve cell: derive terms inline
+        from repro.runtime.roofline import HBM_BW, PEAK_FLOPS, collective_seconds
+        c = r.get("cost", {})
+        t = {"compute_s": c.get("flops", 0) / PEAK_FLOPS,
+             "memory_s": c.get("bytes accessed", 0) / HBM_BW,
+             "collective_s": collective_seconds(r.get("collectives", {})),
+             "useful_flops_fraction": float("nan")}
+        t["bottleneck"] = max((("compute", t["compute_s"]),
+                               ("memory", t["memory_s"]),
+                               ("collective", t["collective_s"])),
+                              key=lambda kv: kv[1])[0]
+    else:
+        t = r["roofline"]
+    return ("| {arch} | {shape} | {c:.3f} | {m:.3f} | {k:.3f} | {b} | "
+            "{u:.2f} | {s} |".format(
+                arch=r["arch"], shape=r["shape"], c=t["compute_s"],
+                m=t["memory_s"], k=t["collective_s"], b=t["bottleneck"],
+                u=t["useful_flops_fraction"],
+                s=SUGGESTIONS.get(t["bottleneck"], "")[:60]))
+
+
+def run() -> list[dict]:
+    rows = []
+    for r in load_records("single"):
+        if r.get("status") == "ok" and "roofline" in r:
+            t = r["roofline"]
+            tag = f".{r['tag']}" if r.get("tag") else ""
+            rows.append({
+                "name": f"roofline.{r['arch']}.{r['shape']}{tag}",
+                "us_per_call": f"{t['step_time_bound_s'] * 1e6:.0f}",
+                "derived": (f"bottleneck={t['bottleneck']}"
+                            f";useful={t['useful_flops_fraction']:.2f}"),
+            })
+        elif r.get("status") == "ok":   # hdc serve cell (terms derived inline)
+            c = r.get("cost", {})
+            rows.append({
+                "name": f"roofline.{r['arch']}.{r['shape']}",
+                "us_per_call": f"{c.get('bytes accessed', 0) / 819e9 * 1e6:.0f}",
+                "derived": "bottleneck=memory;collectives=0",
+            })
+        else:
+            rows.append({"name": f"roofline.{r['arch']}.{r['shape']}",
+                         "us_per_call": "",
+                         "derived": r.get("status")})
+    multi = load_records("multi")
+    n_ok = sum(r.get("status") == "ok" for r in multi)
+    n_skip = sum(r.get("status") == "skipped" for r in multi)
+    rows.append({"name": "roofline.multipod_summary",
+                 "us_per_call": "",
+                 "derived": f"ok={n_ok};skipped={n_skip};total={len(multi)}"})
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    head = ("| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | useful_flops | next lever |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return "\n".join([head] + [fmt_row(r) for r in load_records(mesh)])
+
+
+if __name__ == "__main__":
+    print(markdown_table("single"))
+    print()
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure + framework perf.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig1c       naive-sparse energy/area breakdown       (paper Fig. 1c)
+  fig4        delay/accuracy vs max HV density          (paper Fig. 4)
+  fig5        4-variant energy/area + headline ratios   (paper Fig. 5)
+  table1      SotA comparison                           (paper Table I)
+  throughput  HDC pipeline throughput + traffic model   (TPU-side perf)
+  roofline    aggregated dry-run roofline terms          (framework)
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    mods = sys.argv[1:] or ["fig1c", "fig4", "fig5", "table1", "throughput",
+                            "roofline"]
+    print("name,us_per_call,derived")
+    for mod in mods:
+        try:
+            name = f"benchmarks.bench_{mod}" if mod != "roofline" else "benchmarks.roofline"
+            module = __import__(name, fromlist=["run"])
+            emit(module.run())
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{mod}.ERROR,,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

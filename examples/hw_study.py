@@ -1,0 +1,68 @@
+"""Hardware design-space study: reproduce the paper's optimization story.
+
+Walks the four design points (dense -> sparse-naive -> +CompIM ->
++no-thinning) through the switching-activity cost model and prints the
+paper-style breakdowns and ratios, plus the density-hyperparameter trade-off
+on one patient.
+
+    PYTHONPATH=src python examples/hw_study.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import classifier, dense, hdtrain, hwmodel, metrics
+from repro.data import ieeg
+
+
+def main():
+    cfg = classifier.HDCConfig(spatial_threshold=1)
+    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    dparams = dense.init_params(jax.random.PRNGKey(7), dense.DenseHDCConfig())
+    codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
+
+    es, asc = hwmodel.calibration_factors(params, codes, cfg)
+    print("== energy/area across design points (16nm model, calibrated to "
+          "the paper's optimized design) ==")
+    reports = {}
+    for v in hwmodel.VARIANTS:
+        p = dparams if v == "dense" else params
+        r = hwmodel.report(v, p, codes, cfg, e_scale=es, a_scale=asc)
+        reports[v] = r
+        print(f"\n{v}: E={r['energy_total_nj']:.2f} nJ/pred, "
+              f"A={r['area_total_mm2']:.4f} mm2, "
+              f"latency={r['latency_us_at_10mhz']:.1f} us")
+        for mod in r["energy_nj"]:
+            print(f"   {mod:18s} E {100 * r['energy_breakdown'][mod]:5.1f}%  "
+                  f"A {100 * r['area_breakdown'].get(mod, 0):5.1f}%")
+
+    sn, so, dn = (reports[k] for k in ("sparse_naive", "sparse_opt", "dense"))
+    print("\n== headline ratios ==")
+    print(f"opt vs naive : E {sn['energy_total_nj'] / so['energy_total_nj']:.2f}x "
+          f"A {sn['area_total_mm2'] / so['area_total_mm2']:.2f}x  (paper 1.72x/2.20x)")
+    print(f"dense vs opt : E {dn['energy_total_nj'] / so['energy_total_nj']:.2f}x "
+          f"A {dn['area_total_mm2'] / so['area_total_mm2']:.2f}x  (paper 7.50x/3.24x)")
+
+    print("\n== max-density hyperparameter (patient 11) ==")
+    pat = ieeg.make_patient(11, n_seizures=3)
+    rec = pat.records[0]
+    c = jnp.asarray(rec.codes[None])
+    labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
+    for target in (0.1, 0.2, 0.3, 0.5):
+        pcfg = classifier.with_density_target(params, c, cfg, target)
+        chvs = hdtrain.train_one_shot(params, c, labels, pcfg)
+        rs = []
+        for rec2 in pat.records[1:]:
+            _, preds = classifier.infer(params, chvs,
+                                        jnp.asarray(rec2.codes[None]), pcfg)
+            rs.append(metrics.detection_metrics(
+                np.asarray(preds[0]), ieeg.onset_frame(rec2, pcfg.window)))
+        agg = metrics.aggregate(rs)
+        print(f"  max density {target:.2f} (thr={pcfg.temporal_threshold:3d}): "
+              f"acc={agg['detection_accuracy']:.2f} "
+              f"delay={agg['mean_delay_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Associative memory (AM): similarity search over class HVs.
+
+Sparse HDC similarity = popcount(AND(query, class)) — only 1-bits carry
+information (paper Sec. II-D).  Dense HDC similarity = D - Hamming distance.
+The hardware searches the two classes sequentially; here the search is a
+batched packed popcount "matmul": (B, W) x (C, W) -> (B, C) scores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+def am_scores_sparse(query: jax.Array, classes: jax.Array) -> jax.Array:
+    """(..., W) uint32 query vs (C, W) class HVs -> (..., C) int32 overlap."""
+    return hv.popcount(jnp.bitwise_and(query[..., None, :], classes), axis=-1)
+
+
+def am_scores_dense(query: jax.Array, classes: jax.Array, dim: int) -> jax.Array:
+    """Dense similarity = D - Hamming(query, class)."""
+    return dim - hv.popcount(jnp.bitwise_xor(query[..., None, :], classes), axis=-1)
+
+
+def am_predict(scores: jax.Array) -> jax.Array:
+    """argmax over classes; ties resolve to the lower class index
+    (= interictal for the 2-class iEEG system, the safe default)."""
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Binding operations for sparse (and dense) HDC.
+
+Segmented-shift binding (paper Fig. 2a): split the D-bit HV into S segments of
+L = D/S bits; circularly shift each segment of HV_a by the position of the
+1-bit in the corresponding segment of HV_b.
+
+Two implementations:
+
+* ``bind_segmented_packed`` — the **naive baseline** (paper Fig. 3a): takes the
+  packed data HV, runs the one-hot->binary decoder (packed_to_positions), then
+  barrel-shifts the electrode HV segments.  Kept bit-exact with hardware
+  semantics: this is the datapath whose switching activity the cost model
+  meters.
+* ``bind_positions`` — the **CompIM datapath** (paper Fig. 3b): both operands
+  are already in position domain; binding is a 7-bit modular add per segment.
+
+For one-bit-per-segment HVs the two are equivalent:
+``shift(onehot(p_a), p_b) == onehot((p_a + p_b) mod L)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+def roll_segments_bits(bits: jax.Array, shifts: jax.Array, segments: int) -> jax.Array:
+    """Circularly shift each L-bit segment of (..., D) bits by (..., S) shifts."""
+    d = bits.shape[-1]
+    seg_len = d // segments
+    seg = bits.reshape(*bits.shape[:-1], segments, seg_len)
+    idx = jnp.arange(seg_len, dtype=jnp.int32)
+    # out[j] = in[(j - shift) mod L]  == circular left-roll by `shift`
+    src = (idx[None, :] - shifts[..., :, None].astype(jnp.int32)) % seg_len
+    out = jnp.take_along_axis(seg, src, axis=-1)
+    return out.reshape(*bits.shape[:-1], d)
+
+
+def bind_segmented_packed(data_packed: jax.Array, elec_packed: jax.Array,
+                          dim: int, segments: int) -> jax.Array:
+    """Naive baseline binding (one-hot decoder + barrel shifter), packed I/O.
+
+    data_packed: (..., W) the IM output HV (one 1-bit per segment)
+    elec_packed: (..., W) the electrode HV (broadcastable against data)
+    """
+    shifts = hv.packed_to_positions(data_packed, dim, segments)  # decoder
+    elec_bits = hv.unpack_bits(elec_packed, dim)
+    bound = roll_segments_bits(
+        jnp.broadcast_to(elec_bits, jnp.broadcast_shapes(elec_bits.shape, shifts.shape[:-1] + (dim,))),
+        shifts, segments)
+    return hv.pack_bits(bound)
+
+
+def bind_positions(data_pos: jax.Array, elec_pos: jax.Array, seg_len: int) -> jax.Array:
+    """CompIM binding: (..., S) + (..., S) -> (..., S), mod seg_len adds."""
+    return ((data_pos.astype(jnp.int32) + elec_pos.astype(jnp.int32)) % seg_len).astype(jnp.uint8)
+
+
+def unbind_positions(bound_pos: jax.Array, elec_pos: jax.Array, seg_len: int) -> jax.Array:
+    """Inverse binding in position domain (release)."""
+    return ((bound_pos.astype(jnp.int32) - elec_pos.astype(jnp.int32)) % seg_len).astype(jnp.uint8)
+
+
+def bind_xor(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Dense-HDC binding: bitwise XOR on packed words."""
+    return jnp.bitwise_xor(a_packed, b_packed)

@@ -1,0 +1,106 @@
+"""Bundling (superposition) with and without thinning.
+
+Spatial bundling combines the 64 bound channel HVs of one cycle; temporal
+bundling combines 256 consecutive spatial outputs into one time-frame HV.
+
+Baseline (paper Fig. 3a): per-element adder tree over the N inputs, then a
+threshold ("thinning") back to binary.  Optimized spatial bundling (paper
+Sec. III-B): the threshold is removed and the adder tree collapses to an OR
+tree — valid because 64 x 0.78% <= 50% density, the HV cannot saturate.
+
+Position-domain spatial bundling (CompIM datapath): the bound HVs exist only
+as (channels, S) positions; bundling-without-thinning is a scatter-OR of
+positions into the packed accumulator; bundling-with-thinning needs the
+multiplicity of each position (segment bincount).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+# ---------------------------------------------------------------------------
+# bit-domain (baseline datapath)
+# ---------------------------------------------------------------------------
+
+def spatial_counts_packed(bound: jax.Array, dim: int) -> jax.Array:
+    """Adder tree: (..., N, W) packed -> (..., D) int32 counts."""
+    return hv.unpacked_counts(bound, axis=-2, dim=dim)
+
+
+def spatial_bundle_thinned(bound: jax.Array, dim: int, threshold: int) -> jax.Array:
+    """Baseline spatial bundling: adder tree + thinning threshold -> packed."""
+    counts = spatial_counts_packed(bound, dim)
+    return hv.threshold_pack(counts, threshold)
+
+
+def spatial_bundle_or(bound: jax.Array) -> jax.Array:
+    """Optimized spatial bundling: OR tree over channels -> packed."""
+    return hv.or_reduce(bound, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# position-domain (CompIM datapath)
+# ---------------------------------------------------------------------------
+
+def spatial_bundle_or_positions(pos: jax.Array, dim: int, segments: int) -> jax.Array:
+    """(..., N, S) positions -> packed (..., W) via scatter-free OR.
+
+    Builds each channel's packed HV from positions and ORs across channels —
+    in XLA this fuses into a compare/select + OR-reduce with no 1024-wide
+    one-hot materialized per channel in HBM.
+    """
+    packed = hv.positions_to_packed(pos, dim, segments)  # (..., N, W)
+    return hv.or_reduce(packed, axis=-2)
+
+
+def spatial_counts_positions(pos: jax.Array, dim: int, segments: int) -> jax.Array:
+    """(..., N, S) positions -> (..., D) int32 counts (segment bincount).
+
+    Goes through the packed representation and the scan-based adder so the
+    peak temporary is one channel slice, not a (..., N, S, L) one-hot.
+    """
+    packed = hv.positions_to_packed(pos, dim, segments)  # (..., N, W)
+    return hv.unpacked_counts(packed, axis=-2, dim=dim)
+
+
+def spatial_bundle_thinned_positions(pos: jax.Array, dim: int, segments: int,
+                                     threshold: int) -> jax.Array:
+    counts = spatial_counts_positions(pos, dim, segments)
+    return hv.threshold_pack(counts, threshold)
+
+
+# ---------------------------------------------------------------------------
+# temporal bundling (both datapaths share it: input is a packed HV stream)
+# ---------------------------------------------------------------------------
+
+def temporal_counts(frames: jax.Array, dim: int) -> jax.Array:
+    """8-bit-counter accumulator: (..., T, W) packed -> (..., D) int32.
+
+    Hardware: a D x 8-bit register file (8192 bits for D=1024) accumulating
+    for T = 256 cycles.  Counts are <= T so 8 bits suffice (paper Sec. II-C).
+    """
+    return hv.unpacked_counts(frames, axis=-2, dim=dim)
+
+
+def temporal_bundle(frames: jax.Array, dim: int, threshold) -> jax.Array:
+    """Temporal bundling with thinning -> packed time-frame HV."""
+    counts = temporal_counts(frames, dim)
+    return hv.threshold_pack(counts, threshold)
+
+
+def threshold_for_density(counts: jax.Array, target_density: float) -> jax.Array:
+    """Calibrate a thinning threshold achieving <= target density.
+
+    The paper treats "maximum HV density after thinning" as the tuned
+    hyperparameter (Fig. 4); in hardware the threshold register is programmed
+    per patient.  Given representative counts (..., D) we pick the smallest
+    integer threshold whose density <= target (quantile of the count
+    distribution over the last axis, averaged over leading axes).
+    """
+    q = jnp.quantile(counts.astype(jnp.float32), 1.0 - target_density, axis=-1)
+    thr = jnp.ceil(jnp.mean(q)) + 1.0
+    return jnp.maximum(thr, 1.0).astype(jnp.int32)

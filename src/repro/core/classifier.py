@@ -1,0 +1,127 @@
+"""End-to-end sparse HDC classifier pipelines (paper Fig. 1b).
+
+Three selectable datapaths, bit-exact with their hardware counterparts:
+
+* ``sparse_naive``  — baseline: packed IM, one-hot decoder + barrel-shift
+                      binding, adder-tree spatial bundling WITH thinning.
+* ``sparse_compim`` — paper-optimized: CompIM position-domain binding; spatial
+                      bundling with thinning (adder tree) or without (OR tree),
+                      per ``spatial_thinning``.
+* ``dense``         — dense-HDC baseline of [1]: XOR binding, majority
+                      bundling, Hamming AM (see core/dense.py).
+
+Input is a stream of LBP codes (batch, time, channels) uint8; every
+``window`` cycles the temporal bundler emits one time-frame HV which the AM
+scores against the class HVs.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import am, binding, bundling, hv, im
+
+
+@dataclass(frozen=True)
+class HDCConfig:
+    dim: int = 1024
+    segments: int = 8
+    channels: int = 64
+    lbp_bits: int = 6
+    window: int = 256           # temporal bundling length (one time frame)
+    variant: str = "sparse_compim"   # sparse_naive | sparse_compim | dense
+    spatial_thinning: bool = False   # paper-optimized: False (OR tree)
+    spatial_threshold: int = 2       # used when spatial_thinning
+    temporal_threshold: int = 130    # paper Sec. IV-B operating point
+    n_classes: int = 2
+    # training-time thinning target for class HVs (paper: 50%)
+    class_density: float = 0.5
+
+    @property
+    def codes(self) -> int:
+        return 1 << self.lbp_bits
+
+    @property
+    def seg_len(self) -> int:
+        return self.dim // self.segments
+
+    @property
+    def words(self) -> int:
+        return self.dim // 32
+
+
+def init_params(key: jax.Array, cfg: HDCConfig) -> im.IMParams:
+    return im.make_im(key, channels=cfg.channels, codes=cfg.codes,
+                      dim=cfg.dim, segments=cfg.segments)
+
+
+# ---------------------------------------------------------------------------
+# spatial encoder: codes for one cycle -> one bundled HV
+# ---------------------------------------------------------------------------
+
+def spatial_encode(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(..., channels) LBP codes -> (..., W) packed bundled HV."""
+    if cfg.variant == "sparse_naive":
+        data = im.im_lookup_packed(params, codes)                  # (..., C, W)
+        bound = binding.bind_segmented_packed(data, params.elec_packed,
+                                              cfg.dim, cfg.segments)
+        return bundling.spatial_bundle_thinned(bound, cfg.dim, cfg.spatial_threshold)
+    if cfg.variant == "sparse_compim":
+        pos = im.im_lookup_positions(params, codes)                # (..., C, S)
+        bound = binding.bind_positions(pos, params.elec_pos, cfg.seg_len)
+        if cfg.spatial_thinning:
+            return bundling.spatial_bundle_thinned_positions(
+                bound, cfg.dim, cfg.segments, cfg.spatial_threshold)
+        return bundling.spatial_bundle_or_positions(bound, cfg.dim, cfg.segments)
+    raise ValueError(f"unknown sparse variant {cfg.variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# full encoder: code stream -> time-frame HVs
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_frames(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(B, T, channels) uint8 codes -> (B, T // window, W) packed frame HVs."""
+    b, t, c = codes.shape
+    frames = t // cfg.window
+    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    spatial = spatial_encode(params, codes, cfg)       # (B, F, window, W)
+    return bundling.temporal_bundle(spatial, cfg.dim, cfg.temporal_threshold)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def frame_counts(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """Temporal accumulator counts per frame (B, F, D) — used to calibrate the
+    temporal threshold for a target maximum density (paper Fig. 4 sweep)."""
+    b, t, c = codes.shape
+    frames = t // cfg.window
+    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    spatial = spatial_encode(params, codes, cfg)
+    return bundling.temporal_counts(spatial, cfg.dim)
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def infer(params: im.IMParams, class_hvs: jax.Array, codes: jax.Array,
+          cfg: HDCConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (scores (B, F, n_classes), predictions (B, F))."""
+    q = encode_frames(params, codes, cfg)
+    scores = am.am_scores_sparse(q, class_hvs)
+    return scores, am.am_predict(scores)
+
+
+def with_density_target(params: im.IMParams, codes: jax.Array, cfg: HDCConfig,
+                        target: float) -> HDCConfig:
+    """Return cfg with temporal_threshold calibrated so the post-thinning
+    density stays <= `target` on the given calibration stream."""
+    counts = frame_counts(params, codes, cfg)
+    thr = int(bundling.threshold_for_density(counts, target))
+    return replace(cfg, temporal_threshold=thr)

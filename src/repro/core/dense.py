@@ -1,0 +1,99 @@
+"""Dense HDC baseline (Burrello et al. [1]) — the paper's comparison system.
+
+Dense ops: random p=50% item/electrode HVs; binding = XOR; spatial bundling =
+per-element majority over the 64 channels; temporal bundling = majority over
+the 256-cycle window; AM similarity = D - Hamming.  Same D=1024 as the sparse
+system for the apples-to-apples hardware comparison (paper Fig. 5 / Table I).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import am, hv
+
+
+@dataclass(frozen=True)
+class DenseHDCConfig:
+    dim: int = 1024
+    channels: int = 64
+    lbp_bits: int = 6
+    window: int = 256
+    n_classes: int = 2
+
+    @property
+    def codes(self) -> int:
+        return 1 << self.lbp_bits
+
+    @property
+    def words(self) -> int:
+        return self.dim // 32
+
+
+@dataclass(frozen=True)
+class DenseIMParams:
+    item_packed: jax.Array   # (channels, codes, W)
+    elec_packed: jax.Array   # (channels, W)
+    dim: int
+
+
+jax.tree_util.register_dataclass(
+    DenseIMParams, data_fields=["item_packed", "elec_packed"], meta_fields=["dim"])
+
+
+def init_params(key: jax.Array, cfg: DenseHDCConfig) -> DenseIMParams:
+    k1, k2 = jax.random.split(key)
+    return DenseIMParams(
+        item_packed=hv.random_dense_packed(k1, (cfg.channels, cfg.codes), cfg.dim),
+        elec_packed=hv.random_dense_packed(k2, (cfg.channels,), cfg.dim),
+        dim=cfg.dim,
+    )
+
+
+def spatial_encode(params: DenseIMParams, codes: jax.Array, cfg: DenseHDCConfig) -> jax.Array:
+    """(..., channels) codes -> (..., W) majority-bundled HV."""
+    ch = jnp.arange(cfg.channels)
+    data = params.item_packed[ch, codes.astype(jnp.int32)]       # (..., C, W)
+    bound = jnp.bitwise_xor(data, params.elec_packed)            # XOR binding
+    counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)     # (..., D)
+    return hv.pack_bits((counts * 2 > cfg.channels).astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def encode_frames(params: DenseIMParams, codes: jax.Array, cfg: DenseHDCConfig) -> jax.Array:
+    """(B, T, channels) codes -> (B, F, W) majority time-frame HVs."""
+    b, t, c = codes.shape
+    frames = t // cfg.window
+    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    spatial = spatial_encode(params, codes, cfg)                 # (B, F, win, W)
+    counts = hv.unpacked_counts(spatial, axis=-2, dim=cfg.dim)   # (B, F, D)
+    return hv.pack_bits((counts * 2 > cfg.window).astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def infer(params: DenseIMParams, class_hvs: jax.Array, codes: jax.Array,
+          cfg: DenseHDCConfig) -> tuple[jax.Array, jax.Array]:
+    q = encode_frames(params, codes, cfg)
+    scores = am.am_scores_dense(q, class_hvs, cfg.dim)
+    return scores, am.am_predict(scores)
+
+
+def train_one_shot(params: DenseIMParams, codes: jax.Array, labels: jax.Array,
+                   cfg: DenseHDCConfig) -> jax.Array:
+    """One-shot class HVs: majority-bundle the frame HVs of each class.
+
+    codes: (B, T, channels); labels: (B, F) int32 per-frame class ids.
+    Returns (n_classes, W) packed class HVs.
+    """
+    q = encode_frames(params, codes, cfg)                        # (B, F, W)
+    bits = hv.unpack_bits(q, cfg.dim).astype(jnp.int32)          # (B, F, D)
+    flat_bits = bits.reshape(-1, cfg.dim)
+    flat_labels = labels.reshape(-1)
+    onehot = jax.nn.one_hot(flat_labels, cfg.n_classes, dtype=jnp.int32)
+    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)
+    n_per_class = jnp.sum(onehot, axis=0)[:, None]
+    return hv.pack_bits((counts * 2 > n_per_class).astype(jnp.uint8))

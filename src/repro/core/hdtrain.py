@@ -1,0 +1,38 @@
+"""One-shot training for the sparse HDC classifier (paper Sec. II-D).
+
+Class HVs are computed through the SAME encoder as inference, on labeled data
+from one seizure: all time-frame HVs of a class are bundled with thinning to
+50% density (paper: "an additional bundling when training with thinning to
+50% density").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier, hv
+from repro.core.classifier import HDCConfig
+from repro.core.bundling import threshold_for_density
+from repro.core.im import IMParams
+
+
+def train_one_shot(params: IMParams, codes: jax.Array, labels: jax.Array,
+                   cfg: HDCConfig) -> jax.Array:
+    """codes: (B, T, channels) uint8; labels: (B, F) int per-frame class ids.
+
+    Returns (n_classes, W) packed class HVs thinned to ~cfg.class_density.
+    """
+    frames = classifier.encode_frames(params, codes, cfg)        # (B, F, W)
+    bits = hv.unpack_bits(frames, cfg.dim).astype(jnp.int32)     # (B, F, D)
+    flat_bits = bits.reshape(-1, cfg.dim)
+    flat_labels = labels.reshape(-1)
+    onehot = jax.nn.one_hot(flat_labels, cfg.n_classes, dtype=jnp.int32)
+    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)          # (n_cls, D)
+
+    # per-class thinning threshold targeting class_density (>= 1)
+    def thin(cls_counts):
+        thr = threshold_for_density(cls_counts[None, :], cfg.class_density)
+        return hv.threshold_pack(cls_counts[None, :], thr)[0]
+
+    return jax.vmap(thin)(counts)

@@ -1,0 +1,198 @@
+"""Hypervector primitives: bit-packed and position-domain representations.
+
+Two representations of a sparse segmented hypervector (HV) with dimension D,
+S segments of L = D // S bits, and exactly one 1-bit per segment:
+
+* **bit domain**  — packed ``uint32[D // 32]`` words (LSB-first within a word).
+  This is the "naive" datapath the paper's baseline accelerator uses (1024
+  wires per HV), and the only representation dense HDC has.
+* **position domain** — ``uint8[S]`` (paper: 8 segments x 7-bit positions =
+  56 bits).  This is the CompIM representation: all information of a sparse
+  segmented HV lives in the positions of its 1-bits.
+
+All functions are pure jnp and jit-compatible; batch dimensions lead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32  # packing word width
+
+
+# ---------------------------------------------------------------------------
+# packing / unpacking
+# ---------------------------------------------------------------------------
+
+def n_words(dim: int) -> int:
+    if dim % WORD:
+        raise ValueError(f"D={dim} must be a multiple of {WORD}")
+    return dim // WORD
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a (..., D) array of {0,1} into (..., D//32) uint32, LSB-first."""
+    d = bits.shape[-1]
+    w = n_words(d)
+    b = bits.reshape(*bits.shape[:-1], w, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, dim: int | None = None) -> jax.Array:
+    """Unpack (..., W) uint32 into (..., W*32) of {0,1} uint8, LSB-first."""
+    w = words.shape[-1]
+    dim = dim if dim is not None else w * WORD
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], w * WORD)[..., :dim].astype(jnp.uint8)
+
+
+def popcount(words: jax.Array, axis=-1) -> jax.Array:
+    """Total number of set bits along `axis` of a packed uint32 array."""
+    return jnp.sum(lax_popcount(words).astype(jnp.int32), axis=axis)
+
+
+def lax_popcount(words: jax.Array) -> jax.Array:
+    return jax.lax.population_count(words)
+
+
+# ---------------------------------------------------------------------------
+# position <-> bit domain
+# ---------------------------------------------------------------------------
+
+def positions_to_bits(pos: jax.Array, dim: int, segments: int) -> jax.Array:
+    """(..., S) segment positions -> (..., D) one-hot-per-segment bits (uint8).
+
+    ``pos[..., s]`` is in [0, L) with L = dim // segments; the set bit of
+    segment s lives at global index s * L + pos.
+    """
+    seg_len = dim // segments
+    iota = jnp.arange(seg_len, dtype=pos.dtype)
+    onehot = (pos[..., None] == iota).astype(jnp.uint8)  # (..., S, L)
+    return onehot.reshape(*pos.shape[:-1], dim)
+
+
+def positions_to_packed(pos: jax.Array, dim: int, segments: int) -> jax.Array:
+    """(..., S) positions -> (..., D//32) packed uint32 (scatter-free)."""
+    seg_len = dim // segments
+    words_per_seg = seg_len // WORD
+    if seg_len % WORD:
+        return pack_bits(positions_to_bits(pos, dim, segments))
+    word_idx = (pos // WORD).astype(jnp.int32)  # (..., S) in [0, words_per_seg)
+    bit = jnp.uint32(1) << (pos % WORD).astype(jnp.uint32)
+    iota = jnp.arange(words_per_seg, dtype=jnp.int32)
+    seg_words = jnp.where(word_idx[..., None] == iota, bit[..., None], 0)
+    return seg_words.reshape(*pos.shape[:-1], segments * words_per_seg).astype(jnp.uint32)
+
+
+def packed_to_positions(words: jax.Array, dim: int, segments: int) -> jax.Array:
+    """Inverse of positions_to_packed for HVs with exactly one bit/segment.
+
+    This is the "one-hot to binary decoder" of the paper's baseline binding
+    (Fig. 3a).  Returns (..., S) uint8 positions.
+    """
+    bits = unpack_bits(words, dim)  # (..., D)
+    seg_len = dim // segments
+    seg = bits.reshape(*bits.shape[:-1], segments, seg_len)
+    iota = jnp.arange(seg_len, dtype=jnp.int32)
+    return jnp.sum(seg.astype(jnp.int32) * iota, axis=-1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# random HV generation (design-time, like the paper's random IM)
+# ---------------------------------------------------------------------------
+
+def random_sparse_positions(key: jax.Array, shape: tuple[int, ...],
+                            segments: int, seg_len: int) -> jax.Array:
+    """Random position-domain HVs: (*shape, segments) uint8 in [0, seg_len)."""
+    return jax.random.randint(key, (*shape, segments), 0, seg_len, dtype=jnp.int32).astype(jnp.uint8)
+
+
+def random_dense_packed(key: jax.Array, shape: tuple[int, ...], dim: int) -> jax.Array:
+    """Random dense (p = 50%) packed HVs: (*shape, D//32) uint32."""
+    bits = jax.random.bernoulli(key, 0.5, (*shape, dim)).astype(jnp.uint8)
+    return pack_bits(bits)
+
+
+# ---------------------------------------------------------------------------
+# elementwise packed ops
+# ---------------------------------------------------------------------------
+
+def xor(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.bitwise_xor(a, b)
+
+
+def or_(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.bitwise_or(a, b)
+
+
+def and_(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.bitwise_and(a, b)
+
+
+def or_reduce(words: jax.Array, axis: int) -> jax.Array:
+    """OR-tree over `axis` — the paper's optimized spatial bundling."""
+    return jax.lax.reduce(words, jnp.uint32(0), jax.lax.bitwise_or, (axis % words.ndim,))
+
+
+def density(words: jax.Array, dim: int) -> jax.Array:
+    """Fraction of set bits of packed HVs (reduces over the last axis)."""
+    return popcount(words).astype(jnp.float32) / dim
+
+
+def hamming(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hamming distance between packed HVs (last axis = words)."""
+    return popcount(xor(a, b))
+
+
+def overlap(a: jax.Array, b: jax.Array) -> jax.Array:
+    """AND+popcount similarity (paper's sparse AM metric; last axis = words)."""
+    return popcount(and_(a, b))
+
+
+# ---------------------------------------------------------------------------
+# counting bundler (bit domain) — used by baseline spatial & temporal bundling
+# ---------------------------------------------------------------------------
+
+def unpacked_counts(words: jax.Array, axis: int, dim: int) -> jax.Array:
+    """Sum of unpacked bits over `axis`: the adder-tree of the baseline.
+
+    words: (..., N, ..., W) packed; returns (..., D) int32 counts with `axis`
+    reduced.  Accumulates with a scan over `axis` so the peak temporary is one
+    unpacked slice, not the full (..., N, ..., D) expansion (which reaches
+    tens of GB for long code streams).
+    """
+    axis = axis % words.ndim
+    moved = jnp.moveaxis(words, axis, 0)
+
+    def step(acc, w):
+        return acc + unpack_bits(w, dim).astype(jnp.int32), None
+
+    init = jnp.zeros((*moved.shape[1:-1], dim), jnp.int32)
+    acc, _ = jax.lax.scan(step, init, moved)
+    return acc
+
+
+def threshold_pack(counts: jax.Array, thr) -> jax.Array:
+    """Thinning: counts (..., D) -> packed (..., D//32) of [counts >= thr]."""
+    return pack_bits((counts >= thr).astype(jnp.uint8))
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def majority_pack(counts: jax.Array, n: int | jax.Array, dim: int) -> jax.Array:
+    """Dense-HDC majority rule: bit = [count > n/2] (ties broken low)."""
+    del dim
+    return pack_bits((counts * 2 > n).astype(jnp.uint8))
+
+
+def np_pack_bits(bits: np.ndarray) -> np.ndarray:
+    """NumPy mirror of pack_bits for test fixtures."""
+    d = bits.shape[-1]
+    w = d // WORD
+    b = bits.reshape(*bits.shape[:-1], w, WORD).astype(np.uint32)
+    return (b << np.arange(WORD, dtype=np.uint32)).sum(-1).astype(np.uint32)

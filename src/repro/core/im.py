@@ -1,0 +1,73 @@
+"""Item memory (IM) and compressed item memory (CompIM).
+
+The IM maps each channel's LBP code to a sparse segmented HV.  The paper keeps
+one LUT per channel (all 64 channels look up in parallel each cycle).
+
+* baseline IM   : LUT of packed 1024-bit HVs  -> (channels, codes, D//32) uint32
+* CompIM        : LUT of segment positions    -> (channels, codes, S) uint8
+                  (8 segments x 7 bits = 56 bits per entry vs 1024)
+
+The electrode (channel-identity) HVs are a second design-time random codebook,
+stored position-domain for the CompIM datapath and packed for the baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+@dataclass(frozen=True)
+class IMParams:
+    """Design-time random codebooks for the sparse HDC classifier."""
+    item_pos: jax.Array       # (channels, codes, S) uint8 — CompIM contents
+    elec_pos: jax.Array       # (channels, S) uint8 — electrode HV positions
+    dim: int
+    segments: int
+
+    @property
+    def seg_len(self) -> int:
+        return self.dim // self.segments
+
+    @property
+    def item_packed(self) -> jax.Array:
+        """(channels, codes, W) — the baseline (uncompressed) IM contents."""
+        return hv.positions_to_packed(self.item_pos, self.dim, self.segments)
+
+    @property
+    def elec_packed(self) -> jax.Array:
+        return hv.positions_to_packed(self.elec_pos, self.dim, self.segments)
+
+
+jax.tree_util.register_dataclass(
+    IMParams, data_fields=["item_pos", "elec_pos"], meta_fields=["dim", "segments"])
+
+
+def make_im(key: jax.Array, *, channels: int, codes: int, dim: int,
+            segments: int) -> IMParams:
+    k1, k2 = jax.random.split(key)
+    seg_len = dim // segments
+    return IMParams(
+        item_pos=hv.random_sparse_positions(k1, (channels, codes), segments, seg_len),
+        elec_pos=hv.random_sparse_positions(k2, (channels,), segments, seg_len),
+        dim=dim,
+        segments=segments,
+    )
+
+
+def im_lookup_packed(im: IMParams, codes: jax.Array) -> jax.Array:
+    """Baseline IM: (..., channels) codes -> (..., channels, W) packed HVs."""
+    table = im.item_packed  # (C, codes, W)
+    ch = jnp.arange(table.shape[0])
+    return table[ch, codes.astype(jnp.int32)]
+
+
+def im_lookup_positions(im: IMParams, codes: jax.Array) -> jax.Array:
+    """CompIM: (..., channels) codes -> (..., channels, S) uint8 positions."""
+    ch = jnp.arange(im.item_pos.shape[0])
+    return im.item_pos[ch, codes.astype(jnp.int32)]

@@ -1,0 +1,121 @@
+"""LM data: ShapeDtypeStruct input specs (dry-run) + synthetic batches.
+
+The four assigned input shapes map to step kinds:
+
+  train_4k     seq 4,096   gb 256   -> train_step
+  prefill_32k  seq 32,768  gb 32    -> prefill
+  decode_32k   seq 32,768  gb 128   -> decode_step (cache = seq)
+  long_500k    seq 524,288 gb 1     -> decode_step (cache = seq; SSM/hybrid only)
+
+Modality conventions (per the assignment the frontends are stubs fed with
+precomputed embeddings):
+
+  vlm    `media` (B, M, d_model) patch embeddings; text length = seq - M so
+         the backbone sees exactly `seq` positions.
+  audio  `frames` (B, seq, d_model) to the encoder; decoder text length =
+         seq // 8 for train/prefill (ASR-ish ratio, see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models import serve as serve_mod
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def text_len(cfg: ArchConfig, seq: int, kind: str) -> int:
+    if cfg.family == "vlm":
+        return seq - cfg.num_media_tokens
+    if cfg.family in ("encdec", "audio") and kind != "decode":
+        return max(seq // 8, 16)
+    return seq
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, seq = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    tl = text_len(cfg, seq, shape.kind)
+    tok = jnp.int32
+    emb = jnp.float32
+    if shape.kind == "train":
+        spec = {"tokens": SDS((b, tl), tok), "labels": SDS((b, tl), tok)}
+        if cfg.family == "vlm":
+            spec["media"] = SDS((b, cfg.num_media_tokens, d), emb)
+        if cfg.family in ("encdec", "audio"):
+            spec["frames"] = SDS((b, seq, d), emb)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": SDS((b, tl), tok)}
+        if cfg.family == "vlm":
+            spec["media"] = SDS((b, cfg.num_media_tokens, d), emb)
+        if cfg.family in ("encdec", "audio"):
+            spec["frames"] = SDS((b, seq, d), emb)
+        return spec
+    # decode: one token + caches of length seq.  eval_shape — NEVER allocate
+    # the caches here (a 32k-ctx command-r cache is ~0.5 TB on the host)
+    dtype = jnp.dtype(cfg.dtype)
+    enc_len = max(shape.seq_len // 8, 16)
+    cache_specs = jax.eval_shape(
+        lambda: serve_mod.init_caches(cfg, b, seq, dtype, enc_len=enc_len))
+    return {"tokens": SDS((b, 1), tok), "caches": cache_specs,
+            "pos": SDS((), jnp.int32)}
+
+
+def synth_batch(key: jax.Array, cfg: ArchConfig, shape: ShapeSpec,
+                batch_override: int | None = None) -> dict:
+    """Concrete random batch (smoke tests, examples)."""
+    b = batch_override or shape.global_batch
+    seq = shape.seq_len
+    tl = text_len(cfg, seq, shape.kind)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = jax.random.randint(k1, (b, tl), 0, cfg.vocab, dtype=jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.random.randint(k2, (b, tl), 0, cfg.vocab, dtype=jnp.int32)
+        if cfg.family == "vlm":
+            out["media"] = jax.random.normal(k3, (b, cfg.num_media_tokens, cfg.d_model))
+        if cfg.family in ("encdec", "audio"):
+            out["frames"] = jax.random.normal(k3, (b, seq, cfg.d_model))
+        return out
+    out["tokens"] = jax.random.randint(k1, (b, 1), 0, cfg.vocab, dtype=jnp.int32)
+    out["pos"] = jnp.asarray(seq // 2, jnp.int32)
+    out["caches"] = serve_mod.init_caches(cfg, b, seq, jnp.dtype(cfg.dtype),
+                                          enc_len=max(seq // 8, 16))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# deterministic host-side training pipeline (stateless-resumable)
+# ---------------------------------------------------------------------------
+
+def batch_for_step(cfg: ArchConfig, shape: ShapeSpec, step: int,
+                   batch_override: int | None = None) -> dict:
+    """Pure function of (config, step) — restart at step k reproduces the
+    exact stream, which is what makes checkpoint-resume bitwise reproducible
+    without persisting pipeline state."""
+    return synth_batch(jax.random.PRNGKey(step), cfg, shape, batch_override)

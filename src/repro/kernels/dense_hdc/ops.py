@@ -1,0 +1,31 @@
+"""Jit'd public entry point for the fused dense-HDC encoder."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dense import DenseHDCConfig, DenseIMParams
+from repro.kernels.common import use_interpret
+from repro.kernels.dense_hdc.kernel import dense_encoder_pallas
+from repro.kernels.dense_hdc.ref import dense_encoder_ref
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def dense_encode_frames_fused(params: DenseIMParams, codes: jax.Array,
+                              cfg: DenseHDCConfig,
+                              use_kernel: bool = True) -> jax.Array:
+    """Drop-in fused replacement for core.dense.encode_frames.
+    codes: (B, T, C) uint8 -> (B, F, W) uint32."""
+    b, t, c = codes.shape
+    frames = t // cfg.window
+    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    ch = jnp.arange(cfg.channels)
+    item = params.item_packed[ch, codes.astype(jnp.int32)]   # (B,F,win,C,W)
+    if use_kernel:
+        return dense_encoder_pallas(item, params.elec_packed, window=cfg.window,
+                                    dim=cfg.dim, interpret=use_interpret())
+    return dense_encoder_ref(item, params.elec_packed, window=cfg.window,
+                             dim=cfg.dim)

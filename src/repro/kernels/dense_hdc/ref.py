@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused dense-HDC encoder kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+def dense_encoder_ref(item_hvs: jax.Array, elec: jax.Array, *, window: int,
+                      dim: int) -> jax.Array:
+    """(B, F, window, C, W) x (C, W) -> (B, F, W) via the unfused core path."""
+    bound = jnp.bitwise_xor(item_hvs, elec)
+    channels = item_hvs.shape[-2]
+    scounts = hv.unpacked_counts(bound, axis=-2, dim=dim)      # (B,F,win,D)
+    spat = hv.pack_bits((scounts * 2 > channels).astype(jnp.uint8))
+    tcounts = hv.unpacked_counts(spat, axis=-2, dim=dim)       # (B,F,D)
+    return hv.pack_bits((tcounts * 2 > window).astype(jnp.uint8))

@@ -1,0 +1,61 @@
+"""Associative-memory similarity-search kernel.
+
+Scores a batch of packed query HVs against the class HVs:
+
+  * mode="overlap" (sparse HDC):  score = popcount(q AND c)
+  * mode="hamming" (dense  HDC):  score = D - popcount(q XOR c)
+
+This is a binary "matmul" (B, W) x (C, W) -> (B, C) executed on the VPU with
+population_count; queries stream through VMEM in blocks of ``block_b`` while
+the class HVs stay resident (a few KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _am_kernel(q_ref, c_ref, out_ref, *, mode: str, dim: int):
+    q = q_ref[...]                                 # (TB, W) uint32
+    cls = c_ref[...]                               # (C, W) uint32
+    if mode == "overlap":
+        combined = jnp.bitwise_and(q[:, None, :], cls[None, :, :])
+        score = jnp.sum(jax.lax.population_count(combined).astype(jnp.int32), axis=-1)
+    elif mode == "hamming":
+        combined = jnp.bitwise_xor(q[:, None, :], cls[None, :, :])
+        score = dim - jnp.sum(jax.lax.population_count(combined).astype(jnp.int32), axis=-1)
+    else:
+        raise ValueError(mode)
+    out_ref[...] = score
+
+
+def am_search_pallas(queries: jax.Array, classes: jax.Array, *, mode: str,
+                     dim: int, block_b: int = DEFAULT_BLOCK_B,
+                     interpret: bool = True) -> jax.Array:
+    """queries: (B, W) uint32; classes: (C, W) uint32 -> (B, C) int32."""
+    b, w = queries.shape
+    c, _ = classes.shape
+    block_b = min(block_b, b)
+    if b % block_b:  # pad batch to a block multiple
+        pad = block_b - b % block_b
+        queries = jnp.pad(queries, ((0, pad), (0, 0)))
+    bp = queries.shape[0]
+    kernel = functools.partial(_am_kernel, mode=mode, dim=dim)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+            pl.BlockSpec((c, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, c), jnp.int32),
+        interpret=interpret,
+    )(queries, classes)
+    return out[:b]

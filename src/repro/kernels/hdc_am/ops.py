@@ -1,0 +1,27 @@
+"""Jit'd public entry point for AM similarity search."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.hdc_am.kernel import am_search_pallas
+from repro.kernels.hdc_am.ref import am_search_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "dim", "use_kernel"))
+def am_search(queries: jax.Array, classes: jax.Array, *, mode: str = "overlap",
+              dim: int = 1024, use_kernel: bool = True) -> jax.Array:
+    """(B, W) x (C, W) -> (B, C) similarity scores.
+
+    Leading query dims beyond 2 are flattened and restored."""
+    lead = queries.shape[:-1]
+    q2 = queries.reshape(-1, queries.shape[-1])
+    if use_kernel:
+        out = am_search_pallas(q2, classes, mode=mode, dim=dim,
+                               interpret=use_interpret())
+    else:
+        out = am_search_ref(q2, classes, mode=mode, dim=dim)
+    return out.reshape(*lead, classes.shape[0])

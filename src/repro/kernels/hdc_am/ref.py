@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the AM similarity-search kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import am
+
+
+def am_search_ref(queries: jax.Array, classes: jax.Array, *, mode: str,
+                  dim: int) -> jax.Array:
+    if mode == "overlap":
+        return am.am_scores_sparse(queries, classes)
+    if mode == "hamming":
+        return am.am_scores_dense(queries, classes, dim)
+    raise ValueError(mode)

@@ -1,0 +1,84 @@
+"""Fused sparse-HDC encoder kernel (the paper's main datapath, CompIM domain).
+
+One grid step produces ONE time-frame HV for one (batch, frame) cell:
+
+    bound positions (window, C, S)  --bind-->  (pos + elec) mod L
+        --demux-->  per-cycle spatial one-hot  --OR/thin-->  (S, L) indicator
+        --temporal accumulate-->  (S, L) int32 counts
+        --threshold + pack-->  (D // 32,) uint32 frame HV
+
+Fusing the whole encoder keeps the per-cycle 1024-bit spatial HVs and the
+8-bit temporal counters in VMEM: HBM traffic is just 56-bit positions in and
+one packed HV out per frame (the TPU analogue of the CompIM energy win; see
+DESIGN.md §2).
+
+VMEM budget per grid step (defaults window=256, C=64, S=8, L=128):
+  positions block  256*64*8  B   = 128 KiB
+  chunk one-hot    32*64*8*128 B =   2 MiB (int8, transient)
+  counters         8*128*4   B   =   4 KiB
+comfortably under the ~16 MiB/core VMEM of TPU v5e.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 32  # cycles expanded to one-hot at a time (VMEM working-set control)
+
+
+def _encoder_kernel(pos_ref, elec_ref, out_ref, *, window: int, segments: int,
+                    seg_len: int, temporal_threshold: int,
+                    spatial_thinning: bool, spatial_threshold: int):
+    c = elec_ref.shape[0]
+    elec = elec_ref[...].astype(jnp.int32)                       # (C, S)
+    n_chunks = window // CHUNK
+
+    def chunk_body(k, counts):
+        p = pos_ref[0, 0, pl.dslice(k * CHUNK, CHUNK)]            # (CHUNK, C, S)
+        bound = (p.astype(jnp.int32) + elec[None]) % seg_len      # (CHUNK, C, S)
+        iota = jax.lax.broadcasted_iota(
+            jnp.int32, (CHUNK, c, segments, seg_len), 3)
+        onehot = (bound[..., None] == iota)                       # (CHUNK, C, S, L)
+        if spatial_thinning:
+            spat = jnp.sum(onehot.astype(jnp.int32), axis=1) >= spatial_threshold
+        else:
+            spat = jnp.any(onehot, axis=1)                        # (CHUNK, S, L)
+        return counts + jnp.sum(spat.astype(jnp.int32), axis=0)
+
+    counts = jax.lax.fori_loop(
+        0, n_chunks, chunk_body, jnp.zeros((segments, seg_len), jnp.int32))
+    bits = (counts >= temporal_threshold).reshape(segments * seg_len // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, 1)
+    words = jnp.sum(bits.astype(jnp.uint32) << shifts, axis=1, dtype=jnp.uint32)
+    out_ref[0, 0, :] = words
+
+
+def encoder_pallas(positions: jax.Array, elec: jax.Array, *, window: int,
+                   segments: int, seg_len: int, temporal_threshold: int,
+                   spatial_thinning: bool = False, spatial_threshold: int = 1,
+                   interpret: bool = True) -> jax.Array:
+    """positions: (B, F, window, C, S) uint8 bound-input item positions
+    elec: (C, S) uint8 electrode positions
+    returns: (B, F, D // 32) uint32 packed frame HVs."""
+    b, f, w, c, s = positions.shape
+    assert w == window and s == segments
+    dim = segments * seg_len
+    kernel = functools.partial(
+        _encoder_kernel, window=window, segments=segments, seg_len=seg_len,
+        temporal_threshold=temporal_threshold,
+        spatial_thinning=spatial_thinning, spatial_threshold=spatial_threshold)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, f),
+        in_specs=[
+            pl.BlockSpec((1, 1, window, c, s), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((c, s), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dim // 32), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, dim // 32), jnp.uint32),
+        interpret=interpret,
+    )(positions, elec)

@@ -1,0 +1,32 @@
+"""Jit'd public entry point for the fused sparse-HDC encoder."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.classifier import HDCConfig
+from repro.core.im import IMParams, im_lookup_positions
+from repro.kernels.common import use_interpret
+from repro.kernels.hdc_encoder.kernel import encoder_pallas
+from repro.kernels.hdc_encoder.ref import encoder_ref
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def encode_frames_fused(params: IMParams, codes: jax.Array, cfg: HDCConfig,
+                        use_kernel: bool = True) -> jax.Array:
+    """Drop-in fused replacement for core.classifier.encode_frames
+    (CompIM variants only).  codes: (B, T, C) uint8 -> (B, F, W) uint32."""
+    b, t, c = codes.shape
+    frames = t // cfg.window
+    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    pos = im_lookup_positions(params, codes)      # XLA gather: (B,F,win,C,S)
+    kw = dict(window=cfg.window, segments=cfg.segments, seg_len=cfg.seg_len,
+              temporal_threshold=cfg.temporal_threshold,
+              spatial_thinning=cfg.spatial_thinning,
+              spatial_threshold=cfg.spatial_threshold)
+    if use_kernel:
+        return encoder_pallas(pos, params.elec_pos, interpret=use_interpret(), **kw)
+    return encoder_ref(pos, params.elec_pos, **kw)

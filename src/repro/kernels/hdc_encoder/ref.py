@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused sparse-HDC encoder kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binding, bundling, hv
+
+
+def encoder_ref(positions: jax.Array, elec: jax.Array, *, window: int,
+                segments: int, seg_len: int, temporal_threshold: int,
+                spatial_thinning: bool = False,
+                spatial_threshold: int = 1) -> jax.Array:
+    """Mirrors kernel.encoder_pallas via the core (unfused) pipeline."""
+    dim = segments * seg_len
+    bound = binding.bind_positions(positions, elec, seg_len)   # (B,F,win,C,S)
+    if spatial_thinning:
+        spat = bundling.spatial_bundle_thinned_positions(
+            bound, dim, segments, spatial_threshold)
+    else:
+        spat = bundling.spatial_bundle_or_positions(bound, dim, segments)
+    return bundling.temporal_bundle(spat, dim, temporal_threshold)

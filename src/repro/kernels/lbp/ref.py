@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the LBP preprocessing kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lbp_ref(x: jax.Array, *, bits: int = 6) -> jax.Array:
+    """x: (B, T, C) -> (B, T - bits, C) uint8, mirroring data.ieeg.lbp_codes_np
+    (which operates channel-major; this is the time-major jnp twin)."""
+    d = (x[:, 1:] > x[:, :-1]).astype(jnp.uint32)
+    t_out = d.shape[1] - bits + 1
+    code = jnp.zeros((x.shape[0], t_out, x.shape[2]), jnp.uint32)
+    for i in range(bits):
+        code = code | (d[:, bits - 1 - i : bits - 1 - i + t_out] << i)
+    return code.astype(jnp.uint8)

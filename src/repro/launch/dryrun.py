@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on 512 placeholder host devices and extract the roofline terms.
+
+MUST be the first import in the process (XLA_FLAGS above precedes any jax
+import — jax locks the device count on first init).
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+  memory_analysis   (bytes per device: args / outputs / temps / peak)
+  cost_analysis     (per-device HLO flops & bytes accessed)
+  collectives       (per-op-kind byte totals parsed from the partitioned HLO)
+  roofline          (compute / memory / collective seconds + dominant term)
+
+Usage:
+  python -m repro.launch.dryrun                      # all cells, both meshes
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --hdc                # the paper's HDC system
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
+from repro.data import lm as lmdata
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_mod
+from repro.models import params as pmod
+from repro.models.config import param_count
+from repro.optim import adamw
+from repro.runtime import steps as steps_mod
+from repro.runtime.hlo_cost import analyze_hlo
+from repro.runtime.roofline import (collective_bytes_from_hlo, roofline_terms,
+                                    memory_analysis_dict)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def abstract_opt_state(spec, opt: adamw.OptConfig):
+    sdt = jnp.dtype(opt.state_dtype)
+    mv = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, sdt), spec,
+                      is_leaf=lambda s: isinstance(s, pmod.ParamSpec))
+    return {"m": mv, "v": mv, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh_kind: str,
+               overrides: dict | None = None):
+    import dataclasses
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = lmdata.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    opt = adamw.OptConfig(
+        state_dtype="bfloat16" if "398b" in arch_id else "float32")
+    dtype = jnp.dtype(cfg.dtype)
+
+    if shape.kind == "train":
+        specs = lmdata.input_specs(cfg, shape)
+        jitted, ctx, spec = steps_mod.jit_train_step(cfg, opt, mesh, specs)
+        params_abs = pmod.abstract(spec, dtype)
+        lowered = jitted.lower(params_abs, abstract_opt_state(spec, opt), specs)
+    elif shape.kind == "prefill":
+        specs = lmdata.input_specs(cfg, shape)
+        jitted, ctx, spec = steps_mod.jit_prefill(
+            cfg, mesh, specs, cache_seq=shape.seq_len)
+        params_abs = pmod.abstract(spec, dtype)
+        lowered = jitted.lower(params_abs, specs)
+    else:  # decode
+        specs = lmdata.input_specs(cfg, shape)
+        seq_sharded = shape.global_batch < 16   # long_500k: SP over the cache
+        jitted, ctx, spec = steps_mod.jit_decode_step(
+            cfg, mesh, specs, seq_sharded_kv=seq_sharded)
+        params_abs = pmod.abstract(spec, dtype)
+        lowered = jitted.lower(params_abs, specs["tokens"], specs["caches"],
+                               specs["pos"])
+    return cfg, shape, mesh, lowered
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(
+        out_dir, f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch_id)
+    shape = lmdata.SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    record = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+              "kind": shape.kind, "tag": tag, "overrides": overrides or {}}
+    if not ok:
+        record |= {"status": "skipped", "reason": reason}
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    t0 = time.time()
+    try:
+        cfg, shape, mesh, lowered = lower_cell(arch_id, shape_name, mesh_kind,
+                                               overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = memory_analysis_dict(compiled.memory_analysis())
+        print(f"[{arch_id} {shape_name} {mesh_kind}] memory_analysis:", mem)
+        xla_cost = {k: float(v) for k, v in (compiled.cost_analysis() or {}).items()
+                    if isinstance(v, (int, float))}
+        # XLA's cost_analysis counts while bodies once (useless under scan):
+        # use our call-graph analyzer with trip-count multiplication instead
+        hlo = analyze_hlo(compiled.as_text())
+        cost = {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]}
+        colls = hlo["collectives"]
+        print(f"[{arch_id} {shape_name} {mesh_kind}] hlo_cost: "
+              f"flops={hlo['flops']:.3e} bytes={hlo['bytes']:.3e} "
+              f"colls={ {k: f'{v:.2e}' for k, v in colls.items()} }")
+        n_total, n_active = param_count(cfg)
+        terms = roofline_terms(cost, colls, cfg, shape, mesh,
+                               n_total=n_total, n_active=n_active)
+        record |= {"status": "ok", "lower_s": round(t_lower, 1),
+                   "compile_s": round(t_compile, 1), "memory": mem,
+                   "cost": cost, "xla_cost_analysis": xla_cost,
+                   "collectives": colls, "roofline": terms,
+                   "params_total": n_total, "params_active": n_active}
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record |= {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        print(f"[{arch_id} {shape_name} {mesh_kind}] FAILED: {record['error']}")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def run_hdc(out_dir: str, mesh_kind: str = "single", force: bool = False):
+    """Dry-run the paper's sparse-HDC inference pipeline as a serving cell:
+    batched streams sharded over (pod,)data; AM classes replicated."""
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"hdc-ieeg__serve__{mesh_kind}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.classifier import HDCConfig
+    from repro.core import classifier as clf
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = HDCConfig()
+    dp = ("pod", "data") if mesh_kind == "multi" else ("data",)
+    batch, t = 8192, 2048     # 8192 concurrent streams, 8 frames each
+    specs = {
+        "item_pos": jax.ShapeDtypeStruct((cfg.channels, 64, cfg.segments), jnp.uint8),
+        "elec_pos": jax.ShapeDtypeStruct((cfg.channels, cfg.segments), jnp.uint8),
+        "codes": jax.ShapeDtypeStruct((batch, t, cfg.channels), jnp.uint8),
+        "classes": jax.ShapeDtypeStruct((2, cfg.words), jnp.uint32),
+    }
+    from repro.core.im import IMParams
+    from repro.core import am
+
+    def serve(item_pos, elec_pos, codes, classes):
+        params = IMParams(item_pos=item_pos, elec_pos=elec_pos,
+                          dim=cfg.dim, segments=cfg.segments)
+        frames = clf.encode_frames(params, codes, cfg)
+        scores = am.am_scores_sparse(frames, classes)
+        return am.am_predict(scores)
+
+    shard = NamedSharding(mesh, P(dp))
+    rep = NamedSharding(mesh, P())
+    jitted = jax.jit(serve, in_shardings=(rep, rep, shard, rep),
+                     out_shardings=shard)
+    record = {"arch": "hdc-ieeg", "shape": "serve", "mesh": mesh_kind,
+              "kind": "serve"}
+    t0 = time.time()
+    try:
+        lowered = jitted.lower(specs["item_pos"], specs["elec_pos"],
+                               specs["codes"], specs["classes"])
+        compiled = lowered.compile()
+        mem = memory_analysis_dict(compiled.memory_analysis())
+        hlo = analyze_hlo(compiled.as_text())
+        cost = {"flops": hlo["flops"], "bytes accessed": hlo["bytes"]}
+        colls = hlo["collectives"]
+        preds = batch * (t // cfg.window)
+        record |= {"status": "ok", "compile_s": round(time.time() - t0, 1),
+                   "memory": mem, "cost": cost, "collectives": colls,
+                   "predictions_per_call": preds}
+        print(f"[hdc {mesh_kind}] mem={mem} flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+    except Exception as e:  # noqa: BLE001
+        record |= {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        print(f"[hdc {mesh_kind}] FAILED: {record['error']}")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(lmdata.SHAPES) + [None])
+    ap.add_argument("--mesh", default=None, choices=["single", "multi", None])
+    ap.add_argument("--hdc", action="store_true")
+    ap.add_argument("--out", default=ART_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix for overrides")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. moe_dispatch=local_index")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    if args.hdc:
+        for mk in meshes:
+            run_hdc(args.out, mk, force=args.force)
+        return
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(lmdata.SHAPES)
+    n_ok = n_skip = n_err = 0
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, mk, args.out, force=args.force,
+                               overrides=overrides, tag=args.tag)
+                status = rec.get("status")
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                print(f"== {a} {s} {mk}: {status}")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

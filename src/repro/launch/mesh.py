@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+
+Production topology (TPU v5e pods):
+  single-pod  (data=16, model=16)            = 256 chips
+  multi-pod   (pod=2, data=16, model=16)     = 512 chips
+The `pod` axis is the slow (DCI) axis: only data-parallel gradient
+reduction crosses it (optionally int8-compressed, optim/compress.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic restarts on smaller fleets."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_device_count_or_die(n: int):
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but jax sees {have}; the dry-run must "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"BEFORE importing jax (see launch/dryrun.py)")

@@ -1,0 +1,73 @@
+"""Common transformer layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones")
+
+
+def mlp_spec(d: int, ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d, ff), ("fsdp", "tp")),
+        "w_up": ParamSpec((d, ff), ("fsdp", "tp")),
+        "w_down": ParamSpec((ff, d), ("tp", "fsdp")),
+    }
+
+
+def embed_spec(vocab: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab, d), ("tp", "fsdp"), init="embed")
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU MLP; TP: gate/up column-sharded, down row-sharded."""
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(gate) * up, params["w_down"])
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, L, H, hd); positions: (L,) or (B, L)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., L, hd/2)
+    if angles.ndim == 2:                                 # (L, hd/2) -> broadcast B
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]                  # (B, L, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, *, tied: bool) -> jax.Array:
+    """Logits; tied => table is (V, d), else head is (d, V)."""
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)

@@ -1,0 +1,179 @@
+"""Mamba-1 selective SSM layer (falcon-mamba-7b, jamba hybrid).
+
+Structure (Gu & Dao 2023): in_proj -> (x, z); causal depthwise conv (k=4);
+SiLU; data-dependent (dt, B, C); selective state-space scan over time with
+diagonal A; gate by SiLU(z); out_proj.
+
+Training/prefill uses an **associative scan** over the time axis (the
+recurrence h_t = a_t * h_{t-1} + b_t is a linear first-order recurrence, so
+``jax.lax.associative_scan`` gives O(L log L) work with O(log L) depth —
+the TPU-native counterpart of the CUDA chunked-scan kernel; see DESIGN.md).
+Decode keeps the (B, d_inner, d_state) state and a (B, d_inner, k-1) conv
+tail and advances one step per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import constrain
+
+
+def mamba_spec(cfg: ArchConfig) -> dict:
+    d, di, st, dtr, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.dt_rank, cfg.ssm_conv)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("fsdp", "tp")),
+        "conv_w": ParamSpec((k, di), (None, "tp")),
+        "conv_b": ParamSpec((di,), ("tp",), init="zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * st), ("tp", None)),
+        "dt_proj_w": ParamSpec((dtr, di), (None, "tp")),
+        "dt_proj_b": ParamSpec((di,), ("tp",), init="ones"),
+        "a_log": ParamSpec((di, st), ("tp", None), init="ones"),
+        "d_skip": ParamSpec((di,), ("tp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("tp", "fsdp")),
+    }
+
+
+def _ssm_inputs(params, xc, cfg: ArchConfig, mask=None):
+    """xc: (B, L, di) post-conv activations -> dA (B,L,di,st), dBx, C.
+
+    mask: optional (L,) validity; masked steps get dt=0 => da=1, dbx=0,
+    i.e. the recurrence passes the state through unchanged (used so padded
+    prefill steps cannot contaminate the final decode state)."""
+    st, dtr = cfg.ssm_state, cfg.dt_rank
+    proj = jnp.einsum("bld,de->ble", xc, params["x_proj"])
+    dt, b, c = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("blr,rd->bld", dt, params["dt_proj_w"])
+                         + params["dt_proj_b"])                    # (B,L,di)
+    if mask is not None:
+        dt = dt * mask[None, :, None].astype(dt.dtype)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))              # (di, st)
+    da = jnp.exp(dt[..., None].astype(jnp.float32) * a)            # (B,L,di,st)
+    dbx = (dt[..., None] * b[..., None, :]).astype(jnp.float32) * \
+        xc[..., None].astype(jnp.float32)                          # (B,L,di,st)
+    return da, dbx, c.astype(jnp.float32)
+
+
+def _conv_train(params, x: jax.Array, k: int) -> jax.Array:
+    """Causal depthwise conv over time: x (B, L, di)."""
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * params["conv_w"][i] for i in range(k))
+    return out + params["conv_b"]
+
+
+SSM_CHUNK = 256  # time chunk: bounds the live (B, Q, di, st) state expansion
+
+
+def _combine(left, right):
+    """Associative combinator of the linear recurrence h' = a*h + b."""
+    a_l, b_l = left
+    a_r, b_r = right
+    return a_l * a_r, b_l * a_r + b_r
+
+
+def mamba_train(params: dict, x: jax.Array, cfg: ArchConfig, ctx) -> jax.Array:
+    """Full-sequence selective scan. x: (B, L, d) -> (B, L, d).
+
+    The (B, L, di, st) expanded state NEVER materializes: time is split into
+    SSM_CHUNK blocks; within a block the recurrence is an associative scan
+    (O(log Q) depth on the VPU), across blocks a sequential lax.scan carries
+    the (B, di, st) boundary state — the TPU equivalent of Mamba's chunked
+    CUDA kernel (recompute-free because per-chunk inputs are re-derived from
+    the small (B, Q, di) conv activations inside the scan body).
+    """
+    b, l, _ = x.shape
+    xi = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xr, z = jnp.split(xi, 2, axis=-1)                              # (B,L,di)
+    xr = constrain(xr, ("batch", None, "tp"), ctx)
+    xc = jax.nn.silu(_conv_train(params, xr, cfg.ssm_conv))
+
+    q = min(cfg.ssm_chunk or SSM_CHUNK, l)
+    n_chunks = -(-l // q)
+    pad = n_chunks * q - l
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    xcc = xc.reshape(b, n_chunks, q, cfg.d_inner).transpose(1, 0, 2, 3)
+
+    def chunk_step(h0, xc_chunk):                                  # (B,Q,di)
+        da, dbx, c = _ssm_inputs(params, xc_chunk, cfg)            # (B,Q,di,st)
+        cum_a, s = jax.lax.associative_scan(_combine, (da, dbx), axis=1)
+        h = cum_a * h0[:, None] + s                                # seed carry
+        y = jnp.einsum("blds,bls->bld", h, c)                      # (B,Q,di)
+        return h[:, -1], y
+
+    if cfg.ssm_checkpoint_chunks:
+        chunk_step = jax.checkpoint(chunk_step)
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xcc)                      # (K,B,Q,di)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * q, cfg.d_inner)[:, :l]
+    y = y + xc[:, :l].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+def mamba_prefill(params: dict, x: jax.Array, cfg: ArchConfig, ctx
+                  ) -> tuple[jax.Array, dict]:
+    """Full-sequence scan that also returns the decode state: the final
+    (B, di, st) SSM state and the last k-1 pre-conv activations."""
+    b, l, _ = x.shape
+    xi = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xr, z = jnp.split(xi, 2, axis=-1)
+    xr = constrain(xr, ("batch", None, "tp"), ctx)
+    xc = jax.nn.silu(_conv_train(params, xr, cfg.ssm_conv))
+
+    q = min(SSM_CHUNK, l)
+    n_chunks = -(-l // q)
+    pad = n_chunks * q - l
+    xcp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0))) if pad else xc
+    xcc = xcp.reshape(b, n_chunks, q, cfg.d_inner).transpose(1, 0, 2, 3)
+    # padded steps get dt=0 (state pass-through) so h_last == h at t = l-1
+    valid = (jnp.arange(n_chunks * q) < l).astype(jnp.float32)
+    masks = valid.reshape(n_chunks, q)
+
+    def chunk_step(h0, inp):
+        xc_chunk, m = inp
+        da, dbx, c = _ssm_inputs(params, xc_chunk, cfg, mask=m)
+        cum_a, s = jax.lax.associative_scan(_combine, (da, dbx), axis=1)
+        h = cum_a * h0[:, None] + s
+        y = jnp.einsum("blds,bls->bld", h, c)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xcc, masks))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * q, cfg.d_inner)[:, :l]
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    k = cfg.ssm_conv
+    conv_tail = jax.lax.dynamic_slice_in_dim(xr, l - (k - 1), k - 1, axis=1)
+    state = {"ssm": h_last, "conv": conv_tail}
+    return out, state
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ArchConfig,
+                 ctx) -> tuple[jax.Array, dict]:
+    """One token step. x: (B, 1, d); state: {"ssm", "conv"}."""
+    xi = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xr, z = jnp.split(xi, 2, axis=-1)                              # (B,1,di)
+    window = jnp.concatenate([state["conv"], xr], axis=1)          # (B,k,di)
+    xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                                  # (B,1,di)
+    da, dbx, c = _ssm_inputs(params, xc, cfg)
+    h = state["ssm"] * da[:, 0] + dbx[:, 0]                        # (B,di,st)
+    y = jnp.einsum("bds,bs->bd", h, c[:, 0])[:, None]              # (B,1,di)
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    new_state = {"ssm": h, "conv": window[:, 1:]}
+    return out, new_state

@@ -1,0 +1,287 @@
+"""Model assembly for the architecture zoo.
+
+Families
+--------
+dense   pre-norm GQA transformer (qwen3*, llama3.2-3b, command-r-35b)
+moe     dense attention + MoE FFN (deepseek-moe-16b, moonshot-v1-16b-a3b);
+        `first_k_dense` leading layers keep a dense FFN
+ssm     attention-free Mamba-1 stack (falcon-mamba-7b)
+hybrid  Jamba period blocks: per `attn_period` layers 1 attention + rest
+        Mamba; FFN alternates MLP / MoE (moe_period=2)
+encdec  bidirectional encoder + causal decoder with cross attention
+        (seamless-m4t-medium; audio frontend stubbed)
+vlm     dense decoder consuming [media embeddings ; text embeddings]
+        (internvl2-2b; ViT frontend stubbed)
+
+All stacks scan over stacked layer parameters (HLO size / compile time O(1)
+in depth) with optional per-layer remat.  Caches thread through the same
+scans, so decode is a single fused while-free step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (embed, embed_spec, mlp, mlp_spec, rmsnorm,
+                                 rmsnorm_spec, unembed)
+from repro.models.params import ParamSpec, stack_layers
+from repro.runtime.sharding import ShardCtx, constrain
+
+XENT_CHUNK = 512
+
+
+# ===========================================================================
+# parameter specs
+# ===========================================================================
+
+def _dense_layer_spec(cfg: ArchConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "attn": attn.attention_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model), "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def _moe_layer_spec(cfg: ArchConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "attn": attn.attention_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model), "moe": moe_mod.moe_spec(cfg)}
+
+
+def _mamba_layer_spec(cfg: ArchConfig) -> dict:
+    return {"ln": rmsnorm_spec(cfg.d_model), "mamba": mb.mamba_spec(cfg)}
+
+
+def _hybrid_block_spec(cfg: ArchConfig) -> dict:
+    """One Jamba period block: sublayer 0 = attention, 1..p-1 = mamba;
+    FFN alternates MLP (even sublayers) / MoE (odd sublayers)."""
+    p = cfg.attn_period
+    return {
+        "attn": {"ln": rmsnorm_spec(cfg.d_model), "attn": attn.attention_spec(cfg)},
+        "mamba": stack_layers(p - 1, _mamba_layer_spec(cfg)),
+        "mlp": stack_layers(p // 2, {"ln": rmsnorm_spec(cfg.d_model),
+                                     "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}),
+        "moe": stack_layers(p // 2, {"ln": rmsnorm_spec(cfg.d_model),
+                                     "moe": moe_mod.moe_spec(cfg)}),
+    }
+
+
+def _encdec_layer_specs(cfg: ArchConfig) -> tuple[dict, dict]:
+    enc = _dense_layer_spec(cfg)
+    dec = {"ln1": rmsnorm_spec(cfg.d_model), "attn": attn.attention_spec(cfg),
+           "ln_x": rmsnorm_spec(cfg.d_model),
+           "cross": attn.attention_spec(cfg, cross=True),
+           "ln2": rmsnorm_spec(cfg.d_model), "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+    return enc, dec
+
+
+def model_spec(cfg: ArchConfig) -> dict:
+    spec: dict[str, Any] = {
+        "embed": embed_spec(cfg.vocab, cfg.d_model),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "tp"))
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        spec["layers"] = stack_layers(cfg.n_layers, _dense_layer_spec(cfg))
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            spec["dense_layers"] = stack_layers(cfg.first_k_dense,
+                                                _dense_layer_spec(cfg))
+        spec["layers"] = stack_layers(cfg.n_layers - cfg.first_k_dense,
+                                      _moe_layer_spec(cfg))
+    elif fam == "ssm":
+        spec["layers"] = stack_layers(cfg.n_layers, _mamba_layer_spec(cfg))
+    elif fam == "hybrid":
+        assert cfg.n_layers % cfg.attn_period == 0
+        spec["blocks"] = stack_layers(cfg.n_layers // cfg.attn_period,
+                                      _hybrid_block_spec(cfg))
+    elif fam in ("encdec", "audio"):
+        enc, dec = _encdec_layer_specs(cfg)
+        spec["enc_layers"] = stack_layers(cfg.enc_layers, enc)
+        spec["enc_norm"] = rmsnorm_spec(cfg.d_model)
+        spec["layers"] = stack_layers(cfg.n_layers, dec)
+    else:
+        raise ValueError(fam)
+    return spec
+
+
+# ===========================================================================
+# layer applications (one layer, unstacked params)
+# ===========================================================================
+
+def _apply_dense_layer(lp, x, cfg, ctx):
+    x = x + attn.attention_train(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, ctx)
+    x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return constrain(x, ("batch", None, None), ctx)
+
+
+def _apply_moe_layer(lp, x, cfg, ctx):
+    x = x + attn.attention_train(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, ctx)
+    out, aux = moe_mod.moe_layer(lp["moe"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+    return constrain(x + out, ("batch", None, None), ctx), aux
+
+
+def _apply_mamba_layer(lp, x, cfg, ctx):
+    x = x + mb.mamba_train(lp["mamba"], rmsnorm(x, lp["ln"], cfg.norm_eps), cfg, ctx)
+    return constrain(x, ("batch", None, None), ctx)
+
+
+def _apply_hybrid_block(bp, x, cfg, ctx):
+    """Unrolled period block (train path)."""
+    p = cfg.attn_period
+    aux_total = jnp.float32(0.0)
+    mlp_i = moe_i = 0
+    for j in range(p):
+        if j == 0:
+            sub = bp["attn"]
+            x = x + attn.attention_train(sub["attn"], rmsnorm(x, sub["ln"], cfg.norm_eps), cfg, ctx)
+        else:
+            sub = jax.tree.map(lambda a: a[j - 1], bp["mamba"])
+            x = x + mb.mamba_train(sub["mamba"], rmsnorm(x, sub["ln"], cfg.norm_eps), cfg, ctx)
+        if j % 2 == 1:
+            sub = jax.tree.map(lambda a: a[moe_i], bp["moe"])
+            out, aux = moe_mod.moe_layer(sub["moe"], rmsnorm(x, sub["ln"], cfg.norm_eps), cfg, ctx)
+            x = x + out
+            aux_total = aux_total + aux
+            moe_i += 1
+        else:
+            sub = jax.tree.map(lambda a: a[mlp_i], bp["mlp"])
+            x = x + mlp(sub["mlp"], rmsnorm(x, sub["ln"], cfg.norm_eps))
+            mlp_i += 1
+        x = constrain(x, ("batch", None, None), ctx)
+    return x, aux_total
+
+
+def _apply_dec_layer(lp, x, enc_out, cfg, ctx):
+    x = x + attn.attention_train(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, ctx)
+    x = x + attn.attention_cross(lp["cross"], rmsnorm(x, lp["ln_x"], cfg.norm_eps), enc_out, cfg, ctx)
+    x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return constrain(x, ("batch", None, None), ctx)
+
+
+# ===========================================================================
+# stacked-scan runners
+# ===========================================================================
+
+def _scan_stack(layer_fn, stacked, x, cfg, *, with_aux: bool):
+    """Scan `layer_fn` over stacked layer params.  layer_fn(lp, x) -> x or
+    (x, aux).  Remat per layer when cfg.remat."""
+    def step(carry, lp):
+        if with_aux:
+            x, aux = carry
+            x, a = layer_fn(lp, x)
+            return (x, aux + a), None
+        return layer_fn(lp, carry), None
+
+    if cfg.remat:
+        step = jax.checkpoint(step)
+    init = (x, jnp.float32(0.0)) if with_aux else x
+    out, _ = jax.lax.scan(step, init, stacked)
+    return out if not with_aux else out
+
+
+# ===========================================================================
+# backbone forwards (tokens/embeddings -> final hidden states)
+# ===========================================================================
+
+def backbone_train(params: dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx,
+                   enc_out: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, L, d) embedded inputs -> (hidden (B, L, d), aux_loss)."""
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+    if fam in ("dense", "vlm"):
+        x = _scan_stack(lambda lp, h: _apply_dense_layer(lp, h, cfg, ctx),
+                        params["layers"], x, cfg, with_aux=False)
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            x = _scan_stack(lambda lp, h: _apply_dense_layer(lp, h, cfg, ctx),
+                            params["dense_layers"], x, cfg, with_aux=False)
+        x, aux = _scan_stack(lambda lp, h: _apply_moe_layer(lp, h, cfg, ctx),
+                             params["layers"], x, cfg, with_aux=True)
+    elif fam == "ssm":
+        x = _scan_stack(lambda lp, h: _apply_mamba_layer(lp, h, cfg, ctx),
+                        params["layers"], x, cfg, with_aux=False)
+    elif fam == "hybrid":
+        x, aux = _scan_stack(lambda bp, h: _apply_hybrid_block(bp, h, cfg, ctx),
+                             params["blocks"], x, cfg, with_aux=True)
+    elif fam in ("encdec", "audio"):
+        assert enc_out is not None
+        x = _scan_stack(lambda lp, h: _apply_dec_layer(lp, h, enc_out, cfg, ctx),
+                        params["layers"], x, cfg, with_aux=False)
+    else:
+        raise ValueError(fam)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def encoder_forward(params: dict, frames: jax.Array, cfg: ArchConfig,
+                    ctx: ShardCtx) -> jax.Array:
+    """Bidirectional encoder over (stub) frame embeddings (B, Le, d)."""
+    def enc_layer(lp, h):
+        h = h + attn.attention_train(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                                     cfg, ctx, causal=False)
+        h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+        return constrain(h, ("batch", None, None), ctx)
+    h = _scan_stack(enc_layer, params["enc_layers"], frames, cfg, with_aux=False)
+    return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+# ===========================================================================
+# losses
+# ===========================================================================
+
+def chunked_xent(params: dict, hidden: jax.Array, labels: jax.Array,
+                 cfg: ArchConfig, ctx: ShardCtx) -> jax.Array:
+    """Causal-LM cross entropy without materializing (B, L, V) logits:
+    scan over sequence chunks, remat the chunk projection."""
+    b, l, d = hidden.shape
+    chunk = min(XENT_CHUNK, l)
+    n = l // chunk
+    hs = hidden[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+    def step(acc, inp):
+        hc, lc = inp
+        logits = unembed(table, hc, tied=cfg.tie_embeddings).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "tp"), ctx)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.float32(0.0), (hs, ls))
+    return total / (b * n * chunk)
+
+
+# ===========================================================================
+# public entry points
+# ===========================================================================
+
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig, ctx: ShardCtx) -> jax.Array:
+    """Tokens (+ optional stubbed media embeddings) -> (B, L, d)."""
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "media" in batch:
+        x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+    return constrain(x, ("batch", None, None), ctx)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig, ctx: ShardCtx
+            ) -> tuple[jax.Array, dict]:
+    """batch: tokens (B, L), labels (B, L) [, media (B, M, d) | frames]."""
+    enc_out = None
+    if cfg.family in ("encdec", "audio"):
+        enc_out = encoder_forward(params, batch["frames"].astype(
+            jnp.dtype(cfg.dtype)), cfg, ctx)
+    x = embed_inputs(params, batch, cfg, ctx)
+    hidden, aux = backbone_train(params, x, cfg, ctx, enc_out=enc_out)
+    if cfg.family == "vlm" and "media" in batch:
+        hidden = hidden[:, batch["media"].shape[1]:]    # loss on text positions
+    xent = chunked_xent(params, hidden, batch["labels"], cfg, ctx)
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}

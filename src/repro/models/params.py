@@ -1,0 +1,72 @@
+"""Parameter specification system: declare each tensor once (shape + logical
+axes + init), derive everything else (random init for smoke tests, abstract
+ShapeDtypeStructs for the dry-run, NamedShardings for pjit) from the spec.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple            # logical axis per dim (see runtime/sharding.py)
+    init: str = "normal"   # normal | zeros | ones | embed | small
+    fan_in_dims: tuple[int, ...] = ()   # dims whose product is fan-in (normal)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_leaves(tree: Any):
+    return jax.tree.leaves(tree, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def abstract(tree: Any, dtype) -> Any:
+    """ParamSpec tree -> ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        tree, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def initialize(key: jax.Array, tree: Any, dtype) -> Any:
+    """ParamSpec tree -> concrete random params (smoke tests / examples)."""
+    leaves = spec_leaves(tree)
+    keys = jax.random.split(key, len(leaves))
+    it = iter(range(len(leaves)))
+
+    def init_one(s: ParamSpec):
+        k = keys[next(it)]
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        if s.init == "embed":
+            return (jax.random.normal(k, s.shape) * 0.02).astype(dtype)
+        fan_in = (np.prod([s.shape[d] for d in s.fan_in_dims])
+                  if s.fan_in_dims else s.shape[0])
+        scale = 1.0 / math.sqrt(max(float(fan_in), 1.0))
+        if s.init == "small":
+            scale *= 0.1
+        return (jax.random.normal(k, s.shape) * scale).astype(dtype)
+
+    return jax.tree.map(init_one, tree, is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(np.prod(s.shape)) for s in spec_leaves(tree))
+
+
+def stack_layers(n: int, spec: Any) -> Any:
+    """Prepend a scan (layer) dim to every ParamSpec in `spec`."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.axes), s.init,
+                            tuple(d + 1 for d in s.fan_in_dims)),
+        spec, is_leaf=lambda s: isinstance(s, ParamSpec))

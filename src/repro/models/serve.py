@@ -1,0 +1,324 @@
+"""Serving paths: prefill (build caches) and single-token decode.
+
+Cache layouts (stacked over layers so decode scans them):
+
+  dense/vlm : {"k","v"}           (n_layers, B, S, KV, hd)
+  moe       : {"dense": {...}, "moe": {...}} per sub-stack
+  ssm       : {"ssm", "conv"}     (n_layers, B, di, st) / (n_layers, B, k-1, di)
+  hybrid    : per period-block: {"k","v"} (n_blocks, B, S, KV, hd) for the
+              attention sublayer + stacked mamba states (n_blocks, p-1, ...)
+  encdec    : {"k","v"} decoder self + {"ck","cv"} static cross caches
+
+``decode_*`` shapes lower decode_step (one token against a seq_len cache),
+``prefill_*`` lowers prefill.  Caches are sharded via logical axes
+("batch", "kv_seq", None, "kv_tp") — the ShardCtx decides whether batch-DP or
+sequence-parallel KV applies (see runtime/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import embed, mlp, rmsnorm, unembed
+from repro.models.model import encoder_forward
+from repro.runtime.sharding import ShardCtx, constrain
+
+
+# ===========================================================================
+# cache structure
+# ===========================================================================
+
+def _kv_struct(cfg: ArchConfig, n: int, batch: int, seq: int, dtype):
+    hd = cfg.resolved_head_dim
+    return jnp.zeros((n, batch, seq, cfg.n_kv_heads, hd), dtype)
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int, dtype,
+                enc_len: int = 0) -> Any:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"k": _kv_struct(cfg, cfg.n_layers, batch, seq, dtype),
+                "v": _kv_struct(cfg, cfg.n_layers, batch, seq, dtype)}
+    if fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        out = {"moe": {"k": _kv_struct(cfg, n_moe, batch, seq, dtype),
+                       "v": _kv_struct(cfg, n_moe, batch, seq, dtype)}}
+        if cfg.first_k_dense:
+            out["dense"] = {"k": _kv_struct(cfg, cfg.first_k_dense, batch, seq, dtype),
+                            "v": _kv_struct(cfg, cfg.first_k_dense, batch, seq, dtype)}
+        return out
+    if fam == "ssm":
+        n = cfg.n_layers
+        return {"ssm": jnp.zeros((n, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)}
+    if fam == "hybrid":
+        nb = cfg.n_layers // cfg.attn_period
+        p = cfg.attn_period
+        return {"k": _kv_struct(cfg, nb, batch, seq, dtype),
+                "v": _kv_struct(cfg, nb, batch, seq, dtype),
+                "ssm": jnp.zeros((nb, p - 1, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((nb, p - 1, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype)}
+    if fam in ("encdec", "audio"):
+        return {"k": _kv_struct(cfg, cfg.n_layers, batch, seq, dtype),
+                "v": _kv_struct(cfg, cfg.n_layers, batch, seq, dtype),
+                "ck": _kv_struct(cfg, cfg.n_layers, batch, enc_len, dtype),
+                "cv": _kv_struct(cfg, cfg.n_layers, batch, enc_len, dtype)}
+    raise ValueError(fam)
+
+
+def _pad_cache(k: jax.Array, v: jax.Array, seq: int, ctx: ShardCtx):
+    """Grow (B, L, KV, hd) prefill K/V to the full (B, seq, KV, hd) cache."""
+    pad = seq - k.shape[1]
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k = constrain(k, ("batch", "kv_seq", None, "kv_tp"), ctx)
+    v = constrain(v, ("batch", "kv_seq", None, "kv_tp"), ctx)
+    return k, v
+
+
+# ===========================================================================
+# per-layer decode applications
+# ===========================================================================
+
+def _dec_dense_layer(lp, x, kc, vc, pos, cfg, ctx):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    a, (kc, vc) = attn.attention_decode(lp["attn"], h, (kc, vc), pos, cfg, ctx)
+    x = x + a
+    x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x, kc, vc
+
+
+def _dec_moe_layer(lp, x, kc, vc, pos, cfg, ctx):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    a, (kc, vc) = attn.attention_decode(lp["attn"], h, (kc, vc), pos, cfg, ctx)
+    x = x + a
+    out, _ = moe_mod.moe_layer(lp["moe"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg, ctx)
+    return x + out, kc, vc
+
+
+def _dec_mamba_layer(lp, x, state, cfg, ctx):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    out, state = mb.mamba_decode(lp["mamba"], h, state, cfg, ctx)
+    return x + out, state
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, ctx: ShardCtx,
+            cache_seq: int) -> tuple[jax.Array, Any]:
+    """Run the full prompt, return (last-position logits (B, V), caches).
+
+    batch: tokens (B, L) [, media (B, M, d) | frames (B, Le, d)].
+    """
+    fam = cfg.family
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], batch["tokens"])
+    if fam == "vlm" and "media" in batch:
+        x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+    x = constrain(x, ("batch", None, None), ctx)
+    enc_out = None
+    if fam in ("encdec", "audio"):
+        enc_out = encoder_forward(params, batch["frames"].astype(dtype), cfg, ctx)
+
+    def prefill_dense_stack(stacked, x):
+        def step(h, lp):
+            a, (k, v) = attn.attention_prefill(lp["attn"],
+                                               rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, ctx)
+            h = h + a
+            if "mlp" in lp:
+                h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            else:
+                out, _ = moe_mod.moe_layer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg, ctx)
+                h = h + out
+            h = constrain(h, ("batch", None, None), ctx)
+            kp, vp = _pad_cache(k, v, cache_seq, ctx)
+            return h, (kp.astype(dtype), vp.astype(dtype))
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        return jax.lax.scan(step, x, stacked)
+
+    caches: Any
+    if fam in ("dense", "vlm"):
+        x, (ks, vs) = prefill_dense_stack(params["layers"], x)
+        caches = {"k": ks, "v": vs}
+    elif fam == "moe":
+        caches = {}
+        if cfg.first_k_dense:
+            x, (kd, vd) = prefill_dense_stack(params["dense_layers"], x)
+            caches["dense"] = {"k": kd, "v": vd}
+        x, (km, vm) = prefill_dense_stack(params["layers"], x)
+        caches["moe"] = {"k": km, "v": vm}
+    elif fam == "ssm":
+        def step(h, lp):
+            out, st = mb.mamba_prefill(lp["mamba"],
+                                       rmsnorm(h, lp["ln"], cfg.norm_eps), cfg, ctx)
+            return constrain(h + out, ("batch", None, None), ctx), st
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, sts = jax.lax.scan(step, x, params["layers"])
+        caches = {"ssm": sts["ssm"], "conv": sts["conv"].astype(dtype)}
+    elif fam == "hybrid":
+        p = cfg.attn_period
+
+        def block_step(h, bp):
+            sub = bp["attn"]
+            a, (k, v) = attn.attention_prefill(sub["attn"],
+                                               rmsnorm(h, sub["ln"], cfg.norm_eps), cfg, ctx)
+            h = h + a
+            ssm_states, conv_states = [], []
+            mlp_i = moe_i = 0
+            for j in range(p):
+                if j > 0:
+                    s = jax.tree.map(lambda a_: a_[j - 1], bp["mamba"])
+                    out, st = mb.mamba_prefill(s["mamba"],
+                                               rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
+                    h = h + out
+                    ssm_states.append(st["ssm"])
+                    conv_states.append(st["conv"])
+                if j % 2 == 1:
+                    s = jax.tree.map(lambda a_: a_[moe_i], bp["moe"])
+                    out, _ = moe_mod.moe_layer(s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
+                    h = h + out
+                    moe_i += 1
+                else:
+                    s = jax.tree.map(lambda a_: a_[mlp_i], bp["mlp"])
+                    h = h + mlp(s["mlp"], rmsnorm(h, s["ln"], cfg.norm_eps))
+                    mlp_i += 1
+                h = constrain(h, ("batch", None, None), ctx)
+            kp, vp = _pad_cache(k, v, cache_seq, ctx)
+            return h, (kp.astype(dtype), vp.astype(dtype),
+                       jnp.stack(ssm_states), jnp.stack(conv_states).astype(dtype))
+
+        if cfg.remat:
+            block_step = jax.checkpoint(block_step)
+        x, (ks, vs, ssms, convs) = jax.lax.scan(block_step, x, params["blocks"])
+        caches = {"k": ks, "v": vs, "ssm": ssms, "conv": convs}
+    elif fam in ("encdec", "audio"):
+        def step(h, lp):
+            a, (k, v) = attn.attention_prefill(lp["attn"],
+                                               rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, ctx)
+            h = h + a
+            h = h + attn.attention_cross(lp["cross"], rmsnorm(h, lp["ln_x"], cfg.norm_eps),
+                                         enc_out, cfg, ctx)
+            h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            h = constrain(h, ("batch", None, None), ctx)
+            ck, cv = attn.cross_cache_from_encoder(lp["cross"], enc_out)
+            kp, vp = _pad_cache(k, v, cache_seq, ctx)
+            return h, (kp.astype(dtype), vp.astype(dtype),
+                       ck.astype(dtype), cv.astype(dtype))
+        if cfg.remat:
+            step = jax.checkpoint(step)
+        x, (ks, vs, cks, cvs) = jax.lax.scan(step, x, params["layers"])
+        caches = {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x[:, -1], tied=cfg.tie_embeddings)
+    return constrain(logits, ("batch", "tp"), ctx), caches
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def decode_step(params: dict, tokens: jax.Array, caches: Any, pos: jax.Array,
+                cfg: ArchConfig, ctx: ShardCtx) -> tuple[jax.Array, Any]:
+    """tokens: (B, 1) -> (logits (B, V), updated caches)."""
+    fam = cfg.family
+    x = embed(params["embed"], tokens)
+    x = constrain(x, ("batch", None, None), ctx)
+
+    def dec_dense_stack(stacked, cache, x):
+        def step(h, inp):
+            lp, kc, vc = inp
+            h, kc, vc = (_dec_moe_layer if "moe" in lp else _dec_dense_layer)(
+                lp, h, kc, vc, pos, cfg, ctx)
+            return constrain(h, ("batch", None, None), ctx), (kc, vc)
+        return jax.lax.scan(step, x, (stacked, cache["k"], cache["v"]))
+
+    if fam in ("dense", "vlm"):
+        x, (ks, vs) = dec_dense_stack(params["layers"], caches, x)
+        new_caches = {"k": ks, "v": vs}
+    elif fam == "moe":
+        new_caches = {}
+        if cfg.first_k_dense:
+            x, (kd, vd) = dec_dense_stack(params["dense_layers"], caches["dense"], x)
+            new_caches["dense"] = {"k": kd, "v": vd}
+        x, (km, vm) = dec_dense_stack(params["layers"], caches["moe"], x)
+        new_caches["moe"] = {"k": km, "v": vm}
+    elif fam == "ssm":
+        def step(h, inp):
+            lp, ssm, conv = inp
+            h, st = _dec_mamba_layer(lp, h, {"ssm": ssm, "conv": conv}, cfg, ctx)
+            return constrain(h, ("batch", None, None), ctx), (st["ssm"], st["conv"])
+        x, (ssms, convs) = jax.lax.scan(
+            step, x, (params["layers"], caches["ssm"], caches["conv"]))
+        new_caches = {"ssm": ssms, "conv": convs}
+    elif fam == "hybrid":
+        p = cfg.attn_period
+
+        def block_step(h, inp):
+            bp, kc, vc, ssm, conv = inp
+            sub = bp["attn"]
+            a, (kc, vc) = attn.attention_decode(
+                sub["attn"], rmsnorm(h, sub["ln"], cfg.norm_eps), (kc, vc), pos, cfg, ctx)
+            h = h + a
+            ssm_new, conv_new = [], []
+            mlp_i = moe_i = 0
+            for j in range(p):
+                if j > 0:
+                    s = jax.tree.map(lambda a_: a_[j - 1], bp["mamba"])
+                    h2, st = _dec_mamba_layer(
+                        s, h, {"ssm": ssm[j - 1], "conv": conv[j - 1]}, cfg, ctx)
+                    h = h2
+                    ssm_new.append(st["ssm"])
+                    conv_new.append(st["conv"])
+                if j % 2 == 1:
+                    s = jax.tree.map(lambda a_: a_[moe_i], bp["moe"])
+                    out, _ = moe_mod.moe_layer(s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
+                    h = h + out
+                    moe_i += 1
+                else:
+                    s = jax.tree.map(lambda a_: a_[mlp_i], bp["mlp"])
+                    h = h + mlp(s["mlp"], rmsnorm(h, s["ln"], cfg.norm_eps))
+                    mlp_i += 1
+                h = constrain(h, ("batch", None, None), ctx)
+            return h, (kc, vc, jnp.stack(ssm_new), jnp.stack(conv_new))
+
+        x, (ks, vs, ssms, convs) = jax.lax.scan(
+            block_step, x,
+            (params["blocks"], caches["k"], caches["v"], caches["ssm"], caches["conv"]))
+        new_caches = {"k": ks, "v": vs, "ssm": ssms, "conv": convs}
+    elif fam in ("encdec", "audio"):
+        def step(h, inp):
+            lp, kc, vc, ck, cv = inp
+            a, (kc, vc) = attn.attention_decode(
+                lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), (kc, vc), pos, cfg, ctx)
+            h = h + a
+            h = h + attn.attention_cross_decode(
+                lp["cross"], rmsnorm(h, lp["ln_x"], cfg.norm_eps), (ck, cv), cfg, ctx)
+            h = h + mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return constrain(h, ("batch", None, None), ctx), (kc, vc)
+        x, (ks, vs) = jax.lax.scan(
+            step, x, (params["layers"], caches["k"], caches["v"],
+                      caches["ck"], caches["cv"]))
+        new_caches = {"k": ks, "v": vs, "ck": caches["ck"], "cv": caches["cv"]}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(table, x[:, 0], tied=cfg.tie_embeddings)
+    return constrain(logits, ("batch", "tp"), ctx), new_caches

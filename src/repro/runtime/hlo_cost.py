@@ -1,0 +1,191 @@
+"""HLO-graph cost analyzer with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which makes it
+useless for scan-over-layers models (everything interesting lives inside
+scans: layers, KV chunks, SSM chunks, xent chunks).  This analyzer parses the
+optimized (SPMD-partitioned, per-device) HLO text and walks the call graph,
+multiplying each while body by its trip count — XLA conveniently records
+``backend_config={"known_trip_count":{"n":...}}`` on canonicalized loops.
+
+Counted:
+  flops        2 * numel(output) * K for every `dot` (K = product of lhs
+               contracting dim sizes); convolutions approximated the same
+               way via the kernel size.  Elementwise/vector flops are not
+               counted (roofline convention: MXU work).
+  bytes        2 * output bytes (read + write proxy) of every fusion, dot,
+               copy, (dynamic-)slice/update-slice op — on optimized HLO all
+               dataflow lands in these, so this approximates HBM traffic.
+  collectives  output bytes per op kind (all-reduce / all-gather /
+               reduce-scatter / all-to-all / collective-permute), async
+               (-start) pairs counted once.
+
+All totals are per-device (the partitioned module is per-device).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# Ops whose outputs represent real HBM traffic on TPU.  Deliberately
+# excludes top-level elementwise/layout ops (broadcast, iota, compare,
+# arithmetic, reshape, slice, pad): the TPU backend fuses those into their
+# consumers, but the CPU backend we lower with leaves many unfused — counting
+# them would overstate the memory roofline term ~10x.
+_BYTES_OPS = ("fusion", "dot", "convolution", "copy", "dynamic-slice",
+              "dynamic-update-slice", "transpose", "reduce", "concatenate",
+              "scatter", "gather", "sort", "convert", "bitcast-convert")
+
+_SHAPE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.+\s+\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+")
+# lazy shape match: first "<shape> <opcode>(" occurrence after "= " wins —
+# tuple shapes contain "(" and "/*index=N*/" comments, so the shape group
+# cannot be matched structurally; opcode tokens are plain words
+_OP_RE = re.compile(r"=\s+(.*?)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+
+
+def _shape_numel_bytes(shape_str: str) -> tuple[float, float]:
+    """Sum over array elements in a (possibly tuple) shape string."""
+    numel = bytes_ = 0.0
+    for dtype, dims in _SHAPE_ELEM_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = float(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1.0
+        numel += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return numel, bytes_
+
+
+def _dims_of(shape_str: str) -> list[int]:
+    m = _SHAPE_ELEM_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m and m.group(1):
+            entry = m.group(2)
+    if entry is None:   # fall back: last computation
+        entry = list(comps)[-1]
+
+    memo: dict[str, Costs] = {}
+
+    def comp_cost(name: str, stack=()) -> Costs:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Costs()
+        total = Costs()
+        shapes: dict[str, str] = {}
+        for line in comps[name]:
+            nm = _NAME_RE.match(line)
+            m = _OP_RE.search(line)
+            if not nm or not m:
+                continue
+            opname = nm.group(1)
+            shape_str, opcode = m.group(1), m.group(2)
+            rest = line[m.end():]
+            shapes[opname] = shape_str
+            if opcode == "parameter" or opcode.endswith("-done"):
+                continue
+            numel, obytes = _shape_numel_bytes(shape_str)
+
+            if opcode == "dot":
+                # operands: %lhs, %rhs, ... lhs_contracting_dims={...}
+                ops = re.findall(r"%([\w\.\-]+)", rest)
+                lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                k = 1.0
+                if ops and lc and ops[0] in shapes:
+                    ldims = _dims_of(shapes[ops[0]])
+                    for ci in (int(c) for c in lc.group(1).split(",") if c):
+                        if ci < len(ldims):
+                            k *= ldims[ci]
+                total.flops += 2.0 * numel * k
+                total.bytes += 2.0 * obytes
+            elif opcode == "convolution":
+                total.flops += 2.0 * numel * 9.0   # coarse; convs are rare here
+                total.bytes += 2.0 * obytes
+            elif any(opcode == c or opcode == c + "-start" for c in _COLL_KINDS):
+                kind = opcode.removesuffix("-start")
+                b = obytes / 2.0 if opcode.endswith("-start") else obytes
+                total.coll[kind] = total.coll.get(kind, 0.0) + b
+                total.coll["n_ops"] = total.coll.get("n_ops", 0.0) + 1.0
+                total.bytes += obytes
+            elif opcode == "while":
+                trip = 1.0
+                mt = _TRIP_RE.search(rest)
+                if mt:
+                    trip = float(mt.group(1))
+                body = _CALLS_RE.search(rest)
+                cond = _COND_RE.search(rest)
+                if body:
+                    total.add(comp_cost(body.group(1), stack + (name,)), trip)
+                if cond:
+                    total.add(comp_cost(cond.group(1), stack + (name,)), trip)
+            elif opcode in ("call", "conditional", "async-start"):
+                for callee in _CALLS_RE.findall(rest):
+                    total.add(comp_cost(callee, stack + (name,)), 1.0)
+                total.bytes += obytes
+            elif opcode == "fusion":
+                # fusion internals are elementwise; count the traffic only
+                total.bytes += 2.0 * obytes
+            elif opcode in _BYTES_OPS:
+                total.bytes += 2.0 * obytes
+        memo[name] = total
+        return total
+
+    c = comp_cost(entry)
+    out = {"flops": c.flops, "bytes": c.bytes, "collectives": dict(c.coll),
+           "entry": entry}
+    return out

@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e, per chip):
+  peak bf16 compute   197 TFLOP/s
+  HBM bandwidth       819 GB/s
+  ICI link bandwidth  ~50 GB/s per link
+
+Three terms (seconds, per device — ``compiled.cost_analysis()`` on an SPMD-
+partitioned module reports per-device flops/bytes):
+
+  compute    = HLO_flops / peak
+  memory     = HLO_bytes_accessed / HBM_bw
+  collective = sum_k w_k * bytes_k / ICI_bw, with per-kind weights
+               all-reduce 2.0 (reduce-scatter + all-gather equivalent),
+               all-gather / reduce-scatter / all-to-all / collective-permute
+               1.0 — bytes are the per-device output sizes parsed from the
+               partitioned HLO.
+
+The bottleneck is the max term.  MODEL_FLOPS / HLO_flops measures how much
+of compiled compute is algorithmically useful (catches remat/dispatch
+waste); remat recompute intentionally shows up here.
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0,
+                "ragged-all-to-all": 1.0}
+
+# `bf16[4,128]{1,0}` or tuple `(bf16[...], f32[...])`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-kind output bytes (per device) from partitioned HLO.
+
+    Async pairs (-start/-done) are counted once via the -start op; bare sync
+    ops count directly.  `-done` ops never match (no '(' pattern on their
+    operand list start... they do, so we exclude by op name suffix)."""
+    out: dict[str, float] = {}
+    ops = 0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, _ = m.group(1), m.group(2), m.group(3)
+        # skip -done lines: their def name contains '-done'
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        head = hlo_text[line_start:m.start()]
+        if "-done" in head:
+            continue
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_str)
+        ops += 1
+    out["n_ops"] = ops
+    return out
+
+
+def collective_seconds(colls: dict) -> float:
+    return sum(_COLL_WEIGHT.get(k, 1.0) * v
+               for k, v in colls.items() if k != "n_ops") / ICI_BW
+
+
+def roofline_terms(cost: dict, colls: dict, cfg, shape, mesh,
+                   *, n_total: int, n_active: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = collective_seconds(colls)
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6.0 if shape.kind == "train" else 2.0
+    n_embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    model_flops_global = mult * max(n_active - n_embed, 1) * tokens
+    model_flops_per_dev = model_flops_global / n_dev
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s,
+             "bottleneck": max((("compute", compute_s), ("memory", memory_s),
+                                ("collective", coll_s)), key=lambda kv: kv[1])[0],
+             "model_flops_per_device": model_flops_per_dev,
+             "useful_flops_fraction": (model_flops_per_dev / flops
+                                       if flops else 0.0),
+             "step_time_bound_s": max(compute_s, memory_s, coll_s)}
+    return terms
+
+
+def memory_analysis_dict(mem) -> dict:
+    """Normalize compiled.memory_analysis() across backends."""
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(mem)[:500]
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_bytes_per_device_est"] = (
+            out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+            + out["temp_size_in_bytes"] - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,121 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Logical axes used by the model zoo:
+
+  fsdp      parameter & optimizer-state sharding axis (ZeRO-3 style)
+  tp        tensor-parallel axis (attention heads, FFN hidden, experts, vocab)
+  batch     data-parallel activation axis
+  kv_seq    sequence axis of decode KV caches
+  kv_tp     head_dim axis of decode KV caches (TP fallback when batch is wide)
+  None      replicated
+
+Rules are carried in a ShardCtx so they can vary per step kind:
+
+* default             batch -> (pod, data); kv_seq unsharded; kv_tp -> model
+* seq_sharded_kv      long-context decode with tiny batches (long_500k has
+                      global_batch=1): batch unsharded, kv_seq -> (pod, data)
+                      — sequence parallelism over the KV cache; softmax
+                      reductions over the sharded seq dim lower to
+                      all-reduces (the LSE combine falls out of SPMD).
+
+A dim that a rule cannot divide evenly is silently replicated (e.g. 8 KV
+heads over a 16-way model axis), exactly like Megatron's GQA TP fallback.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _base_rules(axis_names: tuple[str, ...]) -> dict:
+    dp = ("pod", "data") if "pod" in axis_names else ("data",)
+    return {
+        "fsdp": dp,
+        "tp": ("model",),
+        "batch": dp,
+        "kv_seq": (),
+        "kv_tp": ("model",),
+        "stage": ("pod",) if "pod" in axis_names else (),
+    }
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh | None
+    rules: dict = field(default_factory=dict)
+
+    @property
+    def axis_sizes(self) -> dict:
+        if self.mesh is None:
+            return {}
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+
+def make_ctx(mesh: Mesh | None, *, seq_sharded_kv: bool = False) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(None, {})
+    rules = _base_rules(tuple(mesh.axis_names))
+    if seq_sharded_kv:
+        rules = rules | {"batch": (), "kv_seq": rules["fsdp"], "kv_tp": ("model",)}
+    return ShardCtx(mesh, rules)
+
+
+def to_pspec(axes: tuple, rules: dict) -> P:
+    """Logical axes tuple (one entry per tensor dim; entries are logical axis
+    names, tuples of them, or None) -> PartitionSpec."""
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        names = (ax,) if isinstance(ax, str) else tuple(ax)
+        phys: list[str] = []
+        for n in names:
+            phys.extend(rules.get(n, ()))
+        out.append(tuple(phys) if len(phys) > 1 else (phys[0] if phys else None))
+    return P(*out)
+
+
+def _sanitize(pspec: P, shape: tuple[int, ...] | None, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim (e.g. 8 KV
+    heads cannot shard over a 16-way model axis -> replicate)."""
+    if shape is None:
+        return pspec
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        total = int(np.prod([sizes[n] for n in names]))
+        out.append(entry if dim % total == 0 else None)
+    return P(*out)
+
+
+def sharding_for(axes: tuple, ctx: ShardCtx,
+                 shape: tuple[int, ...] | None = None) -> NamedSharding | None:
+    if ctx.mesh is None:
+        return None
+    pspec = to_pspec(axes, ctx.rules)
+    return NamedSharding(ctx.mesh, _sanitize(pspec, shape, ctx.mesh))
+
+
+def constrain(x: jax.Array, axes: tuple, ctx: ShardCtx) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding_for(axes, ctx, x.shape))
+
+
+def tree_shardings(spec_tree: Any, ctx: ShardCtx):
+    """Map a tree of ParamSpec (models.params) to NamedShardings."""
+    from repro.models import params as pmod
+    return jax.tree.map(
+        lambda s: sharding_for(s.axes, ctx, s.shape),
+        spec_tree, is_leaf=lambda s: isinstance(s, pmod.ParamSpec))

@@ -1,0 +1,170 @@
+"""Step builders: jit-compiled train / prefill / decode with full sharding
+specifications (params, optimizer state, batch, caches).
+
+These are the functions the launcher runs and the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data import lm as lmdata
+from repro.models import model as model_mod
+from repro.models import params as pmod
+from repro.models import serve as serve_mod
+from repro.models.config import ArchConfig
+from repro.optim import adamw, compress
+from repro.runtime.sharding import (ShardCtx, make_ctx, sharding_for,
+                                    tree_shardings)
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for non-param step inputs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree: Any, ctx: ShardCtx):
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        axes = {"tokens": ("batch", None), "labels": ("batch", None),
+                "media": ("batch", None, None), "frames": ("batch", None, None),
+                "pos": ()}.get(name)
+        if axes is None:
+            axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return sharding_for(axes, ctx, tuple(leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(cache_tree: Any, ctx: ShardCtx):
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        rank = len(leaf.shape)
+        if name in ("k", "v", "ck", "cv"):           # (n, B, S, KV, hd)
+            axes = (None, "batch", "kv_seq", None, "kv_tp")
+        elif name == "ssm":                          # (..., B, di, st)
+            axes = (None,) * (rank - 3) + ("batch", "tp", None)
+        elif name == "conv":                         # (..., B, k-1, di)
+            axes = (None,) * (rank - 3) + ("batch", None, "tp")
+        else:
+            axes = (None,) * rank
+        return sharding_for(axes, ctx, tuple(leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def opt_state_shardings(spec_tree: Any, ctx: ShardCtx):
+    ps = tree_shardings(spec_tree, ctx)
+    return {"m": ps, "v": ps,
+            "step": sharding_for((), ctx, ())}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt: adamw.OptConfig, ctx: ShardCtx,
+                    grad_compress: bool = False):
+    """Returns train_step(params, opt_state, batch[, residual]) -> ...
+
+    Gradient accumulation: opt.accum_steps microbatches via lax.scan (keeps
+    peak activation memory at 1/accum of the global batch)."""
+
+    def loss_of(params, batch):
+        return model_mod.loss_fn(params, batch, cfg, ctx)
+
+    def compute_grads(params, batch):
+        if opt.accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        n = opt.accum_steps
+        micro = jax.tree.map(
+            lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+        def acc_step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            return (loss_acc + loss / n,
+                    jax.tree.map(lambda a, g: a + g / n, grads_acc, grads)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0.0), zeros), micro)
+        return loss, {"xent": loss, "aux": jnp.float32(0.0)}, grads
+
+    if grad_compress:
+        def train_step(params, opt_state, batch, residual):
+            loss, metrics, grads = compute_grads(params, batch)
+            grads, residual = compress.compress_decompress(grads, residual)
+            params, opt_state, om = adamw.apply_updates(params, grads, opt_state, opt)
+            return params, opt_state, residual, loss, {**metrics, **om}
+    else:
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = compute_grads(params, batch)
+            params, opt_state, om = adamw.apply_updates(params, grads, opt_state, opt)
+            return params, opt_state, loss, {**metrics, **om}
+    return train_step
+
+
+def jit_train_step(cfg: ArchConfig, opt: adamw.OptConfig, mesh: Mesh | None,
+                   batch_specs: Any, grad_compress: bool = False):
+    """jit with explicit in/out shardings; also returns the abstract arg
+    structure so the dry-run can .lower() without allocating anything."""
+    ctx = make_ctx(mesh)
+    spec = model_mod.model_spec(cfg)
+    p_shard = tree_shardings(spec, ctx)
+    o_shard = opt_state_shardings(spec, ctx)
+    b_shard = batch_shardings(batch_specs, ctx)
+    step = make_train_step(cfg, opt, ctx, grad_compress)
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (p_shard, o_shard, None, None)
+    if grad_compress:
+        in_shardings = in_shardings + (p_shard,)
+        out_shardings = (p_shard, o_shard, p_shard, None, None)
+    if mesh is None:
+        return jax.jit(step), ctx, spec
+    return (jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings),
+            ctx, spec)
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def jit_prefill(cfg: ArchConfig, mesh: Mesh | None, batch_specs: Any,
+                cache_seq: int, *, seq_sharded_kv: bool = False):
+    ctx = make_ctx(mesh, seq_sharded_kv=seq_sharded_kv)
+    spec = model_mod.model_spec(cfg)
+
+    def fn(params, batch):
+        return serve_mod.prefill(params, batch, cfg, ctx, cache_seq)
+
+    if mesh is None:
+        return jax.jit(fn), ctx, spec
+    p_shard = tree_shardings(spec, ctx)
+    b_shard = batch_shardings(batch_specs, ctx)
+    return (jax.jit(fn, in_shardings=(p_shard, b_shard), out_shardings=None),
+            ctx, spec)
+
+
+def jit_decode_step(cfg: ArchConfig, mesh: Mesh | None, decode_specs: dict,
+                    *, seq_sharded_kv: bool = False):
+    """decode_specs: {"tokens", "caches", "pos"} (abstract or concrete)."""
+    ctx = make_ctx(mesh, seq_sharded_kv=seq_sharded_kv)
+    spec = model_mod.model_spec(cfg)
+
+    def fn(params, tokens, caches, pos):
+        return serve_mod.decode_step(params, tokens, caches, pos, cfg, ctx)
+
+    if mesh is None:
+        return jax.jit(fn), ctx, spec
+    p_shard = tree_shardings(spec, ctx)
+    t_shard = sharding_for(("batch", None), ctx, tuple(decode_specs["tokens"].shape))
+    c_shard = cache_shardings(decode_specs["caches"], ctx)
+    logits_shard = None
+    return (jax.jit(fn,
+                    in_shardings=(p_shard, t_shard, c_shard, None),
+                    out_shardings=(logits_shard, c_shard)),
+            ctx, spec)

@@ -1,0 +1,191 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward/
+train step + prefill/decode consistency on CPU, asserting output shapes and
+no NaNs.  The FULL configs are exercised only via the dry-run."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
+from repro.data import lm as lmdata
+from repro.models import model as M
+from repro.models import params as P
+from repro.models import serve as S
+from repro.models.config import param_count
+from repro.runtime.sharding import make_ctx
+from repro.optim import adamw
+from repro.runtime import steps as steps_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+CTX = make_ctx(None)
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    spec = M.model_spec(cfg)
+    params = P.initialize(jax.random.PRNGKey(0), spec, jnp.float32)
+    return cfg, spec, params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch):
+    cfg, spec, params = _setup(arch)
+    shape = lmdata.ShapeSpec("t", 64, 2, "train")
+    batch = lmdata.synth_batch(jax.random.PRNGKey(1), cfg, shape)
+    opt = adamw.OptConfig(total_steps=10, warmup_steps=2)
+    step = steps_mod.make_train_step(cfg, opt, CTX)
+    opt_state = adamw.init_state(params, opt)
+    params2, opt_state2, loss, metrics = jax.jit(step)(params, opt_state, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert delta > 0
+    # a second step decreases nothing catastrophic (still finite)
+    _, _, loss2, _ = jax.jit(step)(params2, opt_state2, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """Prefill on L tokens == teacher forcing: decoding token L from the
+    cache must give the same logits as prefill's last-position logits when
+    the cache was built from the same prefix."""
+    cfg, spec, params = _setup(arch)
+    seq = 32
+    shape = lmdata.ShapeSpec("p", seq, 2, "prefill")
+    batch = lmdata.synth_batch(jax.random.PRNGKey(1), cfg, shape)
+    tl = batch["tokens"].shape[1]
+
+    logits_full, _ = jax.jit(
+        lambda p, b: S.prefill(p, b, cfg, CTX, seq))(params, batch)
+
+    # prefill on the prefix (all but last token), then decode the last token
+    batch_prefix = dict(batch)
+    batch_prefix["tokens"] = batch["tokens"][:, : tl - 1]
+    _, caches = jax.jit(
+        lambda p, b: S.prefill(p, b, cfg, CTX, seq))(params, batch_prefix)
+    n_media = cfg.num_media_tokens if cfg.family == "vlm" else 0
+    pos = jnp.asarray(tl - 1 + n_media, jnp.int32)
+    logits_dec, _ = jax.jit(
+        lambda p, t, c, q: S.decode_step(p, t, c, q, cfg, CTX))(
+            params, batch["tokens"][:, tl - 1:], caches, pos)
+
+    if cfg.family == "ssm":
+        tol = 2e-4   # fp32 scan reassociation
+    else:
+        tol = 2e-4
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_full),
+                               rtol=1e-3, atol=tol, err_msg=arch)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_spec_consistency(arch):
+    cfg, spec, params = _setup(arch)
+    n_spec = P.count_params(spec)
+    n_real = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    assert n_spec == n_real
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_sane(arch):
+    """The FULL config's parameter estimate should be in the arch's declared
+    class (e.g. 16b ~ 10-20e9, 398b ~ 300-500e9)."""
+    cfg = get_config(arch)
+    total, active = param_count(cfg)
+    expected = {
+        "deepseek-moe-16b": (10e9, 25e9), "moonshot-v1-16b-a3b": (10e9, 32e9),
+        "seamless-m4t-medium": (0.5e9, 3e9), "qwen3-0.6b": (0.4e9, 1e9),
+        "command-r-35b": (25e9, 45e9), "llama3.2-3b": (2e9, 5e9),
+        "qwen3-1.7b": (1.2e9, 2.5e9), "falcon-mamba-7b": (5e9, 9e9),
+        "jamba-1.5-large-398b": (300e9, 500e9), "internvl2-2b": (1.5e9, 3.5e9),
+    }[arch]
+    assert expected[0] < total < expected[1], (arch, total)
+    assert active <= total
+
+
+def test_shape_applicability_matrix():
+    """long_500k runs only for ssm/hybrid; everything else runs all shapes."""
+    runs = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, sh in lmdata.SHAPES.items():
+            ok, _ = shape_applicable(cfg, sh)
+            runs[(arch, sname)] = ok
+    assert runs[("falcon-mamba-7b", "long_500k")]
+    assert runs[("jamba-1.5-large-398b", "long_500k")]
+    assert not runs[("qwen3-0.6b", "long_500k")]
+    assert not runs[("command-r-35b", "long_500k")]
+    assert all(runs[(a, s)] for a in ARCH_IDS
+               for s in ("train_4k", "prefill_32k", "decode_32k"))
+
+
+@pytest.mark.parametrize("mode", ["index", "local_index"])
+def test_moe_dispatch_modes_agree(mode):
+    """Index-domain dispatch == dense (all-experts) compute when no tokens
+    are dropped — the CompIM-equivalence property at the MoE layer."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("deepseek-moe-16b").reduced(n_experts=4,
+                                                 experts_per_token=2)
+    cfg_ix = dataclasses.replace(cfg, moe_dispatch=mode, capacity_factor=8.0)
+    cfg_dn = dataclasses.replace(cfg, moe_dispatch="dense")
+    spec = moe_mod.moe_spec(cfg_ix)
+    params = P.initialize(jax.random.PRNGKey(3), spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    out_ix, aux_ix = moe_mod.moe_layer(params, x, cfg_ix, CTX)
+    out_dn, aux_dn = moe_mod.moe_layer(params, x, cfg_dn, CTX)
+    np.testing.assert_allclose(np.asarray(out_ix), np.asarray(out_dn),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(float(aux_ix), float(aux_dn), rtol=1e-5)
+
+
+def test_attention_bf16_intermediates_close():
+    """The §Perf bf16-intermediate attention must track fp32 closely."""
+    from repro.models import attention as A
+    cfg = get_config("llama3.2-3b").reduced(d_model=128, n_heads=8,
+                                            n_kv_heads=4, head_dim=16,
+                                            vocab=512)
+    cfg16 = dataclasses.replace(cfg, attn_bf16_intermediates=True)
+    spec = A.attention_spec(cfg)
+    params = P.initialize(jax.random.PRNGKey(0), spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, 128)) * 0.5
+    o32 = A.attention_train(params, x, cfg, CTX)
+    o16 = A.attention_train(params, x, cfg16, CTX)
+    err = float(jnp.max(jnp.abs(o32 - o16)) / (jnp.max(jnp.abs(o32)) + 1e-9))
+    assert err < 2e-2, err
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models import moe as moe_mod
+    cfg = get_config("deepseek-moe-16b").reduced(
+        n_experts=4, experts_per_token=2)
+    cfg = dataclasses.replace(cfg, moe_dispatch="index", capacity_factor=0.25)
+    spec = moe_mod.moe_spec(cfg)
+    params = P.initialize(jax.random.PRNGKey(3), spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    out, _ = moe_mod.moe_layer(params, x, cfg, CTX)   # must not crash
+    assert jnp.isfinite(out).all()
+
+
+def test_mamba_train_matches_decode_rollout():
+    """Stepwise decode through mamba must reproduce the chunked train scan."""
+    from repro.models import mamba as mb
+    cfg = get_config("falcon-mamba-7b").reduced(d_model=32, ssm_state=4)
+    spec = mb.mamba_spec(cfg)
+    params = P.initialize(jax.random.PRNGKey(5), spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 12, cfg.d_model)) * 0.1
+    y_train = mb.mamba_train(params, x, cfg, CTX)
+    state = {"ssm": jnp.zeros((2, cfg.d_inner, cfg.ssm_state)),
+             "conv": jnp.zeros((2, cfg.ssm_conv - 1, cfg.d_inner))}
+    outs = []
+    for t in range(12):
+        y, state = mb.mamba_decode(params, x[:, t:t + 1], state, cfg, CTX)
+        outs.append(y)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,228 @@
+"""System tests for the sparse HDC classifier: binding equivalences, bundling
+invariants, and end-to-end one-shot seizure detection on synthetic patients."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am, binding, bundling, classifier, dense, hdtrain, hv, im, metrics
+from repro.data import ieeg
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = classifier.HDCConfig()
+
+
+# ---------------------------------------------------------------------------
+# binding
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_binding_domains_equivalent(seed):
+    """CompIM position binding == naive packed segmented-shift binding."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = hv.random_sparse_positions(k1, (4,), 8, 128)
+    b = hv.random_sparse_positions(k2, (4,), 8, 128)
+    ap = hv.positions_to_packed(a, 1024, 8)
+    bp = hv.positions_to_packed(b, 1024, 8)
+    naive = binding.bind_segmented_packed(ap, bp, 1024, 8)
+    posd = hv.positions_to_packed(binding.bind_positions(a, b, 128), 1024, 8)
+    np.testing.assert_array_equal(np.asarray(naive), np.asarray(posd))
+
+
+def test_binding_preserves_sparsity():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = hv.random_sparse_positions(k1, (16,), 8, 128)
+    b = hv.random_sparse_positions(k2, (16,), 8, 128)
+    bound = binding.bind_positions(a, b, 128)
+    packed = hv.positions_to_packed(bound, 1024, 8)
+    assert (np.asarray(hv.popcount(packed)) == 8).all()
+
+
+def test_unbind_inverts_bind():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = hv.random_sparse_positions(k1, (8,), 8, 128)
+    b = hv.random_sparse_positions(k2, (8,), 8, 128)
+    bound = binding.bind_positions(a, b, 128)
+    np.testing.assert_array_equal(
+        np.asarray(binding.unbind_positions(bound, b, 128)), np.asarray(a))
+
+
+def test_roll_segments():
+    bits = np.zeros((1, 256), np.uint8)
+    bits[0, 0] = 1      # segment 0, position 0 (segments of 32 when S=8, D=256)
+    shifts = np.zeros((1, 8), np.int32)
+    shifts[0, 0] = 5
+    rolled = binding.roll_segments_bits(jnp.asarray(bits), jnp.asarray(shifts), 8)
+    out = np.asarray(rolled)[0]
+    assert out[5] == 1 and out.sum() == 1
+
+
+# ---------------------------------------------------------------------------
+# bundling
+# ---------------------------------------------------------------------------
+
+def test_spatial_or_vs_thinned_threshold1_equal():
+    """With threshold 1, the adder tree + thinning == the OR tree (the basis
+    of the paper's Sec. III-B simplification)."""
+    key = jax.random.PRNGKey(2)
+    pos = hv.random_sparse_positions(key, (10, 64), 8, 128)
+    ored = bundling.spatial_bundle_or_positions(pos, 1024, 8)
+    thin1 = bundling.spatial_bundle_thinned_positions(pos, 1024, 8, 1)
+    np.testing.assert_array_equal(np.asarray(ored), np.asarray(thin1))
+
+
+def test_spatial_density_bound():
+    """64 one-bit-per-segment HVs can fill at most 50% of a 1024-bit HV."""
+    key = jax.random.PRNGKey(3)
+    pos = hv.random_sparse_positions(key, (20, 64), 8, 128)
+    bundled = bundling.spatial_bundle_or_positions(pos, 1024, 8)
+    dens = np.asarray(hv.density(bundled, 1024))
+    assert (dens <= 0.5).all()
+    assert (dens > 0.2).all()    # and it is far from degenerate
+
+
+def test_counts_domains_agree():
+    key = jax.random.PRNGKey(4)
+    pos = hv.random_sparse_positions(key, (6, 64), 8, 128)
+    packed = hv.positions_to_packed(pos, 1024, 8)
+    via_pos = bundling.spatial_counts_positions(pos, 1024, 8)
+    via_bits = bundling.spatial_counts_packed(packed, 1024)
+    np.testing.assert_array_equal(np.asarray(via_pos), np.asarray(via_bits))
+
+
+def test_temporal_counts_bounded_by_window():
+    key = jax.random.PRNGKey(5)
+    pos = hv.random_sparse_positions(key, (2, 256, 64), 8, 128)
+    spat = bundling.spatial_bundle_or_positions(pos, 1024, 8)   # (2, 256, W)
+    counts = bundling.temporal_counts(spat, 1024)
+    assert counts.shape == (2, 1024)
+    assert (np.asarray(counts) <= 256).all()
+
+
+def test_threshold_for_density():
+    rng = np.random.default_rng(6)
+    counts = jnp.asarray(rng.integers(0, 256, (4, 1024)))
+    for target in (0.1, 0.25, 0.5):
+        thr = int(bundling.threshold_for_density(counts, target))
+        dens = float(hv.density(hv.threshold_pack(counts, thr), 1024).mean())
+        assert dens <= target + 0.05, (target, thr, dens)
+
+
+# ---------------------------------------------------------------------------
+# AM
+# ---------------------------------------------------------------------------
+
+def test_am_scores_sparse_counts_shared_bits():
+    q = hv.pack_bits(jnp.asarray(np.eye(1, 64, 3, dtype=np.uint8) + np.eye(1, 64, 7, dtype=np.uint8)))
+    cls = hv.pack_bits(jnp.asarray(np.stack([
+        np.eye(1, 64, 3, dtype=np.uint8)[0],                       # shares bit 3
+        np.zeros(64, np.uint8)])))                                  # shares none
+    s = np.asarray(am.am_scores_sparse(q, cls))
+    assert s[0, 0] == 1 and s[0, 1] == 0
+
+
+def test_am_predict_tiebreak_low():
+    scores = jnp.asarray([[5, 5], [3, 9]])
+    np.testing.assert_array_equal(np.asarray(am.am_predict(scores)), [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# variants agree / end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def patient():
+    return ieeg.make_patient(11, n_seizures=3)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return classifier.init_params(jax.random.PRNGKey(42), CFG)
+
+
+def test_naive_and_compim_pipelines_bitwise_equal(params, patient):
+    """The CompIM datapath must be bit-exact with the naive baseline when both
+    use the same spatial thinning threshold (the paper's optimization is
+    functionality-preserving for the IM/binding stage)."""
+    codes = jnp.asarray(patient.records[0].codes[None, :2048])
+    cfg_naive = dataclasses.replace(CFG, variant="sparse_naive", spatial_threshold=1)
+    cfg_comp = dataclasses.replace(CFG, variant="sparse_compim",
+                                   spatial_thinning=True, spatial_threshold=1)
+    cfg_opt = dataclasses.replace(CFG, variant="sparse_compim", spatial_thinning=False)
+    f_naive = classifier.encode_frames(params, codes, cfg_naive)
+    f_comp = classifier.encode_frames(params, codes, cfg_comp)
+    f_opt = classifier.encode_frames(params, codes, cfg_opt)
+    np.testing.assert_array_equal(np.asarray(f_naive), np.asarray(f_comp))
+    # threshold-1 thinning == OR bundling (Sec. III-B argument)
+    np.testing.assert_array_equal(np.asarray(f_naive), np.asarray(f_opt))
+
+
+def test_one_shot_detection_end_to_end(params, patient):
+    """One-shot learning on seizure 1, detection on seizures 2..n."""
+    rec = patient.records[0]
+    codes = jnp.asarray(rec.codes[None])
+    labels = jnp.asarray(ieeg.frame_labels(rec, CFG.window)[None])
+    cfg = classifier.with_density_target(params, codes, CFG, 0.25)
+    class_hvs = hdtrain.train_one_shot(params, codes, labels, cfg)
+    dens = np.asarray(hv.density(class_hvs, CFG.dim))
+    assert (np.abs(dens - 0.5) < 0.12).all(), f"class densities {dens} not ~50%"
+    results = []
+    for rec2 in patient.records[1:]:
+        _, preds = classifier.infer(params, class_hvs, jnp.asarray(rec2.codes[None]), cfg)
+        results.append(metrics.detection_metrics(
+            np.asarray(preds[0]), ieeg.onset_frame(rec2, cfg.window)))
+    agg = metrics.aggregate(results)
+    assert agg["detection_accuracy"] >= 0.5
+    assert agg["false_alarm_rate"] <= 0.5
+
+
+def test_dense_baseline_end_to_end(patient):
+    dcfg = dense.DenseHDCConfig()
+    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
+    rec = patient.records[0]
+    codes = jnp.asarray(rec.codes[None])
+    labels = jnp.asarray(ieeg.frame_labels(rec, dcfg.window)[None])
+    class_hvs = dense.train_one_shot(dparams, codes, labels, dcfg)
+    results = []
+    for rec2 in patient.records[1:]:
+        _, preds = dense.infer(dparams, class_hvs, jnp.asarray(rec2.codes[None]), dcfg)
+        results.append(metrics.detection_metrics(
+            np.asarray(preds[0]), ieeg.onset_frame(rec2, dcfg.window)))
+    agg = metrics.aggregate(results)
+    assert agg["detection_accuracy"] >= 0.5
+
+
+def test_encode_frames_shapes_and_no_saturation(params, patient):
+    codes = jnp.asarray(patient.records[0].codes[None, :1024])
+    frames = classifier.encode_frames(params, codes, CFG)
+    assert frames.shape == (1, 4, CFG.words)
+    dens = np.asarray(hv.density(frames, CFG.dim))
+    assert (dens < 1.0).all() and (dens > 0.0).all()
+
+
+def test_lbp_codes():
+    x = np.asarray([0, 1, 2, 1, 0, 1, 2, 3, 4], dtype=np.float32)
+    codes = ieeg.lbp_codes_np(x, bits=6)
+    # diffs signs: +,+,-,-,+,+,+,+ -> first code uses d[0..5] LSB=d[5]? check shape
+    assert codes.shape == (3,)
+    assert codes.dtype == np.uint8
+    assert (codes < 64).all()
+
+
+def test_metrics_postprocess():
+    preds = np.asarray([0, 1, 0, 0, 1, 1, 1, 0])
+    fired = metrics.postprocess(preds, k=2, m=3)
+    assert fired[5] == 1 and fired[1] == 0
+
+
+def test_metrics_delay():
+    preds = np.zeros(20, np.int32)
+    preds[12:] = 1
+    r = metrics.detection_metrics(preds, onset_frame=10)
+    assert r.detected and r.delay_frames == 3.0 and not r.false_alarm

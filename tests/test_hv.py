@@ -1,0 +1,105 @@
+"""Unit + property tests for hypervector primitives (core/hv.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (3, 5, 1024)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (3, 5, 32)
+    back = hv.unpack_bits(packed)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_pack_matches_numpy_mirror():
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, (4, 256)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(hv.pack_bits(jnp.asarray(bits))), hv.np_pack_bits(bits))
+
+
+def test_popcount():
+    rng = np.random.default_rng(2)
+    bits = rng.integers(0, 2, (7, 512)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    np.testing.assert_array_equal(np.asarray(hv.popcount(packed)), bits.sum(-1))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_hamming_overlap_identities(a, b):
+    aw = jnp.asarray([[a]], dtype=jnp.uint32)
+    bw = jnp.asarray([[b]], dtype=jnp.uint32)
+    ham = int(hv.hamming(aw, bw)[0])
+    ovl = int(hv.overlap(aw, bw)[0])
+    pa, pb = int(hv.popcount(aw)[0]), int(hv.popcount(bw)[0])
+    # |a^b| = |a| + |b| - 2|a&b|
+    assert ham == pa + pb - 2 * ovl
+
+
+@given(st.lists(st.integers(0, 127), min_size=8, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_positions_roundtrip(pos):
+    p = jnp.asarray([pos], dtype=jnp.uint8)
+    packed = hv.positions_to_packed(p, 1024, 8)
+    assert int(hv.popcount(packed)[0]) == 8   # exactly one bit per segment
+    back = hv.packed_to_positions(packed, 1024, 8)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(p))
+
+
+def test_positions_to_packed_matches_bits_path():
+    key = jax.random.PRNGKey(3)
+    pos = hv.random_sparse_positions(key, (6,), 8, 128)
+    direct = hv.positions_to_packed(pos, 1024, 8)
+    via_bits = hv.pack_bits(hv.positions_to_bits(pos, 1024, 8))
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(via_bits))
+
+
+@pytest.mark.parametrize("dim,segments", [(1024, 8), (512, 8), (2048, 16), (256, 4)])
+def test_positions_various_shapes(dim, segments):
+    key = jax.random.PRNGKey(dim + segments)
+    pos = hv.random_sparse_positions(key, (3, 4), segments, dim // segments)
+    packed = hv.positions_to_packed(pos, dim, segments)
+    assert packed.shape == (3, 4, dim // 32)
+    np.testing.assert_array_equal(
+        np.asarray(hv.packed_to_positions(packed, dim, segments)), np.asarray(pos))
+
+
+def test_or_reduce_equals_any():
+    rng = np.random.default_rng(4)
+    bits = rng.integers(0, 2, (5, 9, 256)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    ored = hv.or_reduce(packed, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(hv.unpack_bits(ored)), bits.any(axis=1).astype(np.uint8))
+
+
+def test_unpacked_counts_matches_dense_sum():
+    rng = np.random.default_rng(5)
+    bits = rng.integers(0, 2, (3, 17, 128)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    counts = hv.unpacked_counts(packed, axis=1, dim=128)
+    np.testing.assert_array_equal(np.asarray(counts), bits.sum(axis=1))
+
+
+def test_threshold_pack():
+    counts = jnp.asarray(np.arange(64)[None, :])
+    packed = hv.threshold_pack(counts, 32)
+    bits = np.asarray(hv.unpack_bits(packed, 64))
+    np.testing.assert_array_equal(bits[0], (np.arange(64) >= 32).astype(np.uint8))
+
+
+def test_density():
+    ones = jnp.full((1, 32), 0xFFFFFFFF, dtype=jnp.uint32)
+    assert float(hv.density(ones, 1024)[0]) == 1.0
+    zeros = jnp.zeros((1, 32), dtype=jnp.uint32)
+    assert float(hv.density(zeros, 1024)[0]) == 0.0

@@ -1,0 +1,190 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, with
+shape sweeps and hypothesis property tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import classifier, dense, hv
+from repro.data import ieeg
+from repro.kernels.hdc_encoder.kernel import encoder_pallas
+from repro.kernels.hdc_encoder.ref import encoder_ref
+from repro.kernels.hdc_encoder.ops import encode_frames_fused
+from repro.kernels.hdc_am.kernel import am_search_pallas
+from repro.kernels.hdc_am.ref import am_search_ref
+from repro.kernels.hdc_am.ops import am_search
+from repro.kernels.dense_hdc.kernel import dense_encoder_pallas
+from repro.kernels.dense_hdc.ref import dense_encoder_ref
+from repro.kernels.dense_hdc.ops import dense_encode_frames_fused
+from repro.kernels.lbp.kernel import lbp_pallas
+from repro.kernels.lbp.ref import lbp_ref
+from repro.kernels.lbp.ops import lbp_codes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# hdc_encoder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,window,c,segments,seg_len", [
+    (1, 1, 32, 4, 8, 128),
+    (2, 3, 64, 16, 8, 128),
+    (1, 2, 32, 8, 4, 64),
+    (2, 1, 64, 64, 8, 128),     # paper-shaped channels
+    (1, 1, 32, 4, 16, 128),
+])
+def test_encoder_kernel_vs_ref_shapes(b, f, window, c, segments, seg_len):
+    key = jax.random.PRNGKey(b * 100 + f)
+    k1, k2 = jax.random.split(key)
+    pos = hv.random_sparse_positions(k1, (b, f, window, c), segments, seg_len)
+    elec = hv.random_sparse_positions(k2, (c,), segments, seg_len)
+    kw = dict(window=window, segments=segments, seg_len=seg_len,
+              temporal_threshold=max(1, window // 8))
+    out_k = encoder_pallas(pos, elec, interpret=True, **kw)
+    out_r = encoder_ref(pos, elec, **kw)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("thinning,thr_s", [(False, 1), (True, 1), (True, 2)])
+def test_encoder_kernel_spatial_modes(thinning, thr_s):
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    pos = hv.random_sparse_positions(k1, (1, 2, 64, 16), 8, 128)
+    elec = hv.random_sparse_positions(k2, (16,), 8, 128)
+    kw = dict(window=64, segments=8, seg_len=128, temporal_threshold=8,
+              spatial_thinning=thinning, spatial_threshold=thr_s)
+    np.testing.assert_array_equal(
+        np.asarray(encoder_pallas(pos, elec, interpret=True, **kw)),
+        np.asarray(encoder_ref(pos, elec, **kw)))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(max_examples=8, deadline=None)
+def test_encoder_kernel_property(seed, thr):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    pos = hv.random_sparse_positions(k1, (1, 1, 32, 8), 8, 128)
+    elec = hv.random_sparse_positions(k2, (8,), 8, 128)
+    kw = dict(window=32, segments=8, seg_len=128, temporal_threshold=thr)
+    np.testing.assert_array_equal(
+        np.asarray(encoder_pallas(pos, elec, interpret=True, **kw)),
+        np.asarray(encoder_ref(pos, elec, **kw)))
+
+
+def test_encode_frames_fused_matches_core_classifier():
+    """The fused kernel path must be bit-exact with core.classifier on the
+    paper configuration and real (synthetic-patient) codes."""
+    cfg = classifier.HDCConfig()
+    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    codes = jnp.asarray(ieeg.make_patient(3, n_seizures=1).records[0].codes[None, :2048])
+    fused = encode_frames_fused(params, codes, cfg, use_kernel=True)
+    unfused = classifier.encode_frames(params, codes, cfg)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# ---------------------------------------------------------------------------
+# hdc_am
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,c,words", [(1, 2, 32), (7, 2, 32), (300, 4, 32),
+                                       (64, 2, 16), (5, 8, 64)])
+@pytest.mark.parametrize("mode", ["overlap", "hamming"])
+def test_am_kernel_vs_ref(b, c, words, mode):
+    key = jax.random.PRNGKey(b + c)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.bits(k1, (b, words), dtype=jnp.uint32)
+    cls = jax.random.bits(k2, (c, words), dtype=jnp.uint32)
+    dim = words * 32
+    out_k = am_search_pallas(q, cls, mode=mode, dim=dim, interpret=True)
+    out_r = am_search_ref(q, cls, mode=mode, dim=dim)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_am_ops_leading_dims():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    q = jax.random.bits(k1, (3, 5, 32), dtype=jnp.uint32)
+    cls = jax.random.bits(k2, (2, 32), dtype=jnp.uint32)
+    out = am_search(q, cls, mode="overlap", dim=1024)
+    assert out.shape == (3, 5, 2)
+    np.testing.assert_array_equal(
+        np.asarray(out.reshape(-1, 2)),
+        np.asarray(am_search_ref(q.reshape(-1, 32), cls, mode="overlap", dim=1024)))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_am_kernel_score_bounds(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.bits(k1, (4, 32), dtype=jnp.uint32)
+    cls = jax.random.bits(k2, (2, 32), dtype=jnp.uint32)
+    s = np.asarray(am_search_pallas(q, cls, mode="overlap", dim=1024, interpret=True))
+    qpop = np.asarray(hv.popcount(q))
+    assert (s >= 0).all() and (s <= qpop[:, None]).all()
+
+
+# ---------------------------------------------------------------------------
+# dense_hdc
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,window,c,dim", [
+    (1, 1, 32, 4, 1024), (2, 2, 64, 8, 1024), (1, 1, 32, 16, 512)])
+def test_dense_kernel_vs_ref(b, f, window, c, dim):
+    key = jax.random.PRNGKey(b * 7 + f)
+    k1, k2 = jax.random.split(key)
+    item = jax.random.bits(k1, (b, f, window, c, dim // 32), dtype=jnp.uint32)
+    elec = jax.random.bits(k2, (c, dim // 32), dtype=jnp.uint32)
+    out_k = dense_encoder_pallas(item, elec, window=window, dim=dim, interpret=True)
+    out_r = dense_encoder_ref(item, elec, window=window, dim=dim)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_dense_fused_matches_core():
+    dcfg = dense.DenseHDCConfig()
+    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
+    codes = jnp.asarray(ieeg.make_patient(5, n_seizures=1).records[0].codes[None, :1024])
+    fused = dense_encode_frames_fused(dparams, codes, dcfg, use_kernel=True)
+    unfused = dense.encode_frames(dparams, codes, dcfg)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# ---------------------------------------------------------------------------
+# lbp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,c,bits", [(1, 100, 4, 6), (3, 257, 8, 6),
+                                        (2, 64, 64, 4), (1, 1000, 2, 8)])
+def test_lbp_kernel_vs_ref(b, t, c, bits):
+    x = jax.random.normal(jax.random.PRNGKey(t), (b, t, c))
+    out_k = lbp_pallas(x, bits=bits, interpret=True)
+    out_r = lbp_ref(x, bits=bits)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_lbp_matches_numpy_reference():
+    """Kernel output must agree with the numpy preprocessing used by the
+    synthetic-data generator (channel-major ieeg.lbp_codes_np)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2, 300, 5)).astype(np.float32)
+    out = np.asarray(lbp_codes(jnp.asarray(x), use_kernel=True))
+    ref = np.stack([ieeg.lbp_codes_np(x[i].T).T for i in range(2)])
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_lbp_long_stream_chunking():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 40006, 3))
+    out = lbp_codes(x, use_kernel=True)
+    assert out.shape == (1, 40000, 3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(lbp_ref(x)))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_lbp_codes_in_range(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 64, 3))
+    out = np.asarray(lbp_pallas(x, bits=6, interpret=True))
+    assert out.dtype == np.uint8 and (out < 64).all()
