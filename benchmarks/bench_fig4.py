@@ -3,6 +3,7 @@ bundling, sparse (with our optimizations) vs the dense HDC baseline.
 
 Synthetic one-shot protocol: train class HVs on seizure 1 of each patient,
 test on the remaining seizures; sweep the temporal-thinning target density.
+All datapaths run through the unified `HDCPipeline` (variant-dispatched).
 Derived values = (accuracy, mean delay seconds) per operating point."""
 
 from __future__ import annotations
@@ -11,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classifier, dense, hdtrain, metrics
+from repro.core import metrics
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 PATIENTS = (1, 2, 3, 11)
@@ -19,30 +21,31 @@ N_SEIZURES = 3
 DENSITIES = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5)
 
 
-def _eval_sparse(params, patients, cfg0, target) -> dict:
+def _eval_one_shot(base: HDCPipeline, patients, target: float | None) -> dict:
+    """One-shot train on seizure 1, test on the rest; `target` calibrates
+    the sparse temporal threshold (None for the dense variant)."""
     results = []
     for pat in patients:
         rec = pat.records[0]
         codes = jnp.asarray(rec.codes[None])
-        labels = jnp.asarray(ieeg.frame_labels(rec, cfg0.window)[None])
-        cfg = classifier.with_density_target(params, codes, cfg0, target)
-        chvs = hdtrain.train_one_shot(params, codes, labels, cfg)
+        labels = jnp.asarray(ieeg.frame_labels(rec, base.cfg.window)[None])
+        pipe = base if target is None else base.calibrate_density(codes, target)
+        pipe = pipe.train_one_shot(codes, labels)
         for rec2 in pat.records[1:]:
-            _, preds = classifier.infer(params, chvs,
-                                        jnp.asarray(rec2.codes[None]), cfg)
+            _, preds = pipe.infer(jnp.asarray(rec2.codes[None]))
             results.append(metrics.detection_metrics(
-                np.asarray(preds[0]), ieeg.onset_frame(rec2, cfg.window)))
+                np.asarray(preds[0]), ieeg.onset_frame(rec2, pipe.cfg.window)))
     return metrics.aggregate(results)
 
 
-def _eval_sparse_per_patient_best(params, patients, cfg0) -> dict:
+def _eval_sparse_per_patient_best(base: HDCPipeline, patients) -> dict:
     """The paper's 'stars': tune max density per patient (best delay among
     operating points with full detection, else best accuracy)."""
     per_patient = []
     for pat in patients:
         best = None
         for target in DENSITIES:
-            agg = _eval_sparse(params, [pat], cfg0, target)
+            agg = _eval_one_shot(base, [pat], target)
             key = (agg["detection_accuracy"], -agg["mean_delay_s"]
                    if np.isfinite(agg["mean_delay_s"]) else -1e9)
             if best is None or key > best[0]:
@@ -57,37 +60,25 @@ def _eval_sparse_per_patient_best(params, patients, cfg0) -> dict:
 
 
 def run() -> list[dict]:
-    cfg0 = classifier.HDCConfig()
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg0)
+    sparse = HDCPipeline.init(jax.random.PRNGKey(42), HDCConfig())
     patients = [ieeg.make_patient(p, n_seizures=N_SEIZURES) for p in PATIENTS]
     rows = []
     for target in DENSITIES:
-        agg = _eval_sparse(params, patients, cfg0, target)
+        agg = _eval_one_shot(sparse, patients, target)
         rows.append({"name": f"fig4.sparse_opt.density_{target}",
                      "us_per_call": "",
                      "derived": (f"acc={agg['detection_accuracy']:.2f}"
                                  f";delay_s={agg['mean_delay_s']:.2f}"
                                  f";fa={agg['false_alarm_rate']:.2f}")})
-    best = _eval_sparse_per_patient_best(params, patients, cfg0)
+    best = _eval_sparse_per_patient_best(sparse, patients)
     rows.append({"name": "fig4.sparse_opt.per_patient_tuned",
                  "us_per_call": "",
                  "derived": (f"acc={best['detection_accuracy']:.2f}"
                              f";delay_s={best['mean_delay_s']:.2f}"
                              " (paper: tuned sparse beats dense delay)")})
 
-    dcfg = dense.DenseHDCConfig()
-    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
-    results = []
-    for pat in patients:
-        rec = pat.records[0]
-        codes = jnp.asarray(rec.codes[None])
-        labels = jnp.asarray(ieeg.frame_labels(rec, dcfg.window)[None])
-        chvs = dense.train_one_shot(dparams, codes, labels, dcfg)
-        for rec2 in pat.records[1:]:
-            _, preds = dense.infer(dparams, chvs, jnp.asarray(rec2.codes[None]), dcfg)
-            results.append(metrics.detection_metrics(
-                np.asarray(preds[0]), ieeg.onset_frame(rec2, dcfg.window)))
-    agg = metrics.aggregate(results)
+    dense = HDCPipeline.init(jax.random.PRNGKey(7), HDCConfig(variant="dense"))
+    agg = _eval_one_shot(dense, patients, None)
     rows.append({"name": "fig4.dense_baseline",
                  "us_per_call": "",
                  "derived": (f"acc={agg['detection_accuracy']:.2f}"

@@ -9,14 +9,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import classifier, dense, hwmodel
+from repro.core import hwmodel
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 
 def run() -> list[dict]:
-    cfg = classifier.HDCConfig(spatial_threshold=1)
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
-    dparams = dense.init_params(jax.random.PRNGKey(7), dense.DenseHDCConfig())
+    # variant="sparse_naive" precomputes the packed IM tables, which the
+    # eager hwmodel sweep reads repeatedly (params are key-deterministic
+    # and identical across sparse variants)
+    cfg = HDCConfig(variant="sparse_naive", spatial_threshold=1)
+    params = HDCPipeline.init(jax.random.PRNGKey(42), cfg).params
+    dparams = HDCPipeline.init(jax.random.PRNGKey(7),
+                               HDCConfig(variant="dense")).params
     codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
     es, asc = hwmodel.calibration_factors(params, codes, cfg)
     reports = {v: hwmodel.report(v, dparams if v == "dense" else params,

@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import classifier, hwmodel
+from repro.core import hwmodel
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 CITED = [
@@ -18,8 +19,11 @@ CITED = [
 
 
 def run() -> list[dict]:
-    cfg = classifier.HDCConfig(spatial_threshold=1)
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    # variant="sparse_naive" precomputes the packed IM tables, which the
+    # eager hwmodel sweep reads repeatedly (params are key-deterministic
+    # and identical across sparse variants)
+    cfg = HDCConfig(variant="sparse_naive", spatial_threshold=1)
+    params = HDCPipeline.init(jax.random.PRNGKey(42), cfg).params
     codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
     es, asc = hwmodel.calibration_factors(params, codes, cfg)
     r = hwmodel.report("sparse_opt", params, codes, cfg, e_scale=es, a_scale=asc)

@@ -1,20 +1,23 @@
 """HDC inference-pipeline throughput: naive bit-domain vs CompIM
-position-domain vs fused Pallas-kernel path vs dense HDC.
+position-domain vs fused Pallas-kernel path vs dense HDC, all through the
+unified `HDCPipeline` (variant x backend dispatch).
 
 This is the TPU-side §Perf benchmark for the paper's technique: the CompIM
 insight on TPU = 18.3x smaller IM working set and no one-hot decode.  On this
-CPU container the kernel runs in interpret mode (slow Python), so the
+CPU container the kernel backend runs in interpret mode (slow Python), so the
 honest wall-clock comparison is between the pure-XLA pipelines; the kernel
 path's value is the HBM-traffic reduction reported in §Roofline.  Derived =
 predictions/s and bytes/prediction (analytic working-set model)."""
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_call
-from repro.core import classifier, dense
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 BATCH = 8           # streams
@@ -42,30 +45,28 @@ def run() -> list[dict]:
     preds_per_call = BATCH * (T // 256)
     rows = []
 
-    cfg = classifier.HDCConfig()
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    cfg = HDCConfig()
 
-    import dataclasses
     variants = {
         "sparse_naive": dataclasses.replace(cfg, variant="sparse_naive",
                                             spatial_threshold=1),
         "sparse_compim": dataclasses.replace(cfg, variant="sparse_compim"),
     }
     for name, vcfg in variants.items():
-        fn = jax.jit(lambda p, c, _cfg=vcfg: classifier.encode_frames(p, c, _cfg))
+        # init per variant so sparse_naive gets its precomputed packed IM
+        pipe = HDCPipeline.init(jax.random.PRNGKey(42), vcfg)
+        fn = lambda c, _p=pipe: _p.encode_frames(c)
         # the naive bit-domain pipeline runs ~300 s/call on 1 CPU core: one
         # timed iteration is plenty (jit is deterministic)
         iters = 1 if name == "sparse_naive" else 3
-        us = time_call(fn, params, codes, warmup=1, iters=iters)
+        us = time_call(fn, codes, warmup=1, iters=iters)
         rows.append({"name": f"throughput.{name}",
                      "us_per_call": f"{us:.0f}",
                      "derived": (f"pred/s={preds_per_call / (us * 1e-6):.0f}"
                                  f";bytes/pred={_bytes_per_prediction(name, cfg):.0f}")})
 
-    dcfg = dense.DenseHDCConfig()
-    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
-    fn = jax.jit(lambda p, c: dense.encode_frames(p, c, dcfg))
-    us = time_call(fn, dparams, codes)
+    dense = HDCPipeline.init(jax.random.PRNGKey(7), HDCConfig(variant="dense"))
+    us = time_call(lambda c: dense.encode_frames(c), codes)
     rows.append({"name": "throughput.dense",
                  "us_per_call": f"{us:.0f}",
                  "derived": (f"pred/s={preds_per_call / (us * 1e-6):.0f}"

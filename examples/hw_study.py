@@ -3,7 +3,7 @@
 Walks the four design points (dense -> sparse-naive -> +CompIM ->
 +no-thinning) through the switching-activity cost model and prints the
 paper-style breakdowns and ratios, plus the density-hyperparameter trade-off
-on one patient.
+on one patient.  Functional datapaths come from the unified `HDCPipeline`.
 
     PYTHONPATH=src python examples/hw_study.py
 """
@@ -12,22 +12,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classifier, dense, hdtrain, hwmodel, metrics
+from repro.core import hwmodel, metrics
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 
 def main():
-    cfg = classifier.HDCConfig(spatial_threshold=1)
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
-    dparams = dense.init_params(jax.random.PRNGKey(7), dense.DenseHDCConfig())
+    # variant="sparse_naive" precomputes the packed IM tables, which the
+    # eager hwmodel sweep reads repeatedly (params are key-deterministic
+    # and identical across sparse variants)
+    cfg = HDCConfig(variant="sparse_naive", spatial_threshold=1)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
+    dense_pipe = HDCPipeline.init(jax.random.PRNGKey(7), HDCConfig(variant="dense"))
     codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
 
-    es, asc = hwmodel.calibration_factors(params, codes, cfg)
+    es, asc = hwmodel.calibration_factors(pipe.params, codes, cfg)
     print("== energy/area across design points (16nm model, calibrated to "
           "the paper's optimized design) ==")
     reports = {}
     for v in hwmodel.VARIANTS:
-        p = dparams if v == "dense" else params
+        p = dense_pipe.params if v == "dense" else pipe.params
         r = hwmodel.report(v, p, codes, cfg, e_scale=es, a_scale=asc)
         reports[v] = r
         print(f"\n{v}: E={r['energy_total_nj']:.2f} nJ/pred, "
@@ -49,17 +53,17 @@ def main():
     rec = pat.records[0]
     c = jnp.asarray(rec.codes[None])
     labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
+    # the detection sweep runs the (fast) CompIM datapath — same params
+    sweep_pipe = pipe.with_cfg(variant="sparse_compim")
     for target in (0.1, 0.2, 0.3, 0.5):
-        pcfg = classifier.with_density_target(params, c, cfg, target)
-        chvs = hdtrain.train_one_shot(params, c, labels, pcfg)
+        ppipe = sweep_pipe.calibrate_density(c, target).train_one_shot(c, labels)
         rs = []
         for rec2 in pat.records[1:]:
-            _, preds = classifier.infer(params, chvs,
-                                        jnp.asarray(rec2.codes[None]), pcfg)
+            _, preds = ppipe.infer(jnp.asarray(rec2.codes[None]))
             rs.append(metrics.detection_metrics(
-                np.asarray(preds[0]), ieeg.onset_frame(rec2, pcfg.window)))
+                np.asarray(preds[0]), ieeg.onset_frame(rec2, ppipe.cfg.window)))
         agg = metrics.aggregate(rs)
-        print(f"  max density {target:.2f} (thr={pcfg.temporal_threshold:3d}): "
+        print(f"  max density {target:.2f} (thr={ppipe.cfg.temporal_threshold:3d}): "
               f"acc={agg['detection_accuracy']:.2f} "
               f"delay={agg['mean_delay_s']:.1f}s")
 

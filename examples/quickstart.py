@@ -2,7 +2,8 @@
 
 Trains class hypervectors on one seizure of a synthetic patient and detects
 the remaining seizures — the paper's core pipeline end to end (CompIM
-position-domain datapath, spatial OR bundling, calibrated temporal thinning).
+position-domain datapath, spatial OR bundling, calibrated temporal thinning),
+through the unified `HDCPipeline` surface.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,33 +12,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classifier, hdtrain, hv, metrics
+from repro.core import hv, metrics
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 
 def main():
-    cfg = classifier.HDCConfig()          # paper config: D=1024, 8 segments,
+    cfg = HDCConfig()                     # paper config: D=1024, 8 segments,
     print(f"config: D={cfg.dim}, {cfg.segments} segments, "
-          f"{cfg.channels} channels, window={cfg.window}")
+          f"{cfg.channels} channels, window={cfg.window}, "
+          f"variant={cfg.variant}, backend={cfg.backend}")
 
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
     patient = ieeg.make_patient(11, n_seizures=4)
 
     # --- one-shot training on seizure 1 -----------------------------------
     rec = patient.records[0]
     codes = jnp.asarray(rec.codes[None])
     labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
-    cfg = classifier.with_density_target(params, codes, cfg, target=0.25)
-    print(f"calibrated temporal threshold: {cfg.temporal_threshold} "
+    pipe = pipe.calibrate_density(codes, target=0.25)
+    print(f"calibrated temporal threshold: {pipe.cfg.temporal_threshold} "
           f"(target max density 25%)")
-    class_hvs = hdtrain.train_one_shot(params, codes, labels, cfg)
-    print("class HV densities:", np.asarray(hv.density(class_hvs, cfg.dim)))
+    pipe = pipe.train_one_shot(codes, labels)
+    print("class HV densities:", np.asarray(hv.density(pipe.class_hvs, cfg.dim)))
 
     # --- detect the held-out seizures --------------------------------------
     results = []
     for i, rec2 in enumerate(patient.records[1:], start=2):
-        _, preds = classifier.infer(params, class_hvs,
-                                    jnp.asarray(rec2.codes[None]), cfg)
+        _, preds = pipe.infer(jnp.asarray(rec2.codes[None]))
         r = metrics.detection_metrics(np.asarray(preds[0]),
                                       ieeg.onset_frame(rec2, cfg.window))
         results.append(r)

@@ -1,9 +1,13 @@
 """Serving example: batched multi-patient seizure-detection service.
 
-Simulates a fleet of implant streams hitting one accelerator: requests are
-(patient_id, 0.5 s of 64-channel iEEG); the service runs LBP -> sparse-HDC
-encode (fused Pallas kernel) -> AM search and returns per-frame decisions.
-Demonstrates request batching, per-patient class HVs, and the kernel path.
+Simulates a fleet of implant streams hitting one accelerator through
+`repro.serve.engine`: requests are (patient_id, 0.5 s of 64-channel LBP
+codes); the engine gathers them by patient, encodes each patient datapath
+once (each patient carries its OWN calibrated temporal threshold — the old
+per-request loop silently encoded everyone with patient 0's config), and
+scores all frames with ONE batched AM search against the stacked per-patient
+class-HV bank.  Also demonstrates the streaming `SeizureSession` API, which
+carries the temporal accumulator across sub-window chunks.
 
     PYTHONPATH=src python examples/serve_hdc.py
 """
@@ -14,67 +18,63 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classifier, hdtrain, metrics
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
-from repro.kernels.hdc_am.ops import am_search
-from repro.kernels.hdc_encoder.ops import encode_frames_fused
-from repro.kernels.lbp.ops import lbp_codes
+from repro.serve.engine import SeizureSession, ServingEngine
 
 N_PATIENTS = 3
 BATCH = 6          # concurrent streams per service call
 
 
 def main():
-    cfg = classifier.HDCConfig()
-    params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    cfg = HDCConfig(backend="pallas")       # fused kernels (interpret on CPU)
+    base = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
 
-    # --- provision per-patient class HVs (one-shot, offline) ---------------
+    # --- provision per-patient pipelines (one-shot, offline) ---------------
     patients = [ieeg.make_patient(pid, n_seizures=2) for pid in range(1, N_PATIENTS + 1)]
-    class_bank = []
-    cfgs = []
-    for pat in patients:
+    # distinct per-patient density targets -> distinct calibrated thresholds,
+    # so the output visibly exercises the per-patient-config path
+    targets = (0.10, 0.25, 0.50)
+    pipelines = {}
+    for pid, pat in enumerate(patients):
         rec = pat.records[0]
         codes = jnp.asarray(rec.codes[None])
         labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
-        pcfg = classifier.with_density_target(params, codes, cfg, 0.25)
-        class_bank.append(hdtrain.train_one_shot(params, codes, labels, pcfg))
-        cfgs.append(pcfg)
-    print(f"provisioned {N_PATIENTS} patients (one-shot class HVs)")
+        pipe = base.calibrate_density(codes, target=targets[pid % len(targets)])
+        pipelines[pid] = pipe.train_one_shot(codes, labels)
+    engine = ServingEngine(pipelines)
+    thresholds = [pipelines[p].cfg.temporal_threshold for p in range(N_PATIENTS)]
+    print(f"provisioned {N_PATIENTS} patients (one-shot class HVs, "
+          f"temporal thresholds {thresholds})")
 
     # --- serve a batch of requests -----------------------------------------
-    # each request: raw 0.5 s window (256 samples + LBP halo) x 64 channels
-    reqs, req_pids = [], []
+    # each request: one 0.5 s window of LBP codes x 64 channels
+    requests = []
     for i in range(BATCH):
         pid = i % N_PATIENTS
         rec = patients[pid].records[1]
-        t0 = (1000 + 300 * i)
-        # raw-like signal reconstructed from codes is not available; use the
-        # precomputed codes window directly (LBP kernel demo below uses raw)
-        reqs.append(rec.codes[t0:t0 + cfg.window])
-        req_pids.append(pid)
-    codes_batch = jnp.asarray(np.stack(reqs))            # (B, 256, 64)
+        t0 = 1000 + 300 * i
+        requests.append((pid, rec.codes[t0:t0 + cfg.window]))
 
     t0 = time.perf_counter()
-    pcfg = cfgs[0]
-    frames = encode_frames_fused(params, codes_batch, pcfg)   # (B, 1, W)
-    all_scores = []
-    for i, pid in enumerate(req_pids):
-        scores = am_search(frames[i], class_bank[pid], mode="overlap",
-                           dim=cfg.dim)
-        all_scores.append(np.asarray(scores))
+    decisions = engine.serve(requests)
     dt = (time.perf_counter() - t0) * 1e3
-    for i, (pid, s) in enumerate(zip(req_pids, all_scores)):
-        pred = int(np.argmax(s[0]))
-        print(f"request {i}: patient {pid + 1} scores={s[0].tolist()} "
-              f"-> {'ICTAL' if pred == 1 else 'interictal'}")
+    for d in decisions:
+        print(f"request {d.request_id}: patient {d.patient_id + 1} "
+              f"scores={d.scores[0].tolist()} "
+              f"-> {'ICTAL' if d.predictions[0] == 1 else 'interictal'}")
     print(f"\nbatch of {BATCH} served in {dt:.1f} ms "
-          "(interpret-mode kernel on CPU; TPU runs the Mosaic kernel)")
+          "(interpret-mode kernels on CPU; TPU runs the Mosaic kernels)")
 
-    # --- LBP kernel demo on raw signal --------------------------------------
-    raw = jax.random.normal(jax.random.PRNGKey(1), (2, 262, 64))
-    codes = lbp_codes(raw)
-    print(f"lbp kernel: raw {raw.shape} -> codes {codes.shape} "
-          f"(range 0..{int(codes.max())})")
+    # --- streaming session: sub-window chunks ------------------------------
+    sess = SeizureSession(pipelines[0])
+    stream = patients[0].records[1].codes[:2 * cfg.window]
+    decs = []
+    for chunk_start in range(0, stream.shape[0], 100):   # 100-cycle chunks
+        decs += sess.push(stream[chunk_start:chunk_start + 100])
+    print(f"streamed {stream.shape[0]} cycles in 100-cycle chunks -> "
+          f"{len(decs)} frame decisions "
+          f"({sess.cycles_buffered} cycles buffered toward the next frame)")
 
 
 if __name__ == "__main__":

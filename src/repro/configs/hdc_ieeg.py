@@ -9,7 +9,9 @@ star of Fig. 4), spatial bundling WITHOUT thinning (the proposed design),
 Variants (--override variant=...):
   sparse_compim  (default) the optimized accelerator (CompIM + OR bundling)
   sparse_naive   the baseline accelerator (Fig. 3a)
-plus core.dense for the dense-HDC comparison system.
+  dense          the dense-HDC comparison system of [1]
+All three (and the jnp/pallas backend choice) are routed by the unified
+repro.core.pipeline.HDCPipeline surface.
 """
 
 from repro.core.classifier import HDCConfig

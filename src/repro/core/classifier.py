@@ -8,11 +8,16 @@ Three selectable datapaths, bit-exact with their hardware counterparts:
                       bundling with thinning (adder tree) or without (OR tree),
                       per ``spatial_thinning``.
 * ``dense``         — dense-HDC baseline of [1]: XOR binding, majority
-                      bundling, Hamming AM (see core/dense.py).
+                      bundling, Hamming AM (routed by ``core.pipeline``).
 
 Input is a stream of LBP codes (batch, time, channels) uint8; every
 ``window`` cycles the temporal bundler emits one time-frame HV which the AM
 scores against the class HVs.
+
+This module holds the sparse reference datapaths and the unified ``HDCConfig``.
+Prefer the variant-dispatched ``repro.core.pipeline.HDCPipeline`` surface,
+which routes all three variants (including ``dense``) and both the pure-jnp
+and fused-Pallas backends behind one API.
 """
 
 from __future__ import annotations
@@ -34,6 +39,7 @@ class HDCConfig:
     lbp_bits: int = 6
     window: int = 256           # temporal bundling length (one time frame)
     variant: str = "sparse_compim"   # sparse_naive | sparse_compim | dense
+    backend: str = "jnp"             # jnp (pure-XLA) | pallas (fused kernels)
     spatial_thinning: bool = False   # paper-optimized: False (OR tree)
     spatial_threshold: int = 2       # used when spatial_thinning
     temporal_threshold: int = 130    # paper Sec. IV-B operating point
@@ -55,8 +61,10 @@ class HDCConfig:
 
 
 def init_params(key: jax.Array, cfg: HDCConfig) -> im.IMParams:
+    # only the naive bit-domain datapath reads the packed IM tables
     return im.make_im(key, channels=cfg.channels, codes=cfg.codes,
-                      dim=cfg.dim, segments=cfg.segments)
+                      dim=cfg.dim, segments=cfg.segments,
+                      precompute_packed=cfg.variant == "sparse_naive")
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +85,9 @@ def spatial_encode(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax
             return bundling.spatial_bundle_thinned_positions(
                 bound, cfg.dim, cfg.segments, cfg.spatial_threshold)
         return bundling.spatial_bundle_or_positions(bound, cfg.dim, cfg.segments)
+    if cfg.variant == "dense":
+        raise ValueError("variant='dense' is routed by repro.core.pipeline."
+                         "HDCPipeline (this module holds the sparse datapaths)")
     raise ValueError(f"unknown sparse variant {cfg.variant!r}")
 
 
@@ -84,13 +95,19 @@ def spatial_encode(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax
 # full encoder: code stream -> time-frame HVs
 # ---------------------------------------------------------------------------
 
+def frame_view(codes: jax.Array, window: int) -> jax.Array:
+    """(B, T, C) code stream -> (B, F, window, C), truncating the ragged
+    tail.  The single home of the framing rule (all encoders share it)."""
+    b, t, c = codes.shape
+    frames = t // window
+    return codes[:, : frames * window].reshape(b, frames, window, c)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def encode_frames(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
     """(B, T, channels) uint8 codes -> (B, T // window, W) packed frame HVs."""
-    b, t, c = codes.shape
-    frames = t // cfg.window
-    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
-    spatial = spatial_encode(params, codes, cfg)       # (B, F, window, W)
+    framed = frame_view(codes, cfg.window)
+    spatial = spatial_encode(params, framed, cfg)      # (B, F, window, W)
     return bundling.temporal_bundle(spatial, cfg.dim, cfg.temporal_threshold)
 
 
@@ -98,10 +115,8 @@ def encode_frames(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.
 def frame_counts(params: im.IMParams, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
     """Temporal accumulator counts per frame (B, F, D) — used to calibrate the
     temporal threshold for a target maximum density (paper Fig. 4 sweep)."""
-    b, t, c = codes.shape
-    frames = t // cfg.window
-    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
-    spatial = spatial_encode(params, codes, cfg)
+    framed = frame_view(codes, cfg.window)
+    spatial = spatial_encode(params, framed, cfg)
     return bundling.temporal_counts(spatial, cfg.dim)
 
 

@@ -1,99 +1,75 @@
-"""Dense HDC baseline (Burrello et al. [1]) — the paper's comparison system.
+"""DEPRECATED shim — the dense-HDC baseline now lives behind the unified
+``repro.core.pipeline.HDCPipeline`` surface (``HDCConfig(variant="dense")``).
 
-Dense ops: random p=50% item/electrode HVs; binding = XOR; spatial bundling =
-per-element majority over the 64 channels; temporal bundling = majority over
-the 256-cycle window; AM similarity = D - Hamming.  Same D=1024 as the sparse
-system for the apples-to-apples hardware comparison (paper Fig. 5 / Table I).
+This module keeps the old entry points importable for one PR:
+
+* ``DenseHDCConfig(...)``  -> unified ``HDCConfig`` with ``variant="dense"``
+* ``DenseIMParams``        -> re-export of ``repro.core.im.DenseIMParams``
+* ``init_params`` / ``encode_frames`` / ``infer`` / ``train_one_shot``
+                           -> thin delegates to the pipeline dispatch
+
+New code should use::
+
+    from repro.core.pipeline import HDCConfig, HDCPipeline
+    pipe = HDCPipeline.init(key, HDCConfig(variant="dense"))
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import am, hv
+from repro.core import im as _im
+from repro.core import pipeline as _pipeline
+from repro.core.im import DenseIMParams  # noqa: F401  (legacy import path)
+from repro.core.pipeline import HDCConfig
 
-
-@dataclass(frozen=True)
-class DenseHDCConfig:
-    dim: int = 1024
-    channels: int = 64
-    lbp_bits: int = 6
-    window: int = 256
-    n_classes: int = 2
-
-    @property
-    def codes(self) -> int:
-        return 1 << self.lbp_bits
-
-    @property
-    def words(self) -> int:
-        return self.dim // 32
+warnings.warn("repro.core.dense is deprecated; use repro.core.pipeline."
+              "HDCPipeline with HDCConfig(variant='dense')",
+              DeprecationWarning, stacklevel=2)
 
 
-@dataclass(frozen=True)
-class DenseIMParams:
-    item_packed: jax.Array   # (channels, codes, W)
-    elec_packed: jax.Array   # (channels, W)
-    dim: int
+def DenseHDCConfig(dim: int = 1024, channels: int = 64, lbp_bits: int = 6,
+                   window: int = 256, n_classes: int = 2) -> HDCConfig:
+    """Legacy constructor: returns the merged unified config.  Accepts the
+    old dataclass's field order positionally; it is a factory function now,
+    so isinstance/dataclasses.fields uses must migrate to HDCConfig."""
+    return HDCConfig(variant="dense", dim=dim, channels=channels,
+                     lbp_bits=lbp_bits, window=window, n_classes=n_classes)
 
 
-jax.tree_util.register_dataclass(
-    DenseIMParams, data_fields=["item_packed", "elec_packed"], meta_fields=["dim"])
+def _coerce(cfg) -> HDCConfig:
+    import dataclasses
+    if isinstance(cfg, HDCConfig):
+        return cfg if cfg.variant == "dense" else dataclasses.replace(cfg, variant="dense")
+    # duck-typed legacy config object
+    return DenseHDCConfig(dim=cfg.dim, channels=cfg.channels,
+                          lbp_bits=cfg.lbp_bits, window=cfg.window,
+                          n_classes=cfg.n_classes)
 
 
-def init_params(key: jax.Array, cfg: DenseHDCConfig) -> DenseIMParams:
-    k1, k2 = jax.random.split(key)
-    return DenseIMParams(
-        item_packed=hv.random_dense_packed(k1, (cfg.channels, cfg.codes), cfg.dim),
-        elec_packed=hv.random_dense_packed(k2, (cfg.channels,), cfg.dim),
-        dim=cfg.dim,
-    )
+def init_params(key: jax.Array, cfg) -> DenseIMParams:
+    cfg = _coerce(cfg)
+    return _im.make_dense_im(key, channels=cfg.channels, codes=cfg.codes,
+                             dim=cfg.dim)
 
 
-def spatial_encode(params: DenseIMParams, codes: jax.Array, cfg: DenseHDCConfig) -> jax.Array:
-    """(..., channels) codes -> (..., W) majority-bundled HV."""
-    ch = jnp.arange(cfg.channels)
-    data = params.item_packed[ch, codes.astype(jnp.int32)]       # (..., C, W)
-    bound = jnp.bitwise_xor(data, params.elec_packed)            # XOR binding
-    counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)     # (..., D)
-    return hv.pack_bits((counts * 2 > cfg.channels).astype(jnp.uint8))
+def spatial_encode(params: DenseIMParams, codes: jax.Array, cfg) -> jax.Array:
+    return _pipeline.spatial_encode(params, codes, _coerce(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def encode_frames(params: DenseIMParams, codes: jax.Array, cfg: DenseHDCConfig) -> jax.Array:
-    """(B, T, channels) codes -> (B, F, W) majority time-frame HVs."""
-    b, t, c = codes.shape
-    frames = t // cfg.window
-    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
-    spatial = spatial_encode(params, codes, cfg)                 # (B, F, win, W)
-    counts = hv.unpacked_counts(spatial, axis=-2, dim=cfg.dim)   # (B, F, D)
-    return hv.pack_bits((counts * 2 > cfg.window).astype(jnp.uint8))
+def encode_frames(params: DenseIMParams, codes: jax.Array, cfg) -> jax.Array:
+    return _pipeline._encode_frames(params, codes, _coerce(cfg))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def infer(params: DenseIMParams, class_hvs: jax.Array, codes: jax.Array,
-          cfg: DenseHDCConfig) -> tuple[jax.Array, jax.Array]:
-    q = encode_frames(params, codes, cfg)
-    scores = am.am_scores_dense(q, class_hvs, cfg.dim)
-    return scores, am.am_predict(scores)
+          cfg) -> tuple[jax.Array, jax.Array]:
+    pipe = _pipeline.HDCPipeline(params=params, cfg=_coerce(cfg),
+                                 class_hvs=class_hvs)
+    return pipe.infer(codes)
 
 
 def train_one_shot(params: DenseIMParams, codes: jax.Array, labels: jax.Array,
-                   cfg: DenseHDCConfig) -> jax.Array:
-    """One-shot class HVs: majority-bundle the frame HVs of each class.
-
-    codes: (B, T, channels); labels: (B, F) int32 per-frame class ids.
-    Returns (n_classes, W) packed class HVs.
-    """
-    q = encode_frames(params, codes, cfg)                        # (B, F, W)
-    bits = hv.unpack_bits(q, cfg.dim).astype(jnp.int32)          # (B, F, D)
-    flat_bits = bits.reshape(-1, cfg.dim)
-    flat_labels = labels.reshape(-1)
-    onehot = jax.nn.one_hot(flat_labels, cfg.n_classes, dtype=jnp.int32)
-    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)
-    n_per_class = jnp.sum(onehot, axis=0)[:, None]
-    return hv.pack_bits((counts * 2 > n_per_class).astype(jnp.uint8))
+                   cfg) -> jax.Array:
+    return _pipeline._train_one_shot(params, codes, labels, _coerce(cfg))

@@ -1,20 +1,21 @@
-"""One-shot training for the sparse HDC classifier (paper Sec. II-D).
-
-Class HVs are computed through the SAME encoder as inference, on labeled data
-from one seizure: all time-frame HVs of a class are bundled with thinning to
-50% density (paper: "an additional bundling when training with thinning to
-50% density").
+"""DEPRECATED shim — one-shot training now lives on the unified pipeline:
+``HDCPipeline.train_one_shot`` (repro.core.pipeline) dispatches the sparse
+thinned-bundling rule (paper Sec. II-D) and the dense majority rule behind
+one surface.  This module keeps the old sparse entry point for one PR.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.core import classifier, hv
+import jax
+
+from repro.core import pipeline as _pipeline
 from repro.core.classifier import HDCConfig
-from repro.core.bundling import threshold_for_density
 from repro.core.im import IMParams
+
+warnings.warn("repro.core.hdtrain is deprecated; use repro.core.pipeline."
+              "HDCPipeline.train_one_shot", DeprecationWarning, stacklevel=2)
 
 
 def train_one_shot(params: IMParams, codes: jax.Array, labels: jax.Array,
@@ -23,16 +24,4 @@ def train_one_shot(params: IMParams, codes: jax.Array, labels: jax.Array,
 
     Returns (n_classes, W) packed class HVs thinned to ~cfg.class_density.
     """
-    frames = classifier.encode_frames(params, codes, cfg)        # (B, F, W)
-    bits = hv.unpack_bits(frames, cfg.dim).astype(jnp.int32)     # (B, F, D)
-    flat_bits = bits.reshape(-1, cfg.dim)
-    flat_labels = labels.reshape(-1)
-    onehot = jax.nn.one_hot(flat_labels, cfg.n_classes, dtype=jnp.int32)
-    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)          # (n_cls, D)
-
-    # per-class thinning threshold targeting class_density (>= 1)
-    def thin(cls_counts):
-        thr = threshold_for_density(cls_counts[None, :], cfg.class_density)
-        return hv.threshold_pack(cls_counts[None, :], thr)[0]
-
-    return jax.vmap(thin)(counts)
+    return _pipeline._train_one_shot(params, codes, labels, cfg)

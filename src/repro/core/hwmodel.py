@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core import binding, bundling, hv, im
 from repro.core.classifier import HDCConfig
-from repro.core import dense as dense_mod
+from repro.core.im import DenseIMParams
 
 VARIANTS = ("dense", "sparse_naive", "sparse_compim", "sparse_opt")
 
@@ -181,7 +181,7 @@ def _sparse_signals(params: im.IMParams, codes: jax.Array, cfg: HDCConfig,
     return sig
 
 
-def _dense_signals(params: dense_mod.DenseIMParams, codes: jax.Array,
+def _dense_signals(params: DenseIMParams, codes: jax.Array,
                    cfg: HDCConfig) -> dict[str, jax.Array]:
     t = codes.shape[0]
     ch = jnp.arange(cfg.channels)

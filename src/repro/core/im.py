@@ -24,11 +24,20 @@ from repro.core import hv
 
 @dataclass(frozen=True)
 class IMParams:
-    """Design-time random codebooks for the sparse HDC classifier."""
+    """Design-time random codebooks for the sparse HDC classifier.
+
+    The packed (bit-domain) tables are derived from the positions; `make_im`
+    precomputes them once so the `sparse_naive` datapath does not re-expand
+    the full (channels, codes, W) table on every eager lookup.  They are
+    optional pytree leaves: an IMParams built without them (e.g. from an old
+    checkpoint) falls back to deriving them on access.
+    """
     item_pos: jax.Array       # (channels, codes, S) uint8 — CompIM contents
     elec_pos: jax.Array       # (channels, S) uint8 — electrode HV positions
     dim: int
     segments: int
+    item_packed_cache: jax.Array | None = None   # (channels, codes, W) uint32
+    elec_packed_cache: jax.Array | None = None   # (channels, W) uint32
 
     @property
     def seg_len(self) -> int:
@@ -37,26 +46,66 @@ class IMParams:
     @property
     def item_packed(self) -> jax.Array:
         """(channels, codes, W) — the baseline (uncompressed) IM contents."""
+        if self.item_packed_cache is not None:
+            return self.item_packed_cache
         return hv.positions_to_packed(self.item_pos, self.dim, self.segments)
 
     @property
     def elec_packed(self) -> jax.Array:
+        if self.elec_packed_cache is not None:
+            return self.elec_packed_cache
         return hv.positions_to_packed(self.elec_pos, self.dim, self.segments)
 
 
 jax.tree_util.register_dataclass(
-    IMParams, data_fields=["item_pos", "elec_pos"], meta_fields=["dim", "segments"])
+    IMParams,
+    data_fields=["item_pos", "elec_pos", "item_packed_cache", "elec_packed_cache"],
+    meta_fields=["dim", "segments"])
 
 
 def make_im(key: jax.Array, *, channels: int, codes: int, dim: int,
-            segments: int) -> IMParams:
+            segments: int, precompute_packed: bool = True) -> IMParams:
+    """``precompute_packed=False`` skips the bit-domain caches — the CompIM
+    datapath never reads them, and carrying the full (channels, codes, W)
+    table would reintroduce exactly the working set CompIM avoids."""
     k1, k2 = jax.random.split(key)
     seg_len = dim // segments
+    item_pos = hv.random_sparse_positions(k1, (channels, codes), segments, seg_len)
+    elec_pos = hv.random_sparse_positions(k2, (channels,), segments, seg_len)
     return IMParams(
-        item_pos=hv.random_sparse_positions(k1, (channels, codes), segments, seg_len),
-        elec_pos=hv.random_sparse_positions(k2, (channels,), segments, seg_len),
+        item_pos=item_pos,
+        elec_pos=elec_pos,
         dim=dim,
         segments=segments,
+        item_packed_cache=(hv.positions_to_packed(item_pos, dim, segments)
+                           if precompute_packed else None),
+        elec_packed_cache=(hv.positions_to_packed(elec_pos, dim, segments)
+                           if precompute_packed else None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense item memory (the dense-HDC comparison system's codebooks)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DenseIMParams:
+    """Random p=50% packed codebooks for the dense-HDC baseline datapath."""
+    item_packed: jax.Array   # (channels, codes, W)
+    elec_packed: jax.Array   # (channels, W)
+    dim: int
+
+
+jax.tree_util.register_dataclass(
+    DenseIMParams, data_fields=["item_packed", "elec_packed"], meta_fields=["dim"])
+
+
+def make_dense_im(key: jax.Array, *, channels: int, codes: int, dim: int) -> DenseIMParams:
+    k1, k2 = jax.random.split(key)
+    return DenseIMParams(
+        item_packed=hv.random_dense_packed(k1, (channels, codes), dim),
+        elec_packed=hv.random_dense_packed(k2, (channels,), dim),
+        dim=dim,
     )
 
 

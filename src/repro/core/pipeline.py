@@ -1,0 +1,298 @@
+"""Unified HDC pipeline: one variant-dispatched encode/train/infer surface.
+
+The paper compares three datapaths — ``sparse_naive`` (packed IM, one-hot
+decoder + barrel-shift binding, adder-tree bundling), ``sparse_compim``
+(position-domain CompIM binding, OR-tree bundling) and ``dense`` (XOR binding,
+majority bundling, Hamming AM).  ``HDCPipeline`` routes all three behind one
+API, selected by ``HDCConfig.variant``, and additionally dispatches each stage
+across two execution backends selected by ``HDCConfig.backend``:
+
+* ``"jnp"``    — the pure-XLA reference datapaths (bit-exact with hardware).
+* ``"pallas"`` — the fused TPU kernels (``kernels/hdc_encoder``,
+  ``kernels/dense_hdc``, ``kernels/hdc_am``); interpret mode on CPU.
+
+The two backends are bit-exact for every variant (tested in
+``tests/test_unified_pipeline.py``), so the backend is a deployment choice,
+not a modeling choice.
+
+Quickstart::
+
+    cfg = HDCConfig(variant="sparse_compim", backend="pallas")
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
+    pipe = pipe.calibrate_density(train_codes, target=0.25)
+    pipe = pipe.train_one_shot(train_codes, train_labels)
+    scores, preds = pipe.infer(test_codes)
+
+``HDCPipeline`` is a frozen pytree: params and class HVs are leaves, the
+config is static metadata, so pipelines pass through jit/vmap unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import am, binding, bundling, classifier, hv
+from repro.core import im as im_mod
+from repro.core.classifier import HDCConfig
+from repro.core.im import DenseIMParams, IMParams
+from repro.kernels.dense_hdc.ops import dense_encode_frames_fused
+from repro.kernels.hdc_am.ops import am_search
+from repro.kernels.hdc_encoder.ops import encode_frames_fused
+
+VARIANTS = ("sparse_naive", "sparse_compim", "dense")
+BACKENDS = ("jnp", "pallas")
+
+# Re-exported so downstream code can `from repro.core.pipeline import
+# HDCConfig` as its single entry point (DenseHDCConfig merged into it:
+# construct with variant="dense").
+__all__ = ["HDCConfig", "HDCPipeline", "VARIANTS", "BACKENDS", "spatial_encode"]
+
+
+def _check_cfg(cfg: HDCConfig) -> None:
+    if cfg.variant not in VARIANTS:
+        raise ValueError(f"unknown variant {cfg.variant!r}; expected one of {VARIANTS}")
+    if cfg.backend not in BACKENDS:
+        raise ValueError(f"unknown backend {cfg.backend!r}; expected one of {BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# variant-dispatched stages (module-level so jit caches are shared across
+# pipeline instances with the same static cfg)
+# ---------------------------------------------------------------------------
+
+def spatial_encode(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(..., channels) LBP codes -> (..., W) packed bundled HV, any variant.
+
+    Unlike ``classifier.spatial_encode`` this also routes ``dense``
+    (XOR binding + per-element channel majority)."""
+    if cfg.variant == "dense":
+        ch = jnp.arange(cfg.channels)
+        data = params.item_packed[ch, codes.astype(jnp.int32)]   # (..., C, W)
+        bound = binding.bind_xor(data, params.elec_packed)
+        counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
+        return hv.majority_pack(counts, cfg.channels, cfg.dim)
+    return classifier.spatial_encode(params, codes, cfg)
+
+
+def _encode_frames_jnp(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    if cfg.variant != "dense":
+        # delegate to the sparse reference datapath (single source of truth)
+        return classifier.encode_frames(params, codes, cfg)
+    framed = classifier.frame_view(codes, cfg.window)
+    spatial = spatial_encode(params, framed, cfg)               # (B, F, win, W)
+    counts = hv.unpacked_counts(spatial, axis=-2, dim=cfg.dim)
+    return hv.majority_pack(counts, cfg.window, cfg.dim)
+
+
+def _fused_sparse_cfg(cfg: HDCConfig) -> HDCConfig:
+    """The fused encoder kernel computes the position-domain datapath; the
+    naive bit-domain variant is bit-identical to it with spatial thinning
+    forced on at the naive threshold (binding-domain equivalence, paper
+    Sec. III-A)."""
+    if cfg.variant == "sparse_naive":
+        return replace(cfg, spatial_thinning=True)
+    return cfg
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _encode_frames(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(B, T, channels) uint8 codes -> (B, F, W) packed frame HVs."""
+    if cfg.backend == "pallas":
+        if cfg.variant == "dense":
+            return dense_encode_frames_fused(params, codes, cfg)
+        return encode_frames_fused(params, codes, _fused_sparse_cfg(cfg))
+    return _encode_frames_jnp(params, codes, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _frame_counts(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """Temporal accumulator counts per frame (B, F, D) int32 — the traced
+    pre-threshold state used for density calibration and streaming."""
+    if cfg.variant != "dense":
+        return classifier.frame_counts(params, codes, cfg)
+    framed = classifier.frame_view(codes, cfg.window)
+    spatial = spatial_encode(params, framed, cfg)
+    return bundling.temporal_counts(spatial, cfg.dim)
+
+
+def _am_scores(frames: jax.Array, class_hvs: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(..., W) frame HVs vs (C, W) class HVs -> (..., C) similarity."""
+    mode = "hamming" if cfg.variant == "dense" else "overlap"
+    if cfg.backend == "pallas":
+        return am_search(frames, class_hvs, mode=mode, dim=cfg.dim)
+    if cfg.variant == "dense":
+        return am.am_scores_dense(frames, class_hvs, cfg.dim)
+    return am.am_scores_sparse(frames, class_hvs)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _scores(frames: jax.Array, class_hvs: jax.Array, cfg: HDCConfig) -> jax.Array:
+    return _am_scores(frames, class_hvs, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _infer(params, class_hvs: jax.Array, codes: jax.Array,
+           cfg: HDCConfig) -> tuple[jax.Array, jax.Array]:
+    """End-to-end jitted datapath: encode + AM search + argmax."""
+    s = _am_scores(_encode_frames(params, codes, cfg), class_hvs, cfg)
+    return s, am.am_predict(s)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _train_one_shot(params, codes: jax.Array, labels: jax.Array,
+                    cfg: HDCConfig) -> jax.Array:
+    """One-shot class HVs through the SAME encoder as inference.
+
+    Sparse: bundle each class's frame HVs with thinning to ``class_density``
+    (paper Sec. II-D).  Dense: per-element majority over the class's frames.
+    Returns (n_classes, W) packed class HVs."""
+    frames = _encode_frames(params, codes, cfg)                  # (B, F, W)
+    bits = hv.unpack_bits(frames, cfg.dim).astype(jnp.int32)
+    flat_bits = bits.reshape(-1, cfg.dim)
+    onehot = jax.nn.one_hot(labels.reshape(-1), cfg.n_classes, dtype=jnp.int32)
+    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)          # (n_cls, D)
+    if cfg.variant == "dense":
+        n_per_class = jnp.sum(onehot, axis=0)[:, None]
+        return hv.majority_pack(counts, n_per_class, cfg.dim)
+
+    def thin(cls_counts):
+        thr = bundling.threshold_for_density(cls_counts[None, :], cfg.class_density)
+        return hv.threshold_pack(cls_counts[None, :], thr)[0]
+
+    return jax.vmap(thin)(counts)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline object
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HDCPipeline:
+    """One variant's full datapath: IM params + (optional) trained class HVs.
+
+    Frozen pytree: ``params`` / ``class_hvs`` are leaves, ``cfg`` is static
+    metadata.  All methods are pure — training and calibration return new
+    pipelines."""
+    params: IMParams | DenseIMParams
+    cfg: HDCConfig
+    class_hvs: jax.Array | None = None           # (n_classes, W) packed
+
+    @classmethod
+    def init(cls, key: jax.Array, cfg: HDCConfig) -> "HDCPipeline":
+        """Draw the design-time random codebooks for ``cfg.variant``."""
+        _check_cfg(cfg)
+        if cfg.variant == "dense":
+            params = im_mod.make_dense_im(key, channels=cfg.channels,
+                                          codes=cfg.codes, dim=cfg.dim)
+        else:
+            # only the naive bit-domain datapath reads the packed IM tables
+            params = im_mod.make_im(
+                key, channels=cfg.channels, codes=cfg.codes, dim=cfg.dim,
+                segments=cfg.segments,
+                precompute_packed=cfg.variant == "sparse_naive")
+        return cls(params=params, cfg=cfg)
+
+    # -- config rewrites ----------------------------------------------------
+
+    # class HVs are trained "through the SAME encoder as inference"; changing
+    # any of these on a trained pipeline would silently mismatch the class
+    # prototypes against the query encoder, so with_cfg drops class_hvs then
+    _ENCODER_FIELDS = ("variant", "spatial_thinning", "spatial_threshold",
+                       "temporal_threshold", "class_density")
+
+    def with_cfg(self, **overrides) -> "HDCPipeline":
+        """Rebuild with config overrides that do not invalidate the params
+        (variant/backend/thresholds — not geometry fields like
+        dim/segments/channels/window/n_classes).  Changing an
+        encoder-affecting field on a trained pipeline drops the class HVs
+        (retrain with the new operating point); ``backend`` changes keep
+        them (the backends are bit-exact)."""
+        new = replace(self.cfg, **overrides)
+        _check_cfg(new)
+        # n_classes/window are pinned too: class_hvs rows and the calibrated
+        # temporal_threshold would silently go stale
+        for field in ("dim", "segments", "channels", "lbp_bits", "n_classes",
+                      "window"):
+            if getattr(new, field) != getattr(self.cfg, field):
+                raise ValueError(f"cannot change {field} without re-init")
+        if new.variant != self.cfg.variant and (new.variant == "dense") != (
+                self.cfg.variant == "dense"):
+            raise ValueError("cannot cross the sparse/dense params boundary; "
+                             "HDCPipeline.init a new pipeline instead")
+        chvs = self.class_hvs
+        if chvs is not None and any(getattr(new, f) != getattr(self.cfg, f)
+                                    for f in self._ENCODER_FIELDS):
+            chvs = None
+        params = self.params
+        if (new.variant == "sparse_naive"
+                and getattr(params, "item_packed_cache", True) is None):
+            # entering the naive bit-domain datapath: precompute the packed
+            # tables its eager lookups read (init skips them for CompIM)
+            params = replace(params,
+                             item_packed_cache=hv.positions_to_packed(
+                                 params.item_pos, new.dim, new.segments),
+                             elec_packed_cache=hv.positions_to_packed(
+                                 params.elec_pos, new.dim, new.segments))
+        elif (new.variant == "sparse_compim"
+              and getattr(params, "item_packed_cache", None) is not None):
+            # leaving it: drop the caches so CompIM pipelines do not haul
+            # the full packed tables as pytree leaves
+            params = replace(params, item_packed_cache=None,
+                             elec_packed_cache=None)
+        return replace(self, cfg=new, class_hvs=chvs, params=params)
+
+    def with_backend(self, backend: str) -> "HDCPipeline":
+        return self.with_cfg(backend=backend)
+
+    # -- encode / calibrate / train / infer ---------------------------------
+
+    def encode_frames(self, codes: jax.Array) -> jax.Array:
+        """(B, T, channels) uint8 codes -> (B, F, W) packed frame HVs."""
+        return _encode_frames(self.params, codes, self.cfg)
+
+    def frame_counts(self, codes: jax.Array) -> jax.Array:
+        """Pre-threshold temporal accumulator counts (B, F, D)."""
+        return _frame_counts(self.params, codes, self.cfg)
+
+    def calibrate_density(self, codes: jax.Array, target: float) -> "HDCPipeline":
+        """Program the temporal-thinning threshold register so post-thinning
+        frame density stays <= ``target`` on the calibration stream (paper
+        Fig. 4 sweep).  No-op for the dense variant (majority, no thinning).
+        Calibrate BEFORE training: changing the threshold on a trained
+        pipeline drops the class HVs (they were bundled at the old operating
+        point)."""
+        if self.cfg.variant == "dense":
+            return self
+        # single source of truth for the calibration rule
+        new_cfg = classifier.with_density_target(self.params, codes,
+                                                 self.cfg, target)
+        return self.with_cfg(temporal_threshold=new_cfg.temporal_threshold)
+
+    def train_one_shot(self, codes: jax.Array, labels: jax.Array) -> "HDCPipeline":
+        """One-shot training: returns a pipeline carrying the class HVs.
+
+        codes: (B, T, channels) uint8; labels: (B, F) int per-frame class ids.
+        """
+        chvs = _train_one_shot(self.params, codes, labels, self.cfg)
+        return replace(self, class_hvs=chvs)
+
+    def scores(self, frames: jax.Array) -> jax.Array:
+        """(..., W) frame HVs -> (..., n_classes) AM similarity scores."""
+        if self.class_hvs is None:
+            raise ValueError("pipeline has no class HVs; call train_one_shot first")
+        return _scores(frames, self.class_hvs, self.cfg)
+
+    def infer(self, codes: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Full datapath (end-to-end jitted): (B, T, channels) codes ->
+        (scores (B, F, n_classes), predictions (B, F))."""
+        if self.class_hvs is None:
+            raise ValueError("pipeline has no class HVs; call train_one_shot first")
+        return _infer(self.params, self.class_hvs, codes, self.cfg)
+
+
+jax.tree_util.register_dataclass(
+    HDCPipeline, data_fields=["params", "class_hvs"], meta_fields=["cfg"])

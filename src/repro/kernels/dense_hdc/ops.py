@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dense import DenseHDCConfig, DenseIMParams
+from repro.core.classifier import frame_view
+from repro.core.im import DenseIMParams
 from repro.kernels.common import use_interpret
 from repro.kernels.dense_hdc.kernel import dense_encoder_pallas
 from repro.kernels.dense_hdc.ref import dense_encoder_ref
@@ -15,13 +16,12 @@ from repro.kernels.dense_hdc.ref import dense_encoder_ref
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def dense_encode_frames_fused(params: DenseIMParams, codes: jax.Array,
-                              cfg: DenseHDCConfig,
-                              use_kernel: bool = True) -> jax.Array:
-    """Drop-in fused replacement for core.dense.encode_frames.
+                              cfg, use_kernel: bool = True) -> jax.Array:
+    """Fused dense-HDC encoder (the `variant="dense", backend="pallas"` path
+    of repro.core.pipeline).  `cfg` is any config with `window`, `channels`,
+    `dim` — i.e. the unified HDCConfig.
     codes: (B, T, C) uint8 -> (B, F, W) uint32."""
-    b, t, c = codes.shape
-    frames = t // cfg.window
-    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    codes = frame_view(codes, cfg.window)
     ch = jnp.arange(cfg.channels)
     item = params.item_packed[ch, codes.astype(jnp.int32)]   # (B,F,win,C,W)
     if use_kernel:

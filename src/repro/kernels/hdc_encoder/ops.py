@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.classifier import HDCConfig
+from repro.core.classifier import HDCConfig, frame_view
 from repro.core.im import IMParams, im_lookup_positions
 from repro.kernels.common import use_interpret
 from repro.kernels.hdc_encoder.kernel import encoder_pallas
@@ -17,11 +17,12 @@ from repro.kernels.hdc_encoder.ref import encoder_ref
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def encode_frames_fused(params: IMParams, codes: jax.Array, cfg: HDCConfig,
                         use_kernel: bool = True) -> jax.Array:
-    """Drop-in fused replacement for core.classifier.encode_frames
-    (CompIM variants only).  codes: (B, T, C) uint8 -> (B, F, W) uint32."""
-    b, t, c = codes.shape
-    frames = t // cfg.window
-    codes = codes[:, : frames * cfg.window].reshape(b, frames, cfg.window, c)
+    """Fused sparse encoder (the `backend="pallas"` path of
+    repro.core.pipeline).  Computes the position-domain datapath; the
+    pipeline also routes `sparse_naive` here by forcing spatial thinning on
+    (bit-identical by the binding-domain equivalence, paper Sec. III-A).
+    codes: (B, T, C) uint8 -> (B, F, W) uint32."""
+    codes = frame_view(codes, cfg.window)
     pos = im_lookup_positions(params, codes)      # XLA gather: (B,F,win,C,S)
     kw = dict(window=cfg.window, segments=cfg.segments, seg_len=cfg.seg_len,
               temporal_threshold=cfg.temporal_threshold,

@@ -1,0 +1,1 @@
+# Batched multi-patient serving for the HDC seizure detector — see engine.py.

@@ -1,0 +1,243 @@
+"""Batched multi-patient serving engine for the unified HDC pipeline.
+
+Serves a fleet of implant streams against one accelerator:
+
+* ``ServingEngine`` — request batching across patients.  Requests are
+  ``(patient_id, codes)``; the engine gathers them by patient id, runs ONE
+  encode per distinct patient datapath (patients may carry different
+  calibrated temporal thresholds — encoding everything with one config is the
+  correctness hazard the old example had) and ONE batched AM search per
+  service call: each request's own patient's class HVs are gathered from the
+  stacked (P, n_classes, W) AM bank into a (B, n_classes, W) operand and all
+  B x F frames are scored in a single batched popcount op — O(B*F*n_classes)
+  work, independent of the provisioned-patient count P.
+* ``SeizureSession`` — streaming stateful per-patient API.  ``push(codes)``
+  accepts arbitrary-length sub-window chunks and carries the temporal-bundling
+  accumulator (the hardware's D x 8-bit counter file) across calls, emitting
+  one decision per completed window; chunked pushes are bit-exact with the
+  one-shot encoder.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Hashable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import functools
+
+from repro.core import am, hv
+from repro.core.pipeline import HDCConfig, HDCPipeline, spatial_encode
+
+
+@functools.partial(jax.jit, static_argnames=("dense", "dim"))
+def _gathered_am_scores(frames: jax.Array, owner_classes: jax.Array, *,
+                        dense: bool, dim: int) -> jax.Array:
+    """(B, F, W) frames vs per-request (B, C, W) class HVs -> (B, F, C).
+
+    The per-patient AM bank is gathered per request BEFORE scoring, so the
+    batched search costs O(B*F*C) regardless of how many patients are
+    provisioned (scoring the whole bank and discarding the other patients'
+    rows would be O(B*F*P*C))."""
+    q = frames[:, :, None, :]            # (B, F, 1, W)
+    c = owner_classes[:, None, :, :]     # (B, 1, C, W)
+    return dim - hv.hamming(q, c) if dense else hv.overlap(q, c)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _chunk_spatial_bits(params, chunk: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(t, channels) codes -> (t, D) uint8 per-cycle spatial bits.
+
+    Jitted per caller chunk length (ONE compile for a steady stream);
+    window-boundary splitting happens on the concrete result array, so odd
+    chunk/window ratios do not fan out into per-residue recompiles."""
+    spat = spatial_encode(params, chunk, cfg)
+    return hv.unpack_bits(spat, cfg.dim)
+
+
+@dataclass(frozen=True)
+class Decision:
+    """Result for one request: per-frame scores/predictions (+ the frame HVs,
+    exposed for regression testing and downstream post-processing)."""
+    request_id: int
+    patient_id: Hashable
+    scores: np.ndarray       # (F, n_classes)
+    predictions: np.ndarray  # (F,) int32; 1 = ictal for the 2-class system
+    frames: np.ndarray       # (F, W) packed frame HVs
+
+
+class ServingEngine:
+    """Batched serving over a bank of trained per-patient pipelines.
+
+    All pipelines must be trained (``class_hvs`` set) and agree on ``dim``,
+    ``n_classes``, ``window`` and the sparse/dense family (one AM similarity
+    mode and one frame rate per bank).  Per-patient configs may differ
+    otherwise — in particular each patient keeps its own calibrated
+    ``temporal_threshold``.
+    """
+
+    def __init__(self, pipelines: Mapping[Hashable, HDCPipeline]):
+        if not pipelines:
+            raise ValueError("ServingEngine needs at least one pipeline")
+        self._pipelines = dict(pipelines)
+        self._pids = list(self._pipelines)
+        self._pid_index = {pid: i for i, pid in enumerate(self._pids)}
+        first = next(iter(self._pipelines.values()))
+        for pid, p in self._pipelines.items():
+            if p.class_hvs is None:
+                raise ValueError(f"patient {pid!r}: pipeline is untrained "
+                                 "(call train_one_shot before serving)")
+            mismatched = [f for f in ("dim", "n_classes", "window",
+                                      "channels", "lbp_bits")
+                          if getattr(p.cfg, f) != getattr(first.cfg, f)]
+            if mismatched:
+                raise ValueError(f"patient {pid!r}: {'/'.join(mismatched)} "
+                                 "mismatch in bank")
+            if (p.cfg.variant == "dense") != (first.cfg.variant == "dense"):
+                raise ValueError("cannot mix dense and sparse pipelines in one "
+                                 "AM bank (different similarity modes)")
+        self._cfg = first.cfg
+        self._n_classes = first.cfg.n_classes
+        # stacked per-patient AM bank; serve() gathers rows per request
+        self._bank = jnp.stack([self._pipelines[pid].class_hvs
+                                for pid in self._pids])      # (P, C, W)
+
+    @property
+    def patient_ids(self) -> list:
+        return list(self._pids)
+
+    def serve(self, requests: Sequence[tuple[Hashable, jax.Array]]) -> list[Decision]:
+        """Serve one batch of ``(patient_id, codes)`` requests.
+
+        ``codes``: (T, channels) uint8 LBP codes, same T across the batch,
+        T >= window (sub-window chunks belong to ``SeizureSession``); cycles
+        past the last full window are truncated, like ``encode_frames``.
+        Returns one Decision per request, in request order.
+        """
+        if not requests:
+            return []
+        pids, codes = zip(*requests)
+        for pid in pids:
+            if pid not in self._pid_index:
+                raise KeyError(f"unknown patient id {pid!r}")
+        shapes = {tuple(jnp.shape(c)) for c in codes}
+        if len(shapes) > 1:
+            # a shorter request's frames would silently broadcast into the
+            # (B, F, W) buffer below — reject loudly instead
+            raise ValueError(f"all requests in a batch must share one codes "
+                             f"shape; got {sorted(shapes)}")
+        t = next(iter(shapes))[0]
+        if t < self._cfg.window:
+            raise ValueError(
+                f"request codes span {t} cycles < one {self._cfg.window}-cycle "
+                "window, which would yield zero frames; use SeizureSession "
+                "for sub-window streaming chunks")
+
+        # gather request indices by patient id, then merge patients whose
+        # datapath (params + config) is identical into one encode batch
+        by_datapath: dict[tuple, list[int]] = {}
+        for i, pid in enumerate(pids):
+            p = self._pipelines[pid]
+            by_datapath.setdefault((id(p.params), p.cfg), []).append(i)
+
+        frames = None                                      # (B, F, W)
+        for (_, _cfg), idxs in by_datapath.items():
+            pipe = self._pipelines[pids[idxs[0]]]
+            batch = jnp.stack([jnp.asarray(codes[i]) for i in idxs])
+            group_frames = pipe.encode_frames(batch)       # (B_g, F, W)
+            if frames is None:
+                frames = jnp.zeros((len(requests), *group_frames.shape[1:]),
+                                   group_frames.dtype)
+            frames = frames.at[jnp.asarray(idxs)].set(group_frames)
+
+        # ONE batched AM search: gather each request's own patient's class
+        # HVs from the stacked bank, score all B x F frames in one op
+        owner = jnp.asarray([self._pid_index[pid] for pid in pids])   # (B,)
+        scores = _gathered_am_scores(frames, self._bank[owner],
+                                     dense=self._cfg.variant == "dense",
+                                     dim=self._cfg.dim)               # (B, F, C)
+        preds = am.am_predict(scores)
+
+        frames_np, scores_np, preds_np = (np.asarray(x) for x in
+                                          (frames, scores, preds))
+        return [Decision(request_id=i, patient_id=pid, scores=scores_np[i],
+                         predictions=preds_np[i], frames=frames_np[i])
+                for i, pid in enumerate(pids)]
+
+
+# ---------------------------------------------------------------------------
+# streaming sessions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FrameDecision:
+    frame_index: int
+    scores: np.ndarray        # (n_classes,)
+    prediction: int           # argmax class id
+    frame_hv: np.ndarray      # (W,) packed
+
+
+class SeizureSession:
+    """Stateful streaming detector for one patient.
+
+    Mirrors the hardware's always-on operation: LBP codes arrive a few cycles
+    at a time, the temporal accumulator integrates them, and every ``window``
+    cycles a frame HV is thresholded out and scored.  ``push`` accepts chunks
+    of ANY length (sub-window, window-crossing, multi-window) and returns the
+    decisions completed by that chunk; accumulator state carries over, so
+    chunked pushes are bit-exact with a one-shot ``encode_frames`` of the
+    concatenated stream.
+    """
+
+    def __init__(self, pipeline: HDCPipeline):
+        if pipeline.class_hvs is None:
+            raise ValueError("SeizureSession needs a trained pipeline")
+        self._pipe = pipeline
+        cfg = pipeline.cfg
+        self._counts = np.zeros((cfg.dim,), np.int32)
+        self._filled = 0
+        self._frame_index = 0
+
+    @property
+    def cycles_buffered(self) -> int:
+        """Cycles accumulated toward the next (incomplete) frame."""
+        return self._filled
+
+    def _emit_frame(self) -> FrameDecision:
+        cfg = self._pipe.cfg
+        counts = jnp.asarray(self._counts[None])
+        if cfg.variant == "dense":
+            frame = hv.majority_pack(counts, cfg.window, cfg.dim)[0]
+        else:
+            frame = hv.threshold_pack(counts, cfg.temporal_threshold)[0]
+        scores = np.asarray(self._pipe.scores(frame[None]))[0]
+        dec = FrameDecision(frame_index=self._frame_index, scores=scores,
+                            prediction=int(np.argmax(scores)),
+                            frame_hv=np.asarray(frame))
+        self._counts = np.zeros_like(self._counts)
+        self._filled = 0
+        self._frame_index += 1
+        return dec
+
+    def push(self, codes: jax.Array) -> list[FrameDecision]:
+        """Feed (t, channels) uint8 codes; returns decisions for every frame
+        completed by this chunk (possibly empty)."""
+        codes = jnp.asarray(codes)
+        t = codes.shape[0]
+        cfg = self._pipe.cfg
+        out: list[FrameDecision] = []
+        if t == 0:
+            return out
+        bits = np.asarray(_chunk_spatial_bits(self._pipe.params, codes, cfg))
+        pos = 0
+        while pos < t:
+            take = min(cfg.window - self._filled, t - pos)
+            self._counts += bits[pos:pos + take].sum(axis=0, dtype=np.int32)
+            self._filled += take
+            pos += take
+            if self._filled == cfg.window:
+                out.append(self._emit_frame())
+        return out

@@ -1,0 +1,276 @@
+"""Unified HDCPipeline API: variant x backend parity, serving engine
+batching (per-patient configs), and streaming session state."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classifier, hv
+from repro.core.pipeline import BACKENDS, HDCConfig, HDCPipeline, VARIANTS
+from repro.data import ieeg
+from repro.serve.engine import SeizureSession, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+WINDOW = 256
+
+
+@pytest.fixture(scope="module")
+def patient():
+    return ieeg.make_patient(11, n_seizures=2)
+
+
+@pytest.fixture(scope="module")
+def train_data(patient):
+    rec = patient.records[0]
+    codes = jnp.asarray(rec.codes[None, :2048])
+    labels = jnp.asarray(ieeg.frame_labels(rec, WINDOW)[None, : 2048 // WINDOW])
+    return codes, labels
+
+
+def _cfg(variant: str, backend: str = "jnp") -> HDCConfig:
+    # spatial_threshold=1 keeps sparse_naive comparable with the OR-tree path
+    return HDCConfig(variant=variant, backend=backend, spatial_threshold=1)
+
+
+# ---------------------------------------------------------------------------
+# variant x backend parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_backends_bit_exact(variant, train_data):
+    """jnp and pallas backends must be bit-exact for every variant, through
+    encode, train and infer."""
+    codes, labels = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), _cfg(variant))
+    trained = {}
+    for backend in BACKENDS:
+        p = pipe.with_backend(backend).train_one_shot(codes, labels)
+        trained[backend] = p
+    np.testing.assert_array_equal(
+        np.asarray(trained["jnp"].encode_frames(codes)),
+        np.asarray(trained["pallas"].encode_frames(codes)))
+    np.testing.assert_array_equal(
+        np.asarray(trained["jnp"].class_hvs), np.asarray(trained["pallas"].class_hvs))
+    s_jnp, p_jnp = trained["jnp"].infer(codes)
+    s_pal, p_pal = trained["pallas"].infer(codes)
+    np.testing.assert_array_equal(np.asarray(s_jnp), np.asarray(s_pal))
+    np.testing.assert_array_equal(np.asarray(p_jnp), np.asarray(p_pal))
+
+
+@pytest.mark.parametrize("thr", [1, 2])
+def test_sparse_naive_backend_parity_across_thresholds(thr, train_data):
+    """The pallas rewrite of sparse_naive (forced spatial thinning) must stay
+    bit-exact beyond threshold 1 — the default config uses threshold 2."""
+    codes, _ = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42),
+                            HDCConfig(variant="sparse_naive",
+                                      spatial_threshold=thr))
+    np.testing.assert_array_equal(
+        np.asarray(pipe.encode_frames(codes)),
+        np.asarray(pipe.with_backend("pallas").encode_frames(codes)))
+
+
+def test_sparse_pipeline_matches_legacy_classifier(train_data):
+    """The unified surface must reproduce the pre-redesign sparse entry
+    points bit-exactly (no behavior change, only dispatch)."""
+    codes, _ = train_data
+    cfg = HDCConfig()
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
+    legacy_params = classifier.init_params(jax.random.PRNGKey(42), cfg)
+    np.testing.assert_array_equal(
+        np.asarray(pipe.encode_frames(codes)),
+        np.asarray(classifier.encode_frames(legacy_params, codes, cfg)))
+
+
+def test_dense_variant_routable(train_data):
+    """HDCConfig(variant='dense') is a first-class pipeline citizen (the old
+    classifier.spatial_encode raised on it)."""
+    codes, labels = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(7), _cfg("dense"))
+    pipe = pipe.train_one_shot(codes, labels)
+    scores, preds = pipe.infer(codes)
+    assert scores.shape == (1, codes.shape[1] // WINDOW, 2)
+    # dense similarity is D - Hamming: bounded by D
+    assert (np.asarray(scores) <= pipe.cfg.dim).all()
+    with pytest.raises(ValueError, match="pipeline"):
+        classifier.spatial_encode(pipe.params, codes, pipe.cfg)
+
+
+def test_calibrate_density_programs_threshold(train_data):
+    codes, _ = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), HDCConfig())
+    lo = pipe.calibrate_density(codes, 0.10)
+    hi = pipe.calibrate_density(codes, 0.50)
+    assert lo.cfg.temporal_threshold > hi.cfg.temporal_threshold
+    dens = np.asarray(hv.density(lo.encode_frames(codes), lo.cfg.dim))
+    assert (dens <= 0.15).all()
+
+
+def test_trained_state_dropped_on_encoder_change(train_data):
+    """Class HVs are trained through the inference encoder; changing its
+    operating point must not silently keep stale prototypes."""
+    codes, labels = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42),
+                            HDCConfig()).train_one_shot(codes, labels)
+    # backend switch is bit-exact -> trained state kept
+    assert pipe.with_backend("pallas").class_hvs is not None
+    # no-op override -> kept
+    same = pipe.with_cfg(temporal_threshold=pipe.cfg.temporal_threshold)
+    assert same.class_hvs is not None
+    # re-calibration changes the encoder -> dropped, infer refuses
+    recal = pipe.calibrate_density(codes, 0.10)
+    assert recal.cfg.temporal_threshold != pipe.cfg.temporal_threshold
+    assert recal.class_hvs is None
+    with pytest.raises(ValueError, match="train_one_shot"):
+        recal.infer(codes)
+
+
+def test_with_cfg_guards():
+    pipe = HDCPipeline.init(jax.random.PRNGKey(0), HDCConfig())
+    with pytest.raises(ValueError, match="re-init"):
+        pipe.with_cfg(dim=2048)
+    with pytest.raises(ValueError, match="re-init"):
+        pipe.with_cfg(window=128)   # temporal_threshold would go stale
+    with pytest.raises(ValueError, match="dense"):
+        pipe.with_cfg(variant="dense")
+    with pytest.raises(ValueError, match="backend"):
+        pipe.with_backend("cuda")
+
+
+def test_pipeline_is_pytree(train_data):
+    """HDCPipeline flattens/unflattens (params + class HVs as leaves)."""
+    codes, labels = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), HDCConfig())
+    pipe = pipe.train_one_shot(codes, labels)
+    leaves, treedef = jax.tree_util.tree_flatten(pipe)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(rebuilt.class_hvs),
+                                  np.asarray(pipe.class_hvs))
+    assert rebuilt.cfg == pipe.cfg
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def _trained_bank(train_data, targets=(0.10, 0.50)):
+    codes, labels = train_data
+    base = HDCPipeline.init(jax.random.PRNGKey(42), HDCConfig())
+    return {f"p{i}": base.calibrate_density(codes, t).train_one_shot(codes, labels)
+            for i, t in enumerate(targets)}
+
+
+def test_engine_respects_per_patient_config(train_data, patient):
+    """Regression for the old serve example's silent hazard: two patients
+    with different calibrated temporal thresholds must get DIFFERENT frames
+    for the same codes (the old loop encoded everyone with cfgs[0])."""
+    bank = _trained_bank(train_data)
+    assert (bank["p0"].cfg.temporal_threshold
+            != bank["p1"].cfg.temporal_threshold)
+    engine = ServingEngine(bank)
+    req = patient.records[1].codes[:WINDOW]
+    d0, d1 = engine.serve([("p0", req), ("p1", req)])
+    assert not np.array_equal(d0.frames, d1.frames)
+
+
+def test_engine_matches_direct_infer(train_data, patient):
+    """Batched gather-by-patient serving == per-pipeline infer, bit-exact,
+    including interleaved request order."""
+    bank = _trained_bank(train_data)
+    engine = ServingEngine(bank)
+    reqs = [("p1", patient.records[1].codes[:WINDOW]),
+            ("p0", patient.records[1].codes[256:256 + WINDOW]),
+            ("p1", patient.records[1].codes[512:512 + WINDOW])]
+    decisions = engine.serve(reqs)
+    for (pid, codes), dec in zip(reqs, decisions):
+        s, p = bank[pid].infer(jnp.asarray(codes[None]))
+        np.testing.assert_array_equal(dec.scores, np.asarray(s)[0])
+        np.testing.assert_array_equal(dec.predictions, np.asarray(p)[0])
+        assert dec.patient_id == pid
+
+
+def test_engine_rejects_mixed_length_batch(train_data, patient):
+    """A shorter request must not silently broadcast into the frame buffer."""
+    bank = _trained_bank(train_data)
+    engine = ServingEngine(bank)
+    with pytest.raises(ValueError, match="shape"):
+        engine.serve([("p0", patient.records[1].codes[: 2 * WINDOW]),
+                      ("p1", patient.records[1].codes[:WINDOW])])
+
+
+def test_engine_rejects_untrained_and_unknown(train_data):
+    codes, _ = train_data
+    untrained = HDCPipeline.init(jax.random.PRNGKey(42), HDCConfig())
+    with pytest.raises(ValueError, match="untrained"):
+        ServingEngine({"p": untrained})
+    bank = _trained_bank(train_data)
+    engine = ServingEngine(bank)
+    with pytest.raises(KeyError):
+        engine.serve([("nobody", np.zeros((WINDOW, 64), np.uint8))])
+
+
+# ---------------------------------------------------------------------------
+# streaming sessions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["sparse_compim", "dense"])
+def test_session_chunked_push_matches_one_shot(variant, train_data, patient):
+    """Sub-window chunked pushes carry accumulator state across calls and
+    reproduce the one-shot encoder bit-exactly."""
+    codes, labels = train_data
+    key = jax.random.PRNGKey(42 if variant != "dense" else 7)
+    pipe = HDCPipeline.init(key, _cfg(variant)).train_one_shot(codes, labels)
+    stream = patient.records[1].codes[: 3 * WINDOW]
+
+    sess = SeizureSession(pipe)
+    out = []
+    pos = 0
+    for chunk in (100, 50, 300, 200, 118):    # window-crossing odd chunks
+        out += sess.push(stream[pos:pos + chunk])
+        pos += chunk
+    assert pos == stream.shape[0] and len(out) == 3
+    assert sess.cycles_buffered == 0
+
+    frames = np.asarray(pipe.encode_frames(jnp.asarray(stream[None])))[0]
+    scores = np.asarray(pipe.scores(jnp.asarray(frames)))
+    for i, dec in enumerate(out):
+        assert dec.frame_index == i
+        np.testing.assert_array_equal(dec.frame_hv, frames[i])
+        np.testing.assert_array_equal(dec.scores, scores[i])
+
+
+def test_session_partial_frame_buffers(train_data, patient):
+    codes, labels = train_data
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42),
+                            HDCConfig()).train_one_shot(codes, labels)
+    sess = SeizureSession(pipe)
+    assert sess.push(patient.records[1].codes[:100]) == []
+    assert sess.cycles_buffered == 100
+    out = sess.push(patient.records[1].codes[100:WINDOW])
+    assert len(out) == 1 and sess.cycles_buffered == 0
+
+
+# ---------------------------------------------------------------------------
+# cached packed IM (perf satellite)
+# ---------------------------------------------------------------------------
+
+def test_im_packed_cache_consistent():
+    from repro.core import im as im_mod
+    params = im_mod.make_im(jax.random.PRNGKey(3), channels=8, codes=16,
+                            dim=256, segments=8)
+    assert params.item_packed_cache is not None
+    np.testing.assert_array_equal(
+        np.asarray(params.item_packed),
+        np.asarray(hv.positions_to_packed(params.item_pos, 256, 8)))
+    np.testing.assert_array_equal(
+        np.asarray(params.elec_packed),
+        np.asarray(hv.positions_to_packed(params.elec_pos, 256, 8)))
+    # uncached construction still derives on the fly
+    bare = im_mod.IMParams(item_pos=params.item_pos, elec_pos=params.elec_pos,
+                           dim=256, segments=8)
+    np.testing.assert_array_equal(np.asarray(bare.item_packed),
+                                  np.asarray(params.item_packed))
