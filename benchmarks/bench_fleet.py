@@ -1,0 +1,98 @@
+"""Fleet serving throughput: StreamingFleet vs looped SeizureSessions.
+
+The looped baseline is the pre-fleet serving shape — one Python object and
+one jit dispatch per stream per service interval.  The fleet advances ALL
+streams in one jitted step.  For S in {1, 64, 1024} (window-length chunks,
+one decision per stream per push) we report sessions-per-second, decisions
+per second and per-decision latency, plus the fleet/baseline speedup row the
+acceptance gate reads from BENCH_fleet.json.
+
+BENCH_TINY=1 (CI smoke) shrinks to S in {1, 8} on a small geometry.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import tiny
+from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.serve.engine import SeizureSession
+from repro.serve.fleet import StreamingFleet
+
+
+def _config() -> tuple[HDCConfig, tuple[int, ...], int]:
+    if tiny():
+        cfg = HDCConfig(dim=256, segments=8, channels=16, window=64,
+                        temporal_threshold=8)
+        return cfg, (1, 8), 1
+    return HDCConfig(), (1, 64, 1024), 1
+
+
+def _trained(cfg: HDCConfig) -> HDCPipeline:
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(
+        rng.integers(0, cfg.codes, (1, 4 * cfg.window, cfg.channels), np.uint8))
+    labels = jnp.asarray(rng.integers(0, 2, (1, 4), np.int32))
+    return HDCPipeline.init(jax.random.PRNGKey(42), cfg).train_one_shot(
+        codes, labels)
+
+
+def _time(fn, iters: int) -> float:
+    """Median wall-time (s) over iters calls (fn must consume its outputs)."""
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run() -> list[dict]:
+    cfg, s_list, iters = _config()
+    pipe = _trained(cfg)
+    rng = np.random.default_rng(1)
+    chunk = rng.integers(0, cfg.codes, (cfg.window, cfg.channels), np.uint8)
+    rows = []
+    for s in s_list:
+        sessions = [SeizureSession(pipe) for _ in range(s)]
+        chunks = [chunk] * s
+
+        def run_baseline():
+            for sess, c in zip(sessions, chunks):
+                assert len(sess.push(c)) == 1
+
+        def run_fleet():
+            out = fleet.push(chunks)
+            assert len(out[0]) == 1
+
+        run_baseline()  # warmup (jit compiles shared across sessions)
+        t_base = _time(run_baseline, iters)
+        fleet = StreamingFleet({"p": pipe}, ["p"] * s, buckets=(cfg.window,))
+        run_fleet()  # warmup (one compile for the single bucket)
+        t_fleet = _time(run_fleet, max(iters, 3))
+
+        for name, t in (("baseline_loop", t_base), ("fleet", t_fleet)):
+            rows.append({
+                "name": f"fleet.S{s}.{name}",
+                "us_per_call": f"{t * 1e6:.0f}",
+                "derived": (f"sessions/s={s / t:.1f}"
+                            f";decisions/s={s / t:.1f}"
+                            f";us/decision={t * 1e6 / s:.1f}"),
+            })
+        rows.append({
+            "name": f"fleet.S{s}.speedup",
+            "us_per_call": "",
+            "derived": (f"{t_base / t_fleet:.2f}x sessions/s vs looped "
+                        f"SeizureSession baseline"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -15,8 +15,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import time_call, tiny
 from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
@@ -39,13 +40,21 @@ def _bytes_per_prediction(variant: str, cfg) -> float:
 
 
 def run() -> list[dict]:
-    pat = ieeg.make_patient(11, n_seizures=1)
-    codes = jnp.asarray(
-        jnp.tile(jnp.asarray(pat.records[0].codes[None, :T]), (BATCH, 1, 1)))
-    preds_per_call = BATCH * (T // 256)
+    if tiny():  # CI smoke: small geometry, random codes (no patient synth)
+        cfg = HDCConfig(dim=256, segments=8, channels=16, window=64,
+                        temporal_threshold=8)
+        batch, t = 2, 2 * cfg.window
+        rng = np.random.default_rng(0)
+        codes = jnp.asarray(
+            rng.integers(0, cfg.codes, (batch, t, cfg.channels), np.uint8))
+    else:
+        cfg = HDCConfig()
+        batch, t = BATCH, T
+        pat = ieeg.make_patient(11, n_seizures=1)
+        codes = jnp.asarray(
+            jnp.tile(jnp.asarray(pat.records[0].codes[None, :t]), (batch, 1, 1)))
+    preds_per_call = batch * (t // cfg.window)
     rows = []
-
-    cfg = HDCConfig()
 
     variants = {
         "sparse_naive": dataclasses.replace(cfg, variant="sparse_naive",
@@ -55,7 +64,10 @@ def run() -> list[dict]:
     for name, vcfg in variants.items():
         # init per variant so sparse_naive gets its precomputed packed IM
         pipe = HDCPipeline.init(jax.random.PRNGKey(42), vcfg)
-        fn = lambda c, _p=pipe: _p.encode_frames(c)
+
+        def fn(c, _p=pipe):
+            return _p.encode_frames(c)
+
         # the naive bit-domain pipeline runs ~300 s/call on 1 CPU core: one
         # timed iteration is plenty (jit is deterministic)
         iters = 1 if name == "sparse_naive" else 3
@@ -65,7 +77,8 @@ def run() -> list[dict]:
                      "derived": (f"pred/s={preds_per_call / (us * 1e-6):.0f}"
                                  f";bytes/pred={_bytes_per_prediction(name, cfg):.0f}")})
 
-    dense = HDCPipeline.init(jax.random.PRNGKey(7), HDCConfig(variant="dense"))
+    dense = HDCPipeline.init(jax.random.PRNGKey(7),
+                             dataclasses.replace(cfg, variant="dense"))
     us = time_call(lambda c: dense.encode_frames(c), codes)
     rows.append({"name": "throughput.dense",
                  "us_per_call": f"{us:.0f}",

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -20,6 +22,32 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def tiny() -> bool:
+    """True when BENCH_TINY is set: modules shrink to CI-smoke-sized configs."""
+    return os.environ.get("BENCH_TINY", "") not in ("", "0")
+
+
 def emit(rows: list[dict]):
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+def write_bench_json(
+    out_dir: str, module: str, rows: list[dict], *, error: str | None = None
+) -> str:
+    """Write BENCH_<module>.json next to the CSV stream; returns the path.
+
+    The JSON mirrors the CSV rows plus an ok/error status, so the perf
+    trajectory is machine-readable (CI uploads these as artifacts).
+    """
+    payload = {
+        "module": module,
+        "status": "error" if error else "ok",
+        "rows": rows,
+        "error": error,
+    }
+    path = os.path.join(out_dir, f"BENCH_{module}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

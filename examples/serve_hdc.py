@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_config
-from repro.data import lm as lmdata
 from repro.models import model as M
 from repro.models import params as P
 from repro.optim import adamw

@@ -123,7 +123,7 @@ def restore(root: str, step: int, like: Any, shardings: Any = None) -> Any:
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    by_key = {l["key"]: l for l in manifest["leaves"]}
+    by_key = {leaf["key"]: leaf for leaf in manifest["leaves"]}
 
     flat_like = _flatten(like)
     flat_shardings = (_flatten(shardings) if shardings is not None

@@ -48,7 +48,8 @@ def bind_segmented_packed(data_packed: jax.Array, elec_packed: jax.Array,
     shifts = hv.packed_to_positions(data_packed, dim, segments)  # decoder
     elec_bits = hv.unpack_bits(elec_packed, dim)
     bound = roll_segments_bits(
-        jnp.broadcast_to(elec_bits, jnp.broadcast_shapes(elec_bits.shape, shifts.shape[:-1] + (dim,))),
+        jnp.broadcast_to(elec_bits, jnp.broadcast_shapes(
+            elec_bits.shape, shifts.shape[:-1] + (dim,))),
         shifts, segments)
     return hv.pack_bits(bound)
 

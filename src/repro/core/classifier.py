@@ -28,7 +28,7 @@ from dataclasses import dataclass, replace
 import jax
 import jax.numpy as jnp
 
-from repro.core import am, binding, bundling, hv, im
+from repro.core import am, binding, bundling, im
 
 
 @dataclass(frozen=True)

@@ -193,7 +193,8 @@ def _dense_signals(params: DenseIMParams, codes: jax.Array,
     spat_f = spat[: frames * cfg.window].reshape(frames, cfg.window, -1)
     bits = hv.unpack_bits(spat_f, cfg.dim).astype(jnp.int32)
     tcnt = jnp.cumsum(bits, axis=1).reshape(frames * cfg.window, cfg.dim)
-    frame_hv = hv.pack_bits(((tcnt[cfg.window - 1 :: cfg.window]) * 2 > cfg.window).astype(jnp.uint8))
+    frame_hv = hv.pack_bits(
+        ((tcnt[cfg.window - 1 :: cfg.window]) * 2 > cfg.window).astype(jnp.uint8))
     return dict(im_out=im_out, dec=None, bound_pos=None, bound=bound,
                 counts=counts, spat=spat, tcnt=tcnt, frame_hv=frame_hv)
 
@@ -227,7 +228,8 @@ def energy_per_prediction(variant: str, params, codes: jax.Array, cfg: HDCConfig
         cnt_togg = float(_toggles_uint(sig["counts"], cnt_bits))
         e["spatial_bundling"] = (float(_toggles_packed(sig["bound"])) * 1.0 * c.e_fa_op
                                  + cnt_togg * c.e_toggle
-                                 + float(_toggles_packed(sig["spat"])) * (c.e_cmp_bit + c.e_ff_toggle))
+                                 + float(_toggles_packed(sig["spat"]))
+                                 * (c.e_cmp_bit + c.e_ff_toggle))
     elif variant == "sparse_naive":
         rom_bits_read = C_ch * D
         im_togg = float(_toggles_packed(sig["im_out"]))
@@ -244,7 +246,8 @@ def energy_per_prediction(variant: str, params, codes: jax.Array, cfg: HDCConfig
         cnt_togg = float(_toggles_uint(sig["counts"], cnt_bits))
         e["spatial_bundling"] = (bnd_togg * 1.0 * c.e_fa_op
                                  + cnt_togg * c.e_toggle
-                                 + float(_toggles_packed(sig["spat"])) * (c.e_cmp_bit + c.e_ff_toggle))
+                                 + float(_toggles_packed(sig["spat"]))
+                                 * (c.e_cmp_bit + c.e_ff_toggle))
     else:  # CompIM datapaths
         rom_bits_read = C_ch * S * pos_bits       # 56 bits per channel
         pos_togg = float(_toggles_uint(sig["im_out"], pos_bits))
@@ -259,7 +262,8 @@ def energy_per_prediction(variant: str, params, codes: jax.Array, cfg: HDCConfig
             cnt_togg = float(_toggles_uint(sig["counts"], cnt_bits))
             e["spatial_bundling"] = (demux_togg * 1.0 * c.e_fa_op
                                      + cnt_togg * c.e_toggle
-                                     + float(_toggles_packed(sig["spat"])) * (c.e_cmp_bit + c.e_ff_toggle))
+                                     + float(_toggles_packed(sig["spat"]))
+                                     * (c.e_cmp_bit + c.e_ff_toggle))
         else:  # OR trees, no threshold
             e["spatial_bundling"] = (demux_togg * 2.0 * c.e_gate_op
                                      + float(_toggles_packed(sig["spat"])) * c.e_ff_toggle)

@@ -13,7 +13,6 @@ stored position-domain for the CompIM datapath and packed for the baseline.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax

@@ -22,7 +22,6 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ArchConfig
 from repro.models import serve as serve_mod

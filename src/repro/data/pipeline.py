@@ -21,7 +21,6 @@ import threading
 from typing import Any, Callable, Iterator
 
 import jax
-import numpy as np
 
 
 def host_slice(global_batch: dict, *, process_index: int | None = None,

@@ -33,9 +33,11 @@ def _dense_kernel(item_ref, elec_ref, out_ref, *, window: int, channels: int,
         hvs = item_ref[0, 0, pl.dslice(k * CHUNK, CHUNK)]         # (CHUNK, C, W)
         bound = jnp.bitwise_xor(hvs, elec[None])
         bits = _unpack(bound, dim).astype(jnp.int32)              # (CHUNK, C, D)
-        scounts = jnp.sum(bits, axis=1)                           # (CHUNK, D)
+        # dtype pinned: under JAX_ENABLE_X64 jnp.sum would promote the
+        # fori_loop carry to int64 and break the carry-type invariant
+        scounts = jnp.sum(bits, axis=1, dtype=jnp.int32)          # (CHUNK, D)
         spat = (scounts * 2 > channels).astype(jnp.int32)         # majority
-        return tcounts + jnp.sum(spat, axis=0)
+        return tcounts + jnp.sum(spat, axis=0, dtype=jnp.int32)
 
     tcounts = jax.lax.fori_loop(
         0, n_chunks, chunk_body, jnp.zeros((dim,), jnp.int32))

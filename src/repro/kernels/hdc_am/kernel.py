@@ -24,12 +24,16 @@ DEFAULT_BLOCK_B = 256
 def _am_kernel(q_ref, c_ref, out_ref, *, mode: str, dim: int):
     q = q_ref[...]                                 # (TB, W) uint32
     cls = c_ref[...]                               # (C, W) uint32
+    # sum dtypes pinned: under JAX_ENABLE_X64 jnp.sum would promote to int64
+    # and mismatch the int32 output ref
     if mode == "overlap":
         combined = jnp.bitwise_and(q[:, None, :], cls[None, :, :])
-        score = jnp.sum(jax.lax.population_count(combined).astype(jnp.int32), axis=-1)
+        score = jnp.sum(jax.lax.population_count(combined).astype(jnp.int32),
+                        axis=-1, dtype=jnp.int32)
     elif mode == "hamming":
         combined = jnp.bitwise_xor(q[:, None, :], cls[None, :, :])
-        score = dim - jnp.sum(jax.lax.population_count(combined).astype(jnp.int32), axis=-1)
+        score = dim - jnp.sum(jax.lax.population_count(combined).astype(jnp.int32),
+                              axis=-1, dtype=jnp.int32)
     else:
         raise ValueError(mode)
     out_ref[...] = score

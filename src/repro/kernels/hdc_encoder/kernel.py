@@ -44,10 +44,13 @@ def _encoder_kernel(pos_ref, elec_ref, out_ref, *, window: int, segments: int,
             jnp.int32, (CHUNK, c, segments, seg_len), 3)
         onehot = (bound[..., None] == iota)                       # (CHUNK, C, S, L)
         if spatial_thinning:
-            spat = jnp.sum(onehot.astype(jnp.int32), axis=1) >= spatial_threshold
+            spat = (jnp.sum(onehot.astype(jnp.int32), axis=1, dtype=jnp.int32)
+                    >= spatial_threshold)
         else:
             spat = jnp.any(onehot, axis=1)                        # (CHUNK, S, L)
-        return counts + jnp.sum(spat.astype(jnp.int32), axis=0)
+        # dtype pinned: under JAX_ENABLE_X64 jnp.sum would promote the
+        # fori_loop carry to int64 and break the carry-type invariant
+        return counts + jnp.sum(spat.astype(jnp.int32), axis=0, dtype=jnp.int32)
 
     counts = jax.lax.fori_loop(
         0, n_chunks, chunk_body, jnp.zeros((segments, seg_len), jnp.int32))

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.classifier import HDCConfig, frame_view
 from repro.core.im import IMParams, im_lookup_positions

@@ -3,9 +3,8 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import binding, bundling, hv
+from repro.core import binding, bundling
 
 
 def encoder_ref(positions: jax.Array, elec: jax.Array, *, window: int,

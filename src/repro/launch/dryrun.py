@@ -22,25 +22,21 @@ Usage:
 
 import argparse
 import json
-import re
 import time
 import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
 from repro.data import lm as lmdata
 from repro.launch.mesh import make_production_mesh
-from repro.models import model as model_mod
 from repro.models import params as pmod
 from repro.models.config import param_count
 from repro.optim import adamw
 from repro.runtime import steps as steps_mod
 from repro.runtime.hlo_cost import analyze_hlo
-from repro.runtime.roofline import (collective_bytes_from_hlo, roofline_terms,
-                                    memory_analysis_dict)
+from repro.runtime.roofline import memory_analysis_dict, roofline_terms
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "artifacts", "dryrun")

@@ -1,12 +1,17 @@
-"""Serving launcher: prefill + decode loop for any zoo architecture.
+"""Serving launcher: LM prefill+decode loop, or the HDC streaming fleet.
 
-Container-scale usage (reduced config, CPU):
+LM zoo (reduced config, CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --prompt-len 32 --gen 16
 
-On a fleet the same entry point runs the full config on the production mesh
-(--mesh 16x16), with the KV cache sharded per runtime/sharding.py (batch-DP
-for wide batches, sequence-parallel for long-context single streams).
+HDC streaming fleet (population-scale seizure detection):
+  PYTHONPATH=src python -m repro.launch.serve --hdc-fleet \
+      --sessions 256 --patients 8 --rounds 4
+
+On a fleet the same entry points run on the production mesh (--mesh 16x16):
+the LM path shards the KV cache per runtime/sharding.py, the HDC path shards
+the per-session accumulator state along the data axis (serve/fleet.py) while
+the codebook/AM banks replicate.
 """
 
 from __future__ import annotations
@@ -17,26 +22,62 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import get_config
-from repro.data import lm as lmdata
 from repro.launch.train import parse_mesh
-from repro.models import model as M
-from repro.models import params as P
-from repro.models import serve as S
-from repro.runtime import steps as steps_mod
-from repro.runtime.sharding import make_ctx, tree_shardings
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mesh", default=None)
-    ap.add_argument("--seq-sharded-kv", action="store_true")
-    args = ap.parse_args()
+def run_hdc_fleet(args) -> None:
+    """Train a small per-patient bank, then stream a sharded fleet."""
+    import numpy as np
+
+    from repro.core.pipeline import HDCConfig, HDCPipeline
+    from repro.serve.fleet import StreamingFleet
+
+    mesh = parse_mesh(args.mesh)
+    cfg = HDCConfig(variant=args.variant)
+    rng = np.random.default_rng(0)
+
+    def trained(seed: int) -> HDCPipeline:
+        codes = jnp.asarray(
+            rng.integers(0, cfg.codes, (1, 4 * cfg.window, cfg.channels), np.uint8))
+        labels = jnp.asarray(rng.integers(0, 2, (1, 4), np.int32))
+        pipe = HDCPipeline.init(jax.random.PRNGKey(seed), cfg)
+        # per-patient calibrated operating point (the programmed register)
+        pipe = pipe.calibrate_density(codes, target=0.2 + 0.05 * (seed % 4))
+        return pipe.train_one_shot(codes, labels)
+
+    t0 = time.perf_counter()
+    bank = {f"patient{p}": trained(p) for p in range(args.patients)}
+    owners = [f"patient{i % args.patients}" for i in range(args.sessions)]
+    fleet = StreamingFleet(bank, owners, mesh=mesh)
+    print(f"fleet: {args.sessions} sessions over {args.patients} patients "
+          f"({'mesh ' + 'x'.join(map(str, mesh.devices.shape)) if mesh else 'single device'}), "
+          f"built in {time.perf_counter() - t0:.1f} s")
+
+    chunk_len = args.chunk or cfg.window
+    chunks = [rng.integers(0, cfg.codes, (chunk_len, cfg.channels), np.uint8)
+              for _ in range(args.sessions)]
+    fleet.push(chunks)  # warmup / compile
+    decisions = 0
+    t0 = time.perf_counter()
+    for _ in range(args.rounds):
+        out = fleet.push(chunks)
+        decisions += sum(len(o) for o in out)
+    dt = time.perf_counter() - t0
+    rate = args.sessions * args.rounds / max(dt, 1e-9)
+    print(f"stream: {args.rounds} rounds x {chunk_len} cycles in {dt * 1e3:.1f} ms "
+          f"({rate:.0f} session-chunks/s, {decisions} decisions, "
+          f"{dt * 1e6 / max(decisions, 1):.1f} us/decision)")
+    print(f"compiled step executables: {fleet.compile_count} "
+          f"(buckets: {fleet._buckets})")
+
+
+def run_lm(args) -> None:
+    from repro.configs.registry import get_config
+    from repro.data import lm as lmdata
+    from repro.models import params as P
+    from repro.models import serve as S
+    from repro.runtime import steps as steps_mod
+    from repro.runtime.sharding import make_ctx, tree_shardings
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -86,6 +127,34 @@ def main():
     print("generated token ids (greedy):")
     for b in range(min(args.batch, 4)):
         print(f"  [{b}] {gen[b].tolist()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="LM zoo architecture to serve")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--seq-sharded-kv", action="store_true")
+    # HDC streaming-fleet mode
+    ap.add_argument("--hdc-fleet", action="store_true",
+                    help="serve the HDC seizure-detection streaming fleet")
+    ap.add_argument("--sessions", type=int, default=64)
+    ap.add_argument("--patients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="cycles per session per round (default: one window)")
+    ap.add_argument("--variant", default="sparse_compim",
+                    choices=["sparse_naive", "sparse_compim", "dense"])
+    args = ap.parse_args()
+    if args.hdc_fleet:
+        run_hdc_fleet(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required (or pass --hdc-fleet)")
+    run_lm(args)
 
 
 if __name__ == "__main__":

@@ -23,21 +23,18 @@ Usage (container-scale example):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.registry import get_config
 from repro.data import lm as lmdata
-from repro.models import model as model_mod
 from repro.models import params as pmod
 from repro.optim import adamw, compress
 from repro.runtime import steps as steps_mod
-from repro.runtime.sharding import make_ctx, tree_shardings
+from repro.runtime.sharding import tree_shardings
 
 
 def parse_mesh(s: str | None):

@@ -144,8 +144,10 @@ def param_count(cfg: ArchConfig) -> tuple[int, int]:
                   and (layer % cfg.moe_period == cfg.moe_period - 1 or cfg.moe_period == 1))
         if is_moe:
             eff = cfg.moe_d_ff or ff
-            tot_ffn = cfg.n_experts * mlp(eff) + cfg.n_shared_experts * mlp(eff) + d * cfg.n_experts
-            act_ffn = cfg.experts_per_token * mlp(eff) + cfg.n_shared_experts * mlp(eff) + d * cfg.n_experts
+            tot_ffn = (cfg.n_experts * mlp(eff)
+                       + cfg.n_shared_experts * mlp(eff) + d * cfg.n_experts)
+            act_ffn = (cfg.experts_per_token * mlp(eff)
+                       + cfg.n_shared_experts * mlp(eff) + d * cfg.n_experts)
         elif ff:
             tot_ffn = act_ffn = mlp(ff)
         else:

@@ -20,7 +20,6 @@ scans, so decode is a single fused while-free step.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -160,7 +159,8 @@ def _apply_hybrid_block(bp, x, cfg, ctx):
 
 def _apply_dec_layer(lp, x, enc_out, cfg, ctx):
     x = x + attn.attention_train(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps), cfg, ctx)
-    x = x + attn.attention_cross(lp["cross"], rmsnorm(x, lp["ln_x"], cfg.norm_eps), enc_out, cfg, ctx)
+    x = x + attn.attention_cross(
+        lp["cross"], rmsnorm(x, lp["ln_x"], cfg.norm_eps), enc_out, cfg, ctx)
     x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
     return constrain(x, ("batch", None, None), ctx)
 

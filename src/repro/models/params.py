@@ -6,7 +6,7 @@ ShapeDtypeStructs for the dry-run, NamedShardings for pjit) from the spec.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -187,7 +187,8 @@ def prefill(params: dict, batch: dict, cfg: ArchConfig, ctx: ShardCtx,
                     conv_states.append(st["conv"])
                 if j % 2 == 1:
                     s = jax.tree.map(lambda a_: a_[moe_i], bp["moe"])
-                    out, _ = moe_mod.moe_layer(s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
+                    out, _ = moe_mod.moe_layer(
+                        s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
                     h = h + out
                     moe_i += 1
                 else:
@@ -287,7 +288,8 @@ def decode_step(params: dict, tokens: jax.Array, caches: Any, pos: jax.Array,
                     conv_new.append(st["conv"])
                 if j % 2 == 1:
                     s = jax.tree.map(lambda a_: a_[moe_i], bp["moe"])
-                    out, _ = moe_mod.moe_layer(s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
+                    out, _ = moe_mod.moe_layer(
+                        s["moe"], rmsnorm(h, s["ln"], cfg.norm_eps), cfg, ctx)
                     h = h + out
                     moe_i += 1
                 else:

@@ -8,7 +8,6 @@ identically to the parameters (ZeRO-3 via the fsdp axis).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 
@@ -39,7 +38,9 @@ def schedule(opt: OptConfig, step: jax.Array) -> jax.Array:
 
 def init_state(params: Any, opt: OptConfig) -> dict:
     dt = jnp.dtype(opt.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

@@ -6,16 +6,13 @@ These are the functions the launcher runs and the dry-run lowers.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.data import lm as lmdata
 from repro.models import model as model_mod
-from repro.models import params as pmod
 from repro.models import serve as serve_mod
 from repro.models.config import ArchConfig
 from repro.optim import adamw, compress

@@ -1,1 +1,20 @@
-# Batched multi-patient serving for the HDC seizure detector — see engine.py.
+"""Multi-patient serving for the HDC seizure detector.
+
+* ``engine.ServingEngine``   — batched request serving (one padded dispatch)
+* ``engine.SeizureSession``  — single-patient streaming reference loop
+* ``fleet.StreamingFleet``   — S concurrent streams, one jitted sharded step
+* ``dispatch``               — shared owner-gathered vectorized datapath
+"""
+
+from repro.serve.engine import Decision, FrameDecision, SeizureSession, ServingEngine
+from repro.serve.fleet import FleetOut, FleetState, StreamingFleet
+
+__all__ = [
+    "Decision",
+    "FleetOut",
+    "FleetState",
+    "FrameDecision",
+    "SeizureSession",
+    "ServingEngine",
+    "StreamingFleet",
+]

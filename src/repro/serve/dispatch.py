@@ -1,0 +1,167 @@
+"""Shared vectorized multi-patient dispatch machinery.
+
+Both the batched ``ServingEngine`` and the streaming ``StreamingFleet`` serve
+MANY patients against ONE device computation.  Two shared tricks:
+
+* **Pre-bound codebooks.**  Binding is a pure function of (channel, LBP code)
+  — the data HV and the electrode HV are both design-time constants — so the
+  serving path precomputes the BOUND packed HV per (channel, code) once per
+  patient (the CompIM observation, pushed one stage further: position-domain
+  binding collapses into the table build).  Per cycle, spatial encoding is
+  then just a gather + OR-tree (or adder-tree for the thinning/dense
+  variants), with no per-cycle decode/shift/pack work.
+* **Owner gathering.**  The per-patient tables stack along a leading
+  unique-params axis and each stream's rows are gathered INSIDE the lookup,
+  so a single jitted call encodes any mix of patients — no Python
+  per-patient loop, and no per-stream copy of the tables is materialized.
+
+Per-patient configs must agree on the datapath (``datapath_key``); the
+temporal threshold — the per-patient register the paper calibrates — rides
+along as a traced ``(B,)`` array instead of a static config field.
+
+Everything here is bit-exact with the per-pipeline reference datapaths (the
+bound-table equivalence is the paper's Sec. III-A binding-domain argument:
+``shift(onehot(p_item), p_elec) == onehot((p_item + p_elec) mod L)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace
+from typing import Hashable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binding, bundling, classifier, hv
+from repro.core.pipeline import HDCConfig, HDCPipeline
+
+
+def datapath_key(cfg: HDCConfig) -> HDCConfig:
+    """Normalize a per-patient config to its shared-datapath key.
+
+    ``temporal_threshold`` is the per-patient programmed register (carried as
+    a traced array by the dispatchers), ``backend`` is a deployment choice
+    (the backends are bit-exact) and ``class_density`` only affects training;
+    everything else selects the datapath and must agree across a bank.
+    """
+    return replace(cfg, temporal_threshold=0, backend="jnp", class_density=0.5)
+
+
+def validate_bank(pipelines: Mapping[Hashable, HDCPipeline]) -> HDCConfig:
+    """Check a patient -> trained-pipeline bank shares one datapath.
+
+    Returns the normalized datapath config (hashable, safe as a jit static).
+    """
+    if not pipelines:
+        raise ValueError("need at least one pipeline")
+    first = next(iter(pipelines.values()))
+    key = datapath_key(first.cfg)
+    for pid, p in pipelines.items():
+        if p.class_hvs is None:
+            raise ValueError(
+                f"patient {pid!r}: pipeline is untrained "
+                "(call train_one_shot before serving)"
+            )
+        other = datapath_key(p.cfg)
+        if other != key:
+            bad = [
+                f.name
+                for f in dataclasses.fields(HDCConfig)
+                if getattr(other, f.name) != getattr(key, f.name)
+            ]
+            raise ValueError(
+                f"patient {pid!r}: {'/'.join(bad)} mismatch in bank "
+                "(per-patient configs may differ only in temporal_threshold, "
+                "backend and class_density)"
+            )
+    return key
+
+
+def bound_table(params, cfg: HDCConfig) -> jax.Array:
+    """Pre-bound codebook for one patient: (channels, codes, W) uint32.
+
+    Entry [c, k] is the packed HV of channel c's code k AFTER binding with
+    the channel's electrode HV — sparse variants via the position-domain
+    identity, dense via XOR.  Built once at bank construction.
+    """
+    if cfg.variant == "dense":
+        return jnp.bitwise_xor(params.item_packed, params.elec_packed[:, None])
+    pos = binding.bind_positions(
+        params.item_pos, params.elec_pos[:, None], cfg.seg_len
+    )
+    return hv.positions_to_packed(pos, cfg.dim, cfg.segments)
+
+
+def stack_bound_tables(pipes: Sequence[HDCPipeline]) -> tuple[jax.Array, np.ndarray]:
+    """Stack the unique per-patient pre-bound codebooks into one bank.
+
+    Returns ``(tables, rows)``: ``tables`` is (P_unique, channels, codes, W)
+    over the UNIQUE params objects (patients sharing one codebook share one
+    row), and ``rows[i]`` is pipeline ``i``'s row index.
+    """
+    row_of: dict[int, int] = {}
+    unique: list[jax.Array] = []
+    rows: list[int] = []
+    for p in pipes:
+        k = id(p.params)
+        if k not in row_of:
+            row_of[k] = len(unique)
+            unique.append(bound_table(p.params, datapath_key(p.cfg)))
+        rows.append(row_of[k])
+    return jnp.stack(unique), np.asarray(rows, np.int32)
+
+
+def owner_spatial_encode(
+    tables: jax.Array, owner: jax.Array, codes: jax.Array, cfg: HDCConfig
+) -> jax.Array:
+    """Owner-gathered spatial encode: ``(B, ..., channels)`` -> ``(B, ..., W)``.
+
+    ``tables`` is the stacked pre-bound codebook bank; ``owner`` (B,) selects
+    each stream's row.  Bit-exact with ``pipeline.spatial_encode`` on each
+    stream's own params, for every variant.
+    """
+    ch = jnp.arange(cfg.channels)
+    o = owner.reshape((-1,) + (1,) * (codes.ndim - 1))
+    bound = tables[o, ch, codes.astype(jnp.int32)]  # (B, ..., C, W)
+    if cfg.variant == "dense":
+        counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
+        return hv.majority_pack(counts, cfg.channels, cfg.dim)
+    if cfg.variant == "sparse_naive" or cfg.spatial_thinning:
+        return bundling.spatial_bundle_thinned(bound, cfg.dim, cfg.spatial_threshold)
+    return hv.or_reduce(bound, axis=-2)
+
+
+def owner_encode_frames(
+    tables: jax.Array,
+    owner: jax.Array,
+    thresholds: jax.Array,
+    codes: jax.Array,
+    cfg: HDCConfig,
+) -> jax.Array:
+    """Vectorized multi-patient ``encode_frames``: (B, T, ch) -> (B, F, W).
+
+    ``thresholds`` is the per-stream (B,) temporal-threshold register bank;
+    bit-exact with each stream's own ``pipeline.encode_frames`` (jnp backend).
+    """
+    framed = classifier.frame_view(codes, cfg.window)  # (B, F, win, C)
+    spatial = owner_spatial_encode(tables, owner, framed, cfg)
+    counts = bundling.temporal_counts(spatial, cfg.dim)  # (B, F, D)
+    if cfg.variant == "dense":
+        return hv.majority_pack(counts, cfg.window, cfg.dim)
+    return hv.threshold_pack(counts, thresholds[:, None, None])
+
+
+def owner_am_scores(
+    frames: jax.Array, class_rows: jax.Array, cfg: HDCConfig
+) -> jax.Array:
+    """(..., W) frames vs (..., C, W) owner-gathered class HVs -> (..., C).
+
+    The per-patient AM rows are gathered BEFORE scoring, so the cost is
+    O(streams * C), independent of the provisioned-patient count P.
+    """
+    q = frames[..., None, :]
+    if cfg.variant == "dense":
+        return cfg.dim - hv.hamming(q, class_rows)
+    return hv.overlap(q, class_rows)

@@ -3,23 +3,30 @@
 Serves a fleet of implant streams against one accelerator:
 
 * ``ServingEngine`` — request batching across patients.  Requests are
-  ``(patient_id, codes)``; the engine gathers them by patient id, runs ONE
-  encode per distinct patient datapath (patients may carry different
-  calibrated temporal thresholds — encoding everything with one config is the
-  correctness hazard the old example had) and ONE batched AM search per
-  service call: each request's own patient's class HVs are gathered from the
-  stacked (P, n_classes, W) AM bank into a (B, n_classes, W) operand and all
-  B x F frames are scored in a single batched popcount op — O(B*F*n_classes)
-  work, independent of the provisioned-patient count P.
+  ``(patient_id, codes)``; the engine stacks every patient's design-time
+  codebooks and class HVs into device-resident banks at construction, then
+  serves each batch with ONE padded jitted dispatch (serve/dispatch.py): the
+  per-request params/class rows are gathered from the banks INSIDE the
+  computation, so a batch mixing any number of distinct patient datapaths
+  costs one compile + one device call — the old per-datapath-group Python
+  loop is gone.  Batch sizes are padded to power-of-two buckets so request
+  traffic does not fan out recompiles.
 * ``SeizureSession`` — streaming stateful per-patient API.  ``push(codes)``
   accepts arbitrary-length sub-window chunks and carries the temporal-bundling
   accumulator (the hardware's D x 8-bit counter file) across calls, emitting
   one decision per completed window; chunked pushes are bit-exact with the
-  one-shot encoder.
+  one-shot encoder.  For thousands of concurrent streams use
+  ``serve.fleet.StreamingFleet`` — one jitted step for the whole fleet.
+
+All per-patient configs in a bank must share one datapath
+(``dispatch.datapath_key``): per-patient calibrated ``temporal_threshold``
+(and training-only / deployment-only fields) may differ, anything that
+changes the encoder datapath may not.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Hashable, Mapping, Sequence
 
@@ -27,24 +34,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import functools
-
 from repro.core import am, hv
 from repro.core.pipeline import HDCConfig, HDCPipeline, spatial_encode
+from repro.serve import dispatch
 
 
-@functools.partial(jax.jit, static_argnames=("dense", "dim"))
-def _gathered_am_scores(frames: jax.Array, owner_classes: jax.Array, *,
-                        dense: bool, dim: int) -> jax.Array:
-    """(B, F, W) frames vs per-request (B, C, W) class HVs -> (B, F, C).
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _serve_dispatch(tables, class_bank, param_owner, owner, thresholds,
+                    codes, cfg: HDCConfig):
+    """One padded batch: encode + gathered AM search + argmax, all jitted.
 
-    The per-patient AM bank is gathered per request BEFORE scoring, so the
-    batched search costs O(B*F*C) regardless of how many patients are
-    provisioned (scoring the whole bank and discarding the other patients'
-    rows would be O(B*F*P*C))."""
-    q = frames[:, :, None, :]            # (B, F, 1, W)
-    c = owner_classes[:, None, :, :]     # (B, 1, C, W)
-    return dim - hv.hamming(q, c) if dense else hv.overlap(q, c)
+    codes: (B_pad, T, channels); owner: (B_pad,) patient rows into the class
+    bank; param_owner: (B_pad,) rows into the stacked pre-bound codebook
+    bank; thresholds: (B_pad,) per-request temporal-threshold registers."""
+    frames = dispatch.owner_encode_frames(tables, param_owner, thresholds,
+                                          codes, cfg)             # (B, F, W)
+    cls = class_bank[owner]                                       # (B, C, W)
+    scores = dispatch.owner_am_scores(frames, cls[:, None], cfg)  # (B, F, C)
+    return frames, scores, am.am_predict(scores)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -72,38 +79,27 @@ class Decision:
 class ServingEngine:
     """Batched serving over a bank of trained per-patient pipelines.
 
-    All pipelines must be trained (``class_hvs`` set) and agree on ``dim``,
-    ``n_classes``, ``window`` and the sparse/dense family (one AM similarity
-    mode and one frame rate per bank).  Per-patient configs may differ
-    otherwise — in particular each patient keeps its own calibrated
-    ``temporal_threshold``.
+    All pipelines must be trained (``class_hvs`` set) and share one datapath
+    (``dispatch.datapath_key``); each patient keeps its own calibrated
+    ``temporal_threshold`` and its own codebooks.  The dispatch runs the
+    vectorized pure-XLA datapath, which is bit-exact with both pipeline
+    backends.
     """
 
     def __init__(self, pipelines: Mapping[Hashable, HDCPipeline]):
         if not pipelines:
             raise ValueError("ServingEngine needs at least one pipeline")
         self._pipelines = dict(pipelines)
+        self._cfg = dispatch.validate_bank(self._pipelines)
         self._pids = list(self._pipelines)
         self._pid_index = {pid: i for i, pid in enumerate(self._pids)}
-        first = next(iter(self._pipelines.values()))
-        for pid, p in self._pipelines.items():
-            if p.class_hvs is None:
-                raise ValueError(f"patient {pid!r}: pipeline is untrained "
-                                 "(call train_one_shot before serving)")
-            mismatched = [f for f in ("dim", "n_classes", "window",
-                                      "channels", "lbp_bits")
-                          if getattr(p.cfg, f) != getattr(first.cfg, f)]
-            if mismatched:
-                raise ValueError(f"patient {pid!r}: {'/'.join(mismatched)} "
-                                 "mismatch in bank")
-            if (p.cfg.variant == "dense") != (first.cfg.variant == "dense"):
-                raise ValueError("cannot mix dense and sparse pipelines in one "
-                                 "AM bank (different similarity modes)")
-        self._cfg = first.cfg
-        self._n_classes = first.cfg.n_classes
-        # stacked per-patient AM bank; serve() gathers rows per request
-        self._bank = jnp.stack([self._pipelines[pid].class_hvs
-                                for pid in self._pids])      # (P, C, W)
+        pipes = [self._pipelines[pid] for pid in self._pids]
+        # stacked pre-bound codebook bank + per-patient row indices
+        self._tables, self._param_rows = dispatch.stack_bound_tables(pipes)
+        # stacked per-patient AM bank; the dispatch gathers rows per request
+        self._bank = jnp.stack([p.class_hvs for p in pipes])      # (P, C, W)
+        self._thresholds = np.asarray(
+            [p.cfg.temporal_threshold for p in pipes], np.int32)
 
     @property
     def patient_ids(self) -> list:
@@ -136,30 +132,22 @@ class ServingEngine:
                 "window, which would yield zero frames; use SeizureSession "
                 "for sub-window streaming chunks")
 
-        # gather request indices by patient id, then merge patients whose
-        # datapath (params + config) is identical into one encode batch
-        by_datapath: dict[tuple, list[int]] = {}
-        for i, pid in enumerate(pids):
-            p = self._pipelines[pid]
-            by_datapath.setdefault((id(p.params), p.cfg), []).append(i)
+        # pad the batch to a power-of-two bucket (padded rows replay patient
+        # row 0 on zero codes) so batch-size traffic compiles once per bucket
+        b = len(requests)
+        b_pad = 1 << (b - 1).bit_length()
+        owner = np.zeros(b_pad, np.int32)
+        owner[:b] = [self._pid_index[pid] for pid in pids]
+        first = np.asarray(codes[0])
+        batch = np.zeros((b_pad, *first.shape), first.dtype)
+        for i, c in enumerate(codes):
+            batch[i] = np.asarray(c)
 
-        frames = None                                      # (B, F, W)
-        for (_, _cfg), idxs in by_datapath.items():
-            pipe = self._pipelines[pids[idxs[0]]]
-            batch = jnp.stack([jnp.asarray(codes[i]) for i in idxs])
-            group_frames = pipe.encode_frames(batch)       # (B_g, F, W)
-            if frames is None:
-                frames = jnp.zeros((len(requests), *group_frames.shape[1:]),
-                                   group_frames.dtype)
-            frames = frames.at[jnp.asarray(idxs)].set(group_frames)
-
-        # ONE batched AM search: gather each request's own patient's class
-        # HVs from the stacked bank, score all B x F frames in one op
-        owner = jnp.asarray([self._pid_index[pid] for pid in pids])   # (B,)
-        scores = _gathered_am_scores(frames, self._bank[owner],
-                                     dense=self._cfg.variant == "dense",
-                                     dim=self._cfg.dim)               # (B, F, C)
-        preds = am.am_predict(scores)
+        frames, scores, preds = _serve_dispatch(
+            self._tables, self._bank,
+            jnp.asarray(self._param_rows[owner]), jnp.asarray(owner),
+            jnp.asarray(self._thresholds[owner]), jnp.asarray(batch),
+            self._cfg)
 
         frames_np, scores_np, preds_np = (np.asarray(x) for x in
                                           (frames, scores, preds))
@@ -190,6 +178,10 @@ class SeizureSession:
     decisions completed by that chunk; accumulator state carries over, so
     chunked pushes are bit-exact with a one-shot ``encode_frames`` of the
     concatenated stream.
+
+    One Python object + one jit dispatch per stream per push: for
+    population-scale concurrency use ``serve.fleet.StreamingFleet``, which is
+    bit-exact with this class and advances every stream in one jitted step.
     """
 
     def __init__(self, pipeline: HDCPipeline):

@@ -1,0 +1,380 @@
+"""Sharded streaming fleet: thousands of concurrent sessions, one jitted step.
+
+``SeizureSession`` (serve/engine.py) is the single-patient streaming API: a
+host-side Python object per stream, one jit dispatch + numpy accumulator
+update per push.  That shape cannot serve a population — S streams cost S
+Python loops per service interval.  ``StreamingFleet`` vectorizes S concurrent
+sessions into ONE device-resident pytree:
+
+* ``counts``       (S, D) int32 — the stacked temporal-accumulator register
+                   files (the hardware's D x 8-bit counter bank, one per
+                   implant),
+* ``filled``       (S,)   int32 — cycles accumulated toward each next frame,
+* ``frame_index``  (S,)   int32 — frames emitted so far per stream,
+
+plus per-stream operands gathered once at construction: each session's class
+HVs from the stacked (P, C, W) AM bank, its calibrated temporal threshold,
+and its row into the stacked unique-params codebook bank.
+
+One jitted ``step(state, chunk, lengths, masks)`` advances ALL sessions.  The
+key structural trick: WHEN each session's window boundaries fall is a pure
+function of the chunk lengths, so the host computes the emission schedule and
+ships it as a dense (S, K+1, t_pad) cycle-mask — rows 0..K-1 select the
+cycles that close each completed frame (at most K = ceil(t_pad / window) per
+step), row K the leftover tail.  The device then never branches per cycle: a
+``lax.scan`` over fixed-size time blocks accumulates the masked per-frame
+counts as one batched GEMM per block (f32 is exact for counts <= window),
+and ONE threshold/majority-pack + AM search scores all K frame slots of all
+sessions together.  ``lengths`` masks the padding — sessions push chunks of
+ANY length, including 0 — and chunk lengths are bucketed/padded to a fixed
+set so steady streams compile once per bucket.
+
+Sharding: pass ``mesh=`` to place the fleet on a device mesh — session-axis
+state and operands shard along the ``batch`` logical axis (-> ``data`` mesh
+axis per runtime/sharding.py), the codebook/AM banks replicate, and the step
+stays a single SPMD program.
+
+Decisions are bit-exact with per-patient ``SeizureSession`` loops for all
+variants (tested in tests/test_fleet.py); benchmarks/bench_fleet.py measures
+the sessions-per-second win over the looped baseline.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Hashable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hv
+from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.runtime import sharding as shd
+from repro.serve import dispatch
+from repro.serve.engine import FrameDecision
+
+DEFAULT_BUCKETS = (32, 64, 128, 256)
+
+
+@dataclass(frozen=True)
+class FleetState:
+    """Device-resident state of all S sessions (a pytree of stacked leaves)."""
+
+    counts: jax.Array  # (S, D) int32 temporal accumulators
+    filled: jax.Array  # (S,) int32 cycles toward each next frame
+    frame_index: jax.Array  # (S,) int32 frames emitted so far
+
+
+@dataclass(frozen=True)
+class FleetOut:
+    """Raw step outputs: one row per potential frame slot (K per step); the
+    host-side schedule knows which (session, slot) pairs really emitted."""
+
+    frames: jax.Array  # (S, K, W) uint32 packed frame HVs
+    scores: jax.Array  # (S, K, C) int32 AM scores
+
+
+for _cls, _fields in (
+    (FleetState, ["counts", "filled", "frame_index"]),
+    (FleetOut, ["frames", "scores"]),
+):
+    jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
+
+
+def _block_len(t_pad: int, cfg: HDCConfig) -> int:
+    """Largest divisor of t_pad <= min(cap, window): the scan's time-block.
+
+    Blocks bound the per-iteration temporaries of the vectorized spatial
+    encode (the bit-domain variants materialize a (S, block, channels, D)
+    expansion, so they get a tighter cap than the position-domain default).
+    """
+    cap = min(8 if cfg.variant == "sparse_compim" else 4, cfg.window, t_pad)
+    return max(b for b in range(1, cap + 1) if t_pad % b == 0)
+
+
+def _fleet_step(
+    state: FleetState,
+    tables: jax.Array,
+    owner: jax.Array,
+    class_rows: jax.Array,
+    thresholds: jax.Array,
+    chunk: jax.Array,
+    lengths: jax.Array,
+    masks: jax.Array,
+    *,
+    cfg: HDCConfig,
+    ctx: shd.ShardCtx,
+) -> tuple[FleetState, FleetOut]:
+    """Advance all S sessions by one padded chunk batch.
+
+    chunk: (S, t_pad, channels) uint8; lengths: (S,) int32 valid cycles per
+    session; masks: (S, K+1, t_pad) f32 host-built cycle masks (rows 0..K-1
+    = cycles closing each completed frame, row K = leftover tail).
+    """
+    s, t_pad, _ = chunk.shape
+    kp1 = masks.shape[1]
+    block = _block_len(t_pad, cfg)
+    nb = t_pad // block
+    # (nb, S, block, ...): scan over time blocks, vectorize within
+    blocks = chunk.reshape(s, nb, block, cfg.channels).transpose(1, 0, 2, 3)
+    mask_blocks = masks.reshape(s, kp1, nb, block).transpose(2, 0, 1, 3)
+
+    def body(acc, xs):
+        codes_b, m_b = xs  # (S, block, channels), (S, K+1, block)
+        spatial = dispatch.owner_spatial_encode(tables, owner, codes_b, cfg)
+        bits = hv.unpack_bits(spatial, cfg.dim).astype(jnp.float32)  # (S, b, D)
+        # one batched GEMM accumulates every frame-slot's counts; f32 is
+        # exact for counts <= window << 2^24
+        return acc + jnp.einsum("skb,sbd->skd", m_b, bits), None
+
+    acc0 = shd.constrain(
+        jnp.zeros((s, kp1, cfg.dim), jnp.float32), ("batch", None, None), ctx
+    )
+    seg, _ = jax.lax.scan(body, acc0, (blocks, mask_blocks))
+    seg = seg.astype(jnp.int32)  # (S, K+1, D)
+
+    n_emit = (state.filled + lengths) // cfg.window  # (S,)
+    # the carried accumulator belongs to the FIRST completed frame when the
+    # session emits, and to the tail otherwise
+    emits = n_emit > 0
+    frame_counts = seg[:, :-1].at[:, 0].add(
+        jnp.where(emits[:, None], state.counts, 0)
+    )
+    if cfg.variant == "dense":
+        frames = hv.majority_pack(frame_counts, cfg.window, cfg.dim)
+    else:
+        frames = hv.threshold_pack(frame_counts, thresholds[:, None, None])
+    scores = dispatch.owner_am_scores(frames, class_rows[:, None], cfg)
+    new_counts = seg[:, -1] + jnp.where(emits[:, None], 0, state.counts)
+    new_state = FleetState(
+        counts=shd.constrain(new_counts, ("batch", None), ctx),
+        filled=shd.constrain(
+            state.filled + lengths - n_emit * cfg.window, ("batch",), ctx
+        ),
+        frame_index=shd.constrain(state.frame_index + n_emit, ("batch",), ctx),
+    )
+    return new_state, FleetOut(frames=frames, scores=scores)
+
+
+class StreamingFleet:
+    """S concurrent streaming seizure sessions advanced by one jitted step.
+
+    ``pipelines`` is the patient -> trained-pipeline bank (one shared
+    datapath; per-patient calibrated thresholds and codebooks welcome, see
+    ``dispatch.datapath_key``).  ``owners[i]`` names the patient session ``i``
+    belongs to — any number of sessions per patient.
+
+    ``push(chunks)`` feeds one (t_i, channels) chunk per session (lengths may
+    differ; 0 is fine) and returns the completed ``FrameDecision`` lists,
+    bit-exact with per-session ``SeizureSession`` loops.  Chunks are padded to
+    the smallest configured bucket (longer chunks are split over multiple
+    steps), so a steady stream compiles once per bucket — see
+    ``compile_count``.
+    """
+
+    def __init__(
+        self,
+        pipelines: Mapping[Hashable, HDCPipeline],
+        owners: Sequence[Hashable],
+        *,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        mesh=None,
+    ):
+        self._cfg = dispatch.validate_bank(pipelines)
+        if not owners:
+            raise ValueError("StreamingFleet needs at least one session")
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive, got {buckets!r}")
+        self._buckets = tuple(sorted(set(int(b) for b in buckets)))
+        pids = list(pipelines)
+        pid_index = {pid: i for i, pid in enumerate(pids)}
+        for pid in owners:
+            if pid not in pid_index:
+                raise KeyError(f"unknown patient id {pid!r} in owners")
+        pipes = [pipelines[pid] for pid in pids]
+        tables, param_rows = dispatch.stack_bound_tables(pipes)
+        bank = jnp.stack([p.class_hvs for p in pipes])  # (P, C, W)
+        thresholds = np.asarray(
+            [p.cfg.temporal_threshold for p in pipes], np.int32
+        )
+        owner_idx = np.asarray([pid_index[pid] for pid in owners], np.int32)
+
+        self._ctx = shd.make_ctx(mesh)
+        self._n = len(owner_idx)
+        self._owners = list(owners)
+        put = self._put
+        # replicated pre-bound codebook bank (P_unique, C, codes, W)
+        self._tables = put(tables, (None,) * 4)
+        self._bank = put(bank, (None, None, None))  # replicated (P, C, W)
+        self._class_rows = put(bank[owner_idx], ("batch", None, None))
+        self._thresholds = put(jnp.asarray(thresholds[owner_idx]), ("batch",))
+        self._param_owner = put(jnp.asarray(param_rows[owner_idx]), ("batch",))
+        self._state = self._zero_state()
+        # host mirrors of filled/frame_index: the emission schedule (and so
+        # the step's cycle masks) is a pure function of the pushed lengths,
+        # so the host tracks it without any device round-trip
+        self._filled_h = np.zeros((self._n,), np.int64)
+        self._fidx_h = np.zeros((self._n,), np.int64)
+        self._shapes_seen: set[int] = set()  # buckets pushed so far
+        self._step = jax.jit(
+            functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx),
+            donate_argnums=(0,),
+        )
+
+    # -- state management ---------------------------------------------------
+
+    def _put(self, x: jax.Array, axes: tuple) -> jax.Array:
+        s = shd.sharding_for(axes, self._ctx, jnp.shape(x))
+        return jax.device_put(x, s) if s is not None else jnp.asarray(x)
+
+    def _zero_state(self) -> FleetState:
+        return FleetState(
+            counts=self._put(
+                jnp.zeros((self._n, self._cfg.dim), jnp.int32), ("batch", None)
+            ),
+            filled=self._put(jnp.zeros((self._n,), jnp.int32), ("batch",)),
+            frame_index=self._put(jnp.zeros((self._n,), jnp.int32), ("batch",)),
+        )
+
+    def reset(self) -> None:
+        """Zero all accumulators, fill levels and frame indices."""
+        self._state = self._zero_state()
+        self._filled_h[:] = 0
+        self._fidx_h[:] = 0
+
+    @property
+    def n_sessions(self) -> int:
+        return self._n
+
+    @property
+    def state(self) -> FleetState:
+        return self._state
+
+    @property
+    def fill_levels(self) -> np.ndarray:
+        """(S,) cycles accumulated toward each next (incomplete) frame."""
+        return np.asarray(self._state.filled)
+
+    @property
+    def frame_indices(self) -> np.ndarray:
+        """(S,) frames emitted so far per session."""
+        return np.asarray(self._state.frame_index)
+
+    @property
+    def compile_count(self) -> int:
+        """Jitted-step executables built so far (<= number of buckets used).
+
+        Prefers jit's real cache size (catches accidental recompiles); falls
+        back to the count of distinct bucket shapes pushed if the private
+        jax API ever disappears.
+        """
+        cache_size = getattr(self._step, "_cache_size", None)
+        if cache_size is not None:
+            return cache_size()
+        return len(self._shapes_seen)
+
+    # -- streaming ----------------------------------------------------------
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self._buckets:
+            if n <= b:
+                return b
+        raise AssertionError("length exceeds max bucket")  # pragma: no cover
+
+    def _round_masks(self, round_len: np.ndarray, t_pad: int) -> np.ndarray:
+        """Host-built (S, K+1, t_pad) f32 cycle masks for one step.
+
+        Cycle j of session s belongs to frame-slot ``(filled_s + j) //
+        window`` — slots below the session's emission count are completed
+        frames, everything else (and the padding) lands in the tail row.
+        """
+        window = self._cfg.window
+        k_max = (t_pad - 1) // window + 1
+        j = np.arange(t_pad)
+        ordinal = (self._filled_h[:, None] + j[None, :]) // window  # (S, t)
+        valid = j[None, :] < round_len[:, None]
+        n_emit = (self._filled_h + round_len) // window  # (S,)
+        rows = np.arange(k_max)
+        frame_rows = (
+            (ordinal[:, None, :] == rows[None, :, None])
+            & (rows[None, :, None] < n_emit[:, None, None])
+            & valid[:, None, :]
+        )
+        tail = (ordinal >= n_emit[:, None]) & valid
+        return np.concatenate(
+            [frame_rows, tail[:, None, :]], axis=1
+        ).astype(np.float32)
+
+    def push(self, chunks: Sequence) -> list[list[FrameDecision]]:
+        """Feed one (t_i, channels) uint8 chunk per session.
+
+        Chunk lengths may differ per session (0 included).  Returns, per
+        session, the decisions for every frame completed by this push.
+        """
+        if len(chunks) != self._n:
+            raise ValueError(
+                f"push needs one chunk per session ({self._n}), got {len(chunks)}"
+            )
+        ch = self._cfg.channels
+        arrs = []
+        for i, c in enumerate(chunks):
+            a = np.asarray(c, dtype=np.uint8)
+            if a.size == 0:
+                a = a.reshape(0, ch)
+            if a.ndim != 2 or a.shape[1] != ch:
+                raise ValueError(
+                    f"session {i}: chunk must be (t, {ch}), got {a.shape}"
+                )
+            arrs.append(a)
+        lengths = np.asarray([a.shape[0] for a in arrs], np.int64)
+        out: list[list[FrameDecision]] = [[] for _ in range(self._n)]
+        max_bucket = self._buckets[-1]
+        pos = 0
+        total = int(lengths.max(initial=0))
+        while pos < total:
+            round_len = np.clip(lengths - pos, 0, max_bucket)
+            t_pad = self._bucket_for(int(round_len.max()))
+            self._shapes_seen.add(t_pad)
+            batch = np.zeros((self._n, t_pad, ch), np.uint8)
+            for i, a in enumerate(arrs):
+                n = int(round_len[i])
+                if n:
+                    batch[i, :n] = a[pos : pos + n]
+            masks = self._round_masks(round_len, t_pad)
+            n_emit = (self._filled_h + round_len) // self._cfg.window
+            self._state, fo = self._step(
+                self._state,
+                self._tables,
+                self._param_owner,
+                self._class_rows,
+                self._thresholds,
+                jnp.asarray(batch),
+                jnp.asarray(round_len, dtype=jnp.int32),
+                jnp.asarray(masks),
+            )
+            self._collect(fo, n_emit, out)
+            self._filled_h += round_len - n_emit * self._cfg.window
+            self._fidx_h += n_emit
+            pos += max_bucket
+        return out
+
+    def _collect(
+        self, fo: FleetOut, n_emit: np.ndarray, out: list[list[FrameDecision]]
+    ) -> None:
+        if not n_emit.any():
+            return
+        frames = np.asarray(fo.frames)
+        scores = np.asarray(fo.scores)
+        for s in np.nonzero(n_emit)[0]:
+            for k in range(int(n_emit[s])):
+                sc = scores[s, k]
+                out[s].append(
+                    FrameDecision(
+                        frame_index=int(self._fidx_h[s]) + k,
+                        scores=sc,
+                        prediction=int(np.argmax(sc)),
+                        frame_hv=frames[s, k],
+                    )
+                )

@@ -30,7 +30,8 @@ def _run_py(code: str, devices: int = 8, timeout: int = 900):
 @pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
 def test_small_mesh_lower_compile(kind):
     code = f"""
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.configs.registry import get_config
     from repro.data import lm as lmdata
     from repro.models import params as pmod
@@ -78,7 +79,8 @@ def test_small_mesh_lower_compile(kind):
 def test_multipod_axis_shards():
     """The 3-axis (pod, data, model) mesh lowers with the pod axis active."""
     code = """
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.configs.registry import get_config
     from repro.data import lm as lmdata
     from repro.models import params as pmod

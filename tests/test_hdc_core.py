@@ -10,7 +10,7 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import am, binding, bundling, classifier, dense, hdtrain, hv, im, metrics
+from repro.core import am, binding, bundling, classifier, dense, hdtrain, hv, metrics
 from repro.data import ieeg
 
 jax.config.update("jax_platform_name", "cpu")
@@ -120,7 +120,8 @@ def test_threshold_for_density():
 # ---------------------------------------------------------------------------
 
 def test_am_scores_sparse_counts_shared_bits():
-    q = hv.pack_bits(jnp.asarray(np.eye(1, 64, 3, dtype=np.uint8) + np.eye(1, 64, 7, dtype=np.uint8)))
+    q = hv.pack_bits(jnp.asarray(np.eye(1, 64, 3, dtype=np.uint8)
+                                 + np.eye(1, 64, 7, dtype=np.uint8)))
     cls = hv.pack_bits(jnp.asarray(np.stack([
         np.eye(1, 64, 3, dtype=np.uint8)[0],                       # shares bit 3
         np.zeros(64, np.uint8)])))                                  # shares none

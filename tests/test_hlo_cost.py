@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.runtime.hlo_cost import analyze_hlo, _shape_numel_bytes
@@ -81,7 +80,8 @@ def test_collectives_counted_in_sharded_module(tmp_path):
     import sys
     import textwrap
     code = textwrap.dedent("""
-        import jax, jax.numpy as jnp
+        import jax
+        import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.runtime.hlo_cost import analyze_hlo
         mesh = jax.make_mesh((4,), ("d",))

@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, with
 shape sweeps and hypothesis property tests."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -45,8 +45,8 @@ def test_input_specs_no_allocation_for_decode():
     cfg = get_config("command-r-35b")
     specs = lmdata.input_specs(cfg, lmdata.SHAPES["decode_32k"])
     leaves = jax.tree.leaves(specs["caches"])
-    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
-    total = sum(np.prod(l.shape) * l.dtype.itemsize for l in leaves)
+    assert all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in leaves)
+    total = sum(np.prod(leaf.shape) * leaf.dtype.itemsize for leaf in leaves)
     assert total > 1e11   # the abstract cache really is ~0.5 TB
 
 

@@ -144,7 +144,7 @@ def test_fault_tolerant_resume_bitwise(tmp_path):
     assert "restarting from latest checkpoint" in r2.stdout
 
     def final_loss(out):
-        lines = [l for l in out.splitlines() if l.startswith("done: final_loss=")]
+        lines = [ln for ln in out.splitlines() if ln.startswith("done: final_loss=")]
         return float(lines[-1].split("=")[1].split()[0])
 
     assert abs(final_loss(r1.stdout) - final_loss(r2.stdout)) < 1e-5

@@ -1,7 +1,6 @@
 """Unified HDCPipeline API: variant x backend parity, serving engine
 batching (per-patient configs), and streaming session state."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
