@@ -36,9 +36,10 @@ def _trained(cfg: HDCConfig) -> HDCPipeline:
     rng = np.random.default_rng(0)
     codes = jnp.asarray(
         rng.integers(0, cfg.codes, (1, 4 * cfg.window, cfg.channels), np.uint8))
-    labels = jnp.asarray(rng.integers(0, 2, (1, 4), np.int32))
+    labels = np.asarray(rng.integers(0, 2, (1, 4), np.int32))
+    labels[0, :2] = (0, 1)  # every class needs >= 1 example
     return HDCPipeline.init(jax.random.PRNGKey(42), cfg).train_one_shot(
-        codes, labels)
+        codes, jnp.asarray(labels))
 
 
 def _time(fn, iters: int) -> float:

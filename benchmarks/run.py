@@ -10,6 +10,7 @@ uploads these as artifacts, so the perf trajectory accumulates).
   table1      SotA comparison                           (paper Table I)
   throughput  HDC pipeline throughput + traffic model   (TPU-side perf)
   fleet       StreamingFleet vs looped-session serving  (framework)
+  online      one-shot vs iterative/online retraining   (framework)
   roofline    aggregated dry-run roofline terms          (framework)
 
 A module that raises still prints a ``<mod>.ERROR`` CSV row (so partial runs
@@ -26,7 +27,8 @@ import traceback
 
 from benchmarks.common import emit, write_bench_json
 
-DEFAULT_MODULES = ["fig1c", "fig4", "fig5", "table1", "throughput", "fleet", "roofline"]
+DEFAULT_MODULES = ["fig1c", "fig4", "fig5", "table1", "throughput", "fleet",
+                   "online", "roofline"]
 
 
 def main(argv: list[str] | None = None) -> int:

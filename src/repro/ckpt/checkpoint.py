@@ -37,12 +37,20 @@ import numpy as np
 _KEY_SEP = "/"
 
 
+def _path_entry(p) -> str:
+    # DictKey/FlattenedIndexKey -> .key, SequenceKey -> .idx,
+    # GetAttrKey (registered dataclasses, e.g. serve.fleet.FleetState) -> .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _flatten(tree: Any):
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
     for path, leaf in leaves_with_paths:
-        key = _KEY_SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        key = _KEY_SEP.join(_path_entry(p) for p in path)
         out.append((key, leaf))
     return out
 

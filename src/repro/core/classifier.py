@@ -47,6 +47,39 @@ class HDCConfig:
     # training-time thinning target for class HVs (paper: 50%)
     class_density: float = 0.5
 
+    def __post_init__(self):
+        """Geometry validation: every derived quantity (``words``,
+        ``seg_len``, the uint8 position domain, the uint8 code alphabet)
+        must be exact — silent truncation/wraparound corrupts HVs with no
+        error (e.g. dim=4096, segments=8 wraps seg_len=512 past uint8)."""
+        if self.dim <= 0 or self.dim % 32:
+            raise ValueError(
+                f"dim={self.dim} must be a positive multiple of 32 "
+                "(HVs pack into uint32 words)")
+        if self.window <= 0:
+            raise ValueError(f"window={self.window} must be positive")
+        if not 1 <= self.lbp_bits <= 8:
+            raise ValueError(
+                f"lbp_bits={self.lbp_bits} must be in [1, 8] "
+                "(LBP codes are uint8)")
+        if self.n_classes < 1:
+            raise ValueError(f"n_classes={self.n_classes} must be >= 1")
+        if not 0.0 < self.class_density <= 1.0:
+            raise ValueError(
+                f"class_density={self.class_density} must be in (0, 1] "
+                "(an out-of-range density silently thins class HVs to zero)")
+        if self.variant == "dense":
+            return  # the dense datapath has no segment structure
+        if self.segments <= 0 or self.dim % self.segments:
+            raise ValueError(
+                f"dim={self.dim} must divide evenly into "
+                f"segments={self.segments} (seg_len would truncate)")
+        if self.dim // self.segments > 256:
+            raise ValueError(
+                f"seg_len={self.dim // self.segments} exceeds the uint8 "
+                "position domain (max 256); increase segments for "
+                f"dim={self.dim}")
+
     @property
     def codes(self) -> int:
         return 1 << self.lbp_bits

@@ -22,12 +22,20 @@ class DetectionResult:
 
 
 def postprocess(preds: np.ndarray, k: int = 2, m: int = 3) -> np.ndarray:
-    """k-of-m smoothing: frame f fires iff >= k of the last m preds are ictal."""
+    """k-of-m smoothing: frame f fires iff it is ictal AND >= k of the last m
+    predictions are ictal.  The stream start pads with interictal frames, so
+    the FULL k votes are always required — frames 0..k-2 can never fire.
+    (The old ``min(k, f - lo + 1)`` relaxation degenerated to 1-of-1 at
+    frame 0: a single ictal flicker fired the detector, inflating both
+    detection accuracy and the false-alarm rate at record boundaries.)
+    """
+    if not 1 <= k <= m:
+        raise ValueError(f"need 1 <= k <= m, got k={k}, m={m}")
     preds = np.asarray(preds).astype(np.int32)
     out = np.zeros_like(preds)
     for f in range(len(preds)):
         lo = max(0, f - m + 1)
-        out[f] = int(preds[lo:f + 1].sum() >= min(k, f - lo + 1) and preds[f] == 1)
+        out[f] = int(preds[f] == 1 and preds[lo:f + 1].sum() >= k)
     return out
 
 

@@ -1,0 +1,167 @@
+"""Online continual learning for the HDC associative memory.
+
+The paper trains class HVs one-shot and stops; the related work (Pale et
+al., arXiv:2201.09759 and arXiv:2105.00934) shows iterative/online HD
+learning substantially improves per-patient seizure detection.  This module
+holds the learning state and update rules shared by every surface:
+
+* ``HDCPipeline.fit_iterative`` — batch-iterative retraining: epochs over a
+  labeled record, updating on the misclassified / low-margin frames,
+* ``SeizureSession.adapt``      — one streaming feedback label at a time,
+* ``StreamingFleet.adapt``      — the same update vectorized over S sessions.
+
+``OnlineAMState`` mirrors the hardware's counter-file view of the AM: a
+per-class integer accumulator ``counts`` (C, D) plus the number of frames
+bundled per class ``n`` — exactly the intermediate that one-shot training
+already computes before thresholding.  The iterative rule (classic HD
+retraining): a gated frame ADDS its bits to the true class and SUBTRACTS
+them from the rival (the best-scoring wrong class), after which the class
+HVs are re-thresholded from the counts — sparse variants thin each class row
+back to ``class_density`` (the paper's Sec. II-D training rule re-applied to
+the live counters), dense takes the per-element majority.
+
+All functions are pure jnp, jit-compatible, and broadcast over leading batch
+dims (the fleet stacks S independent states into an (S, C, D) bank); the
+gate's argmax tie-breaking matches ``am.am_predict`` (ties -> lower class).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+from repro.core.classifier import HDCConfig
+
+
+@dataclass(frozen=True)
+class OnlineAMState:
+    """Counter-file view of the AM; leading batch dims stack sessions."""
+
+    counts: jax.Array  # (..., C, D) int32 per-class accumulated frame bits
+    n: jax.Array       # (..., C) int32 frames currently bundled per class
+
+
+jax.tree_util.register_dataclass(
+    OnlineAMState, data_fields=["counts", "n"], meta_fields=[])
+
+
+def state_from_frames(frame_bits: jax.Array, labels: jax.Array,
+                      n_classes: int) -> OnlineAMState:
+    """One-shot accumulation: (N, D) {0,1} bits + (N,) labels -> state.
+
+    These are exactly the pre-threshold counts ``train_one_shot`` computes,
+    so iterative training with zero epochs reproduces one-shot bit-exactly.
+    """
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.int32)
+    counts = jnp.einsum("nc,nd->cd", onehot, frame_bits.astype(jnp.int32))
+    # dtype pinned: under JAX_ENABLE_X64 a bare sum promotes to int64 and
+    # the fleet's state dtypes (and jit cache keys) would drift
+    return OnlineAMState(counts=counts,
+                         n=jnp.sum(onehot, axis=0, dtype=jnp.int32))
+
+
+def _density_threshold(counts: jax.Array, density) -> jax.Array:
+    """Smallest thinning threshold with post-thinning density <= ``density``.
+
+    counts: (..., D) int; density broadcastable to ``counts.shape[:-1]``.
+    Same linear-interpolated-quantile rule as
+    ``bundling.threshold_for_density`` on a single row, implemented
+    elementwise-broadcastable (explicit f32) so the single-state and the
+    S-stacked fleet paths lower to identical arithmetic — that is what makes
+    fleet ``adapt`` bit-exact with per-session loops.
+    """
+    d = counts.shape[-1]
+    srt = jnp.sort(counts.astype(jnp.float32), axis=-1)
+    density = jnp.asarray(density, jnp.float32)
+    pos = jnp.broadcast_to((1.0 - density) * (d - 1), counts.shape[:-1])
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.ceil(pos).astype(jnp.int32)
+    vlo = jnp.take_along_axis(srt, lo[..., None], axis=-1)[..., 0]
+    vhi = jnp.take_along_axis(srt, hi[..., None], axis=-1)[..., 0]
+    q = vlo + (pos - lo.astype(jnp.float32)) * (vhi - vlo)
+    return jnp.maximum(jnp.ceil(q) + 1.0, 1.0).astype(jnp.int32)
+
+
+def class_hvs_from_state(state: OnlineAMState, cfg: HDCConfig,
+                         density=None) -> jax.Array:
+    """Re-threshold the counter file: (..., C, D) counts -> (..., C, W) HVs.
+
+    Sparse: thin each class row to ``density`` (default
+    ``cfg.class_density``); dense: per-element majority over the ``n`` frames
+    currently bundled per class.  ``density`` may be a per-session array
+    broadcastable to ``counts.shape[:-1]`` (the fleet gathers each patient's
+    configured value).
+    """
+    counts = jnp.maximum(state.counts, 0)
+    if cfg.variant == "dense":
+        n = jnp.maximum(state.n, 1)[..., None]
+        return hv.majority_pack(counts, n, cfg.dim)
+    if density is None:
+        density = cfg.class_density
+    thr = _density_threshold(counts, density)
+    return hv.threshold_pack(counts, thr[..., None])
+
+
+def _gated_delta(labels: jax.Array, scores: jax.Array, margin,
+                 valid: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Shared gating rule: (..., C) int32 class deltas + (...) bool gate.
+
+    Gate fires when the prediction is wrong OR the true-vs-rival score
+    margin is below ``margin`` (the confidence gate); the rival is the
+    best-scoring class other than the true one.  ``labels < 0`` (no
+    feedback) and ``valid == False`` (no frame) disable the update.
+    """
+    c = scores.shape[-1]
+    lab = jnp.maximum(labels, 0)
+    pred = jnp.argmax(scores, axis=-1)  # ties -> low, matches am.am_predict
+    one_true = jax.nn.one_hot(lab, c, dtype=jnp.int32)
+    s = scores.astype(jnp.float32)
+    s_true = jnp.take_along_axis(s, lab[..., None], axis=-1)[..., 0]
+    masked = jnp.where(one_true == 1, -jnp.inf, s)
+    rival = jnp.argmax(masked, axis=-1)
+    s_rival = jnp.max(masked, axis=-1)
+    gate = (pred != lab) | (s_true - s_rival < jnp.asarray(margin, jnp.float32))
+    gate = gate & (labels >= 0)
+    if valid is not None:
+        gate = gate & valid
+    one_rival = jax.nn.one_hot(rival, c, dtype=jnp.int32)
+    delta = jnp.where(gate[..., None], one_true - one_rival, 0)
+    return delta, gate
+
+
+def update(state: OnlineAMState, frame_bits: jax.Array, labels: jax.Array,
+           scores: jax.Array, *, margin=0.0,
+           valid: jax.Array | None = None) -> tuple[OnlineAMState, jax.Array]:
+    """Confidence-gated iterative update: one frame per state.
+
+    frame_bits: (..., D) {0,1}; labels: (...,) int; scores: (..., C).  The
+    leading dims of ``state`` and the frame operands must agree (the fleet
+    passes S of each).  Gated frames add their bits to the true class and
+    subtract them from the rival; counts and n clamp at zero (the hardware
+    counters cannot go negative).  Returns ``(new_state, applied)``.
+    """
+    delta, gate = _gated_delta(labels, scores, margin, valid)
+    bits = frame_bits.astype(jnp.int32)[..., None, :]          # (..., 1, D)
+    counts = state.counts + delta[..., None] * bits
+    return OnlineAMState(counts=jnp.maximum(counts, 0),
+                         n=jnp.maximum(state.n + delta, 0)), gate
+
+
+def batch_update(state: OnlineAMState, frame_bits: jax.Array,
+                 labels: jax.Array, scores: jax.Array, *,
+                 margin=0.0) -> tuple[OnlineAMState, jax.Array]:
+    """One epoch of batch-iterative retraining against a single shared state.
+
+    frame_bits: (N, D); labels: (N,); scores: (N, C) — all N gated frames
+    apply at once (one einsum), the standard iterative-retraining epoch.
+    Returns ``(new_state, gate)`` with gate (N,) bool.
+    """
+    delta, gate = _gated_delta(labels, scores, margin, None)   # (N, C)
+    counts = state.counts + jnp.einsum(
+        "nc,nd->cd", delta, frame_bits.astype(jnp.int32))
+    n = state.n + delta.sum(axis=0, dtype=jnp.int32)
+    return OnlineAMState(counts=jnp.maximum(counts, 0),
+                         n=jnp.maximum(n, 0)), gate

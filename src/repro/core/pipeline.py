@@ -34,11 +34,13 @@ from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import am, binding, bundling, classifier, hv
+from repro.core import am, binding, bundling, classifier, hv, online
 from repro.core import im as im_mod
 from repro.core.classifier import HDCConfig
 from repro.core.im import DenseIMParams, IMParams
+from repro.core.online import OnlineAMState
 from repro.kernels.dense_hdc.ops import dense_encode_frames_fused
 from repro.kernels.hdc_am.ops import am_search
 from repro.kernels.hdc_encoder.ops import encode_frames_fused
@@ -144,26 +146,46 @@ def _infer(params, class_hvs: jax.Array, codes: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _train_one_shot(params, codes: jax.Array, labels: jax.Array,
-                    cfg: HDCConfig) -> jax.Array:
+                    cfg: HDCConfig) -> tuple[jax.Array, OnlineAMState]:
     """One-shot class HVs through the SAME encoder as inference.
 
     Sparse: bundle each class's frame HVs with thinning to ``class_density``
     (paper Sec. II-D).  Dense: per-element majority over the class's frames.
-    Returns (n_classes, W) packed class HVs."""
+    Returns ((n_classes, W) packed class HVs, the pre-threshold counter-file
+    state) — the state seeds online continual learning (core.online)."""
     frames = _encode_frames(params, codes, cfg)                  # (B, F, W)
-    bits = hv.unpack_bits(frames, cfg.dim).astype(jnp.int32)
-    flat_bits = bits.reshape(-1, cfg.dim)
-    onehot = jax.nn.one_hot(labels.reshape(-1), cfg.n_classes, dtype=jnp.int32)
-    counts = jnp.einsum("nc,nd->cd", onehot, flat_bits)          # (n_cls, D)
-    if cfg.variant == "dense":
-        n_per_class = jnp.sum(onehot, axis=0)[:, None]
-        return hv.majority_pack(counts, n_per_class, cfg.dim)
+    bits = hv.unpack_bits(frames, cfg.dim).reshape(-1, cfg.dim)
+    state = online.state_from_frames(bits, labels.reshape(-1), cfg.n_classes)
+    return online.class_hvs_from_state(state, cfg), state
 
-    def thin(cls_counts):
-        thr = bundling.threshold_for_density(cls_counts[None, :], cfg.class_density)
-        return hv.threshold_pack(cls_counts[None, :], thr)[0]
 
-    return jax.vmap(thin)(counts)
+@functools.partial(jax.jit, static_argnames=("cfg", "epochs"))
+def _fit_iterative(params, codes: jax.Array, labels: jax.Array,
+                   margin: jax.Array, cfg: HDCConfig,
+                   epochs: int) -> tuple[jax.Array, OnlineAMState, jax.Array]:
+    """One-shot init + ``epochs`` batch-iterative retraining passes.
+
+    Each epoch re-thresholds the counter file to class HVs, scores every
+    frame through the backend-dispatched AM search, and applies the gated
+    add-to-true / subtract-from-rival update (core.online) to all
+    misclassified / low-margin frames at once.  ``epochs=0`` reproduces
+    ``_train_one_shot`` bit-exactly.  Returns (class HVs, state, per-epoch
+    gated-update counts)."""
+    frames = _encode_frames(params, codes, cfg)                  # (B, F, W)
+    flat = frames.reshape(-1, frames.shape[-1])
+    bits = hv.unpack_bits(flat, cfg.dim)
+    lab = labels.reshape(-1)
+    state0 = online.state_from_frames(bits, lab, cfg.n_classes)
+
+    def epoch(state, _):
+        chvs = online.class_hvs_from_state(state, cfg)
+        scores = _am_scores(flat, chvs, cfg)
+        state, gate = online.batch_update(state, bits, lab, scores,
+                                          margin=margin)
+        return state, jnp.sum(gate)
+
+    state, n_upd = jax.lax.scan(epoch, state0, None, length=epochs)
+    return online.class_hvs_from_state(state, cfg), state, n_upd
 
 
 # ---------------------------------------------------------------------------
@@ -174,12 +196,15 @@ def _train_one_shot(params, codes: jax.Array, labels: jax.Array,
 class HDCPipeline:
     """One variant's full datapath: IM params + (optional) trained class HVs.
 
-    Frozen pytree: ``params`` / ``class_hvs`` are leaves, ``cfg`` is static
-    metadata.  All methods are pure — training and calibration return new
-    pipelines."""
+    Frozen pytree: ``params`` / ``class_hvs`` / ``am_state`` are leaves,
+    ``cfg`` is static metadata.  All methods are pure — training and
+    calibration return new pipelines."""
     params: IMParams | DenseIMParams
     cfg: HDCConfig
     class_hvs: jax.Array | None = None           # (n_classes, W) packed
+    # counter-file view of the AM (core.online): set by train_one_shot /
+    # fit_iterative; seeds SeizureSession.adapt and StreamingFleet.adapt
+    am_state: OnlineAMState | None = None
 
     @classmethod
     def init(cls, key: jax.Array, cfg: HDCConfig) -> "HDCPipeline":
@@ -223,10 +248,10 @@ class HDCPipeline:
                 self.cfg.variant == "dense"):
             raise ValueError("cannot cross the sparse/dense params boundary; "
                              "HDCPipeline.init a new pipeline instead")
-        chvs = self.class_hvs
+        chvs, state = self.class_hvs, self.am_state
         if chvs is not None and any(getattr(new, f) != getattr(self.cfg, f)
                                     for f in self._ENCODER_FIELDS):
-            chvs = None
+            chvs = state = None
         params = self.params
         if (new.variant == "sparse_naive"
                 and getattr(params, "item_packed_cache", True) is None):
@@ -243,7 +268,8 @@ class HDCPipeline:
             # the full packed tables as pytree leaves
             params = replace(params, item_packed_cache=None,
                              elec_packed_cache=None)
-        return replace(self, cfg=new, class_hvs=chvs, params=params)
+        return replace(self, cfg=new, class_hvs=chvs, am_state=state,
+                       params=params)
 
     def with_backend(self, backend: str) -> "HDCPipeline":
         return self.with_cfg(backend=backend)
@@ -272,13 +298,54 @@ class HDCPipeline:
                                                  self.cfg, target)
         return self.with_cfg(temporal_threshold=new_cfg.temporal_threshold)
 
+    def _check_labels(self, labels: jax.Array) -> None:
+        """Reject training batches that would silently corrupt class HVs.
+
+        A class with zero examples yields an all-zero class HV (dense:
+        majority of nothing; sparse: thinning all-zero counts) which then
+        scores plausibly in the AM — raise instead.  Skipped under tracing
+        (labels are concrete on every user-facing path)."""
+        if isinstance(labels, jax.core.Tracer):
+            return
+        lab = np.asarray(labels)
+        if lab.size and (lab.min() < 0 or lab.max() >= self.cfg.n_classes):
+            raise ValueError(
+                f"labels must be in [0, {self.cfg.n_classes}), got range "
+                f"[{lab.min()}, {lab.max()}]")
+        missing = sorted(set(range(self.cfg.n_classes)) - set(np.unique(lab)))
+        if missing:
+            raise ValueError(
+                f"classes {missing} have no examples in the training batch; "
+                "their class HVs would be all-zero yet still score in the "
+                "AM — provide at least one frame per class")
+
     def train_one_shot(self, codes: jax.Array, labels: jax.Array) -> "HDCPipeline":
-        """One-shot training: returns a pipeline carrying the class HVs.
+        """One-shot training: returns a pipeline carrying the class HVs and
+        the counter-file ``am_state`` that seeds online adaptation.
 
         codes: (B, T, channels) uint8; labels: (B, F) int per-frame class ids.
         """
-        chvs = _train_one_shot(self.params, codes, labels, self.cfg)
-        return replace(self, class_hvs=chvs)
+        self._check_labels(labels)
+        chvs, state = _train_one_shot(self.params, codes, labels, self.cfg)
+        return replace(self, class_hvs=chvs, am_state=state)
+
+    def fit_iterative(self, codes: jax.Array, labels: jax.Array, *,
+                      epochs: int = 5, margin: float = 0.0) -> "HDCPipeline":
+        """Iterative retraining (Pale et al.): one-shot init, then ``epochs``
+        passes that re-score every frame and apply the gated
+        add-to-true / subtract-from-rival update to the counter file.
+
+        ``margin > 0`` also updates on correct-but-low-confidence frames
+        (score lead over the rival class below ``margin``).  ``epochs=0`` is
+        bit-exact with ``train_one_shot``.  Returns a pipeline carrying the
+        retrained class HVs + ``am_state``."""
+        if epochs < 0:
+            raise ValueError(f"epochs={epochs} must be >= 0")
+        self._check_labels(labels)
+        chvs, state, _ = _fit_iterative(
+            self.params, codes, labels, jnp.asarray(margin, jnp.float32),
+            self.cfg, epochs)
+        return replace(self, class_hvs=chvs, am_state=state)
 
     def scores(self, frames: jax.Array) -> jax.Array:
         """(..., W) frame HVs -> (..., n_classes) AM similarity scores."""
@@ -295,4 +362,5 @@ class HDCPipeline:
 
 
 jax.tree_util.register_dataclass(
-    HDCPipeline, data_fields=["params", "class_hvs"], meta_fields=["cfg"])
+    HDCPipeline, data_fields=["params", "class_hvs", "am_state"],
+    meta_fields=["cfg"])

@@ -8,6 +8,15 @@ HDC streaming fleet (population-scale seizure detection):
   PYTHONPATH=src python -m repro.launch.serve --hdc-fleet \
       --sessions 256 --patients 8 --rounds 4
 
+Durable adaptive fleet: --adapt-every N personalizes every session's AM via
+one jitted fleet-wide online update each N rounds; --ckpt-dir saves the full
+fleet state (streaming accumulators + online AM banks) after the run and
+--resume restores the latest checkpoint to continue mid-stream bit-exactly:
+
+  PYTHONPATH=src python -m repro.launch.serve --hdc-fleet \
+      --sessions 256 --patients 8 --rounds 8 --adapt-every 2 \
+      --ckpt-dir /tmp/fleet-ckpt --resume
+
 On a fleet the same entry points run on the production mesh (--mesh 16x16):
 the LM path shards the KV cache per runtime/sharding.py, the HDC path shards
 the per-session accumulator state along the data axis (serve/fleet.py) while
@@ -39,11 +48,12 @@ def run_hdc_fleet(args) -> None:
     def trained(seed: int) -> HDCPipeline:
         codes = jnp.asarray(
             rng.integers(0, cfg.codes, (1, 4 * cfg.window, cfg.channels), np.uint8))
-        labels = jnp.asarray(rng.integers(0, 2, (1, 4), np.int32))
+        labels = np.asarray(rng.integers(0, 2, (1, 4), np.int32))
+        labels[0, :2] = (0, 1)  # every class needs >= 1 example (empty-class guard)
         pipe = HDCPipeline.init(jax.random.PRNGKey(seed), cfg)
         # per-patient calibrated operating point (the programmed register)
         pipe = pipe.calibrate_density(codes, target=0.2 + 0.05 * (seed % 4))
-        return pipe.train_one_shot(codes, labels)
+        return pipe.train_one_shot(codes, jnp.asarray(labels))
 
     t0 = time.perf_counter()
     bank = {f"patient{p}": trained(p) for p in range(args.patients)}
@@ -57,18 +67,41 @@ def run_hdc_fleet(args) -> None:
     chunks = [rng.integers(0, cfg.codes, (chunk_len, cfg.channels), np.uint8)
               for _ in range(args.sessions)]
     fleet.push(chunks)  # warmup / compile
+
+    # restore AFTER the warmup push: restore overwrites the fleet state, so
+    # the warmup round never leaks into the resumed stream (which would
+    # silently advance it by one chunk per resume)
+    if args.resume and args.ckpt_dir:
+        from repro.ckpt import checkpoint as ckpt
+        if ckpt.latest_step(args.ckpt_dir) is not None:
+            step = fleet.restore(args.ckpt_dir)
+            print(f"resumed fleet from {args.ckpt_dir} step {step} "
+                  f"(frames so far: {int(fleet.frame_indices.sum())})")
+        else:
+            print(f"--resume: no checkpoint under {args.ckpt_dir}, cold start")
     decisions = 0
+    adapted = 0
     t0 = time.perf_counter()
-    for _ in range(args.rounds):
+    for r in range(args.rounds):
         out = fleet.push(chunks)
         decisions += sum(len(o) for o in out)
+        if args.adapt_every and (r + 1) % args.adapt_every == 0:
+            # synthetic feedback: label each session's last frame at random
+            labels = np.where([len(o) > 0 for o in out],
+                              rng.integers(0, cfg.n_classes, args.sessions), -1)
+            adapted += int(fleet.adapt(labels).sum())
     dt = time.perf_counter() - t0
     rate = args.sessions * args.rounds / max(dt, 1e-9)
     print(f"stream: {args.rounds} rounds x {chunk_len} cycles in {dt * 1e3:.1f} ms "
           f"({rate:.0f} session-chunks/s, {decisions} decisions, "
           f"{dt * 1e6 / max(decisions, 1):.1f} us/decision)")
+    if args.adapt_every:
+        print(f"online adaptation: {adapted} gated AM updates across the fleet")
     print(f"compiled step executables: {fleet.compile_count} "
           f"(buckets: {fleet._buckets})")
+    if args.ckpt_dir:
+        path = fleet.save(args.ckpt_dir)
+        print(f"saved fleet checkpoint -> {path}")
 
 
 def run_lm(args) -> None:
@@ -148,6 +181,13 @@ def main():
                     help="cycles per session per round (default: one window)")
     ap.add_argument("--variant", default="sparse_compim",
                     choices=["sparse_naive", "sparse_compim", "dense"])
+    ap.add_argument("--adapt-every", type=int, default=0,
+                    help="run one fleet-wide online AM update every N rounds")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="save the fleet state here after the run")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt-dir "
+                         "before streaming")
     args = ap.parse_args()
     if args.hdc_fleet:
         run_hdc_fleet(args)

@@ -34,8 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import am, hv
-from repro.core.pipeline import HDCConfig, HDCPipeline, spatial_encode
+from repro.core import am, hv, online
+from repro.core.pipeline import HDCConfig, HDCPipeline, _scores, spatial_encode
 from repro.serve import dispatch
 
 
@@ -52,6 +52,20 @@ def _serve_dispatch(tables, class_bank, param_owner, owner, thresholds,
     cls = class_bank[owner]                                       # (B, C, W)
     scores = dispatch.owner_am_scores(frames, cls[:, None], cfg)  # (B, F, C)
     return frames, scores, am.am_predict(scores)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _session_adapt(state, class_hvs, frame_hv, scores, label, margin,
+                   cfg: HDCConfig):
+    """One gated online update for one session (core.online): feed the true
+    label of the last emitted frame, refresh the class HVs from the counter
+    file when the gate fires.  Returns (state, class_hvs, applied)."""
+    bits = hv.unpack_bits(frame_hv, cfg.dim)
+    new_state, applied = online.update(state, bits, label, scores,
+                                       margin=margin)
+    chvs = online.class_hvs_from_state(
+        new_state, cfg, density=jnp.float32(cfg.class_density))
+    return new_state, jnp.where(applied, chvs, class_hvs), applied
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -179,9 +193,18 @@ class SeizureSession:
     chunked pushes are bit-exact with a one-shot ``encode_frames`` of the
     concatenated stream.
 
+    ``adapt(label)`` feeds back the true label of the LAST emitted frame:
+    a confidence-gated online update (core.online) adds the frame's bits to
+    the true class's counter file, subtracts them from the rival's, and
+    re-thresholds this session's class HVs in place — the pipeline object
+    itself stays immutable.  Requires a pipeline trained via
+    ``train_one_shot`` / ``fit_iterative`` (they carry the ``am_state``
+    counter file the update continues from).
+
     One Python object + one jit dispatch per stream per push: for
     population-scale concurrency use ``serve.fleet.StreamingFleet``, which is
-    bit-exact with this class and advances every stream in one jitted step.
+    bit-exact with this class (including ``adapt``) and advances every
+    stream in one jitted step.
     """
 
     def __init__(self, pipeline: HDCPipeline):
@@ -192,11 +215,25 @@ class SeizureSession:
         self._counts = np.zeros((cfg.dim,), np.int32)
         self._filled = 0
         self._frame_index = 0
+        # per-session adaptive AM: seeded from the pipeline, updated by adapt
+        self._class_hvs = pipeline.class_hvs
+        self._online = pipeline.am_state
+        self._last: FrameDecision | None = None
 
     @property
     def cycles_buffered(self) -> int:
         """Cycles accumulated toward the next (incomplete) frame."""
         return self._filled
+
+    @property
+    def class_hvs(self) -> jax.Array:
+        """This session's (possibly adapted) class HVs."""
+        return self._class_hvs
+
+    @property
+    def am_state(self) -> online.OnlineAMState | None:
+        """This session's (possibly adapted) AM counter-file state."""
+        return self._online
 
     def _emit_frame(self) -> FrameDecision:
         cfg = self._pipe.cfg
@@ -205,14 +242,39 @@ class SeizureSession:
             frame = hv.majority_pack(counts, cfg.window, cfg.dim)[0]
         else:
             frame = hv.threshold_pack(counts, cfg.temporal_threshold)[0]
-        scores = np.asarray(self._pipe.scores(frame[None]))[0]
+        scores = np.asarray(_scores(frame[None], self._class_hvs, cfg))[0]
         dec = FrameDecision(frame_index=self._frame_index, scores=scores,
                             prediction=int(np.argmax(scores)),
                             frame_hv=np.asarray(frame))
         self._counts = np.zeros_like(self._counts)
         self._filled = 0
         self._frame_index += 1
+        self._last = dec
         return dec
+
+    def adapt(self, label: int, *, margin: float = 0.0) -> bool:
+        """Online update from the true label of the last emitted frame.
+
+        Returns True when the gated update fired (prediction wrong, or its
+        score lead over the rival class below ``margin``); the session's
+        class HVs are refreshed from the updated counter file.  Bit-exact
+        with ``StreamingFleet.adapt`` on the same stream."""
+        if self._last is None:
+            raise ValueError("no frame emitted yet; adapt() labels the most "
+                             "recent decision")
+        if self._online is None:
+            raise ValueError(
+                "pipeline carries no am_state counter file; train it with "
+                "train_one_shot or fit_iterative before adapting")
+        cfg = self._pipe.cfg
+        if not 0 <= label < cfg.n_classes:
+            raise ValueError(f"label {label} not in [0, {cfg.n_classes})")
+        self._online, self._class_hvs, applied = _session_adapt(
+            self._online, self._class_hvs,
+            jnp.asarray(self._last.frame_hv), jnp.asarray(self._last.scores),
+            jnp.asarray(label, jnp.int32), jnp.asarray(margin, jnp.float32),
+            cfg)
+        return bool(applied)
 
     def push(self, codes: jax.Array) -> list[FrameDecision]:
         """Feed (t, channels) uint8 codes; returns decisions for every frame

@@ -29,6 +29,20 @@ sessions together.  ``lengths`` masks the padding — sessions push chunks of
 ANY length, including 0 — and chunk lengths are bucketed/padded to a fixed
 set so steady streams compile once per bucket.
 
+Online adaptation (core.online): the fleet carries a stacked (S, C, D)
+counter-file bank — each session's private, adaptable view of its patient's
+AM — plus per-session class-HV rows refreshed from it.  ``adapt(labels)``
+applies ONE jitted confidence-gated update across all S sessions (labels
+``-1`` mask out sessions with no feedback), bit-exact with a per-session
+``SeizureSession.adapt`` loop; the step itself tracks each session's last
+emitted frame/scores so the adapt operands never round-trip the host.
+
+Durability: ``save``/``restore`` round-trip the full ``FleetState``
+(streaming accumulators + online AM banks) through ``ckpt.checkpoint`` —
+atomic-rename directories, elastic re-placement under the current mesh — so
+an interrupted fleet resumes mid-stream bit-exactly
+(``launch/serve.py --hdc-fleet --ckpt-dir ... --resume``).
+
 Sharding: pass ``mesh=`` to place the fleet on a device mesh — session-axis
 state and operands shard along the ``batch`` logical axis (-> ``data`` mesh
 axis per runtime/sharding.py), the codebook/AM banks replicate, and the step
@@ -42,14 +56,18 @@ the sessions-per-second win over the looped baseline.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+import hashlib
+import json
+import os
+from dataclasses import dataclass, replace
 from typing import Hashable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hv
+from repro.ckpt import checkpoint as ckpt
+from repro.core import hv, online
 from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.runtime import sharding as shd
 from repro.serve import dispatch
@@ -60,11 +78,23 @@ DEFAULT_BUCKETS = (32, 64, 128, 256)
 
 @dataclass(frozen=True)
 class FleetState:
-    """Device-resident state of all S sessions (a pytree of stacked leaves)."""
+    """Device-resident state of all S sessions (a pytree of stacked leaves).
+
+    The first block is the streaming state; the second is the online
+    continual-learning state — per-session counter-file AM banks, the class
+    rows re-thresholded from them, and the last emitted frame's operands
+    (what ``adapt`` consumes).  Checkpointing the whole dataclass captures a
+    fleet mid-stream."""
 
     counts: jax.Array  # (S, D) int32 temporal accumulators
     filled: jax.Array  # (S,) int32 cycles toward each next frame
     frame_index: jax.Array  # (S,) int32 frames emitted so far
+    class_rows: jax.Array  # (S, C, W) uint32 per-session (adaptive) AM rows
+    am_counts: jax.Array  # (S, C, D) int32 online counter-file bank
+    am_n: jax.Array  # (S, C) int32 frames bundled per class
+    last_frame: jax.Array  # (S, W) uint32 last emitted frame HV
+    last_scores: jax.Array  # (S, C) int32 last emitted frame's AM scores
+    has_frame: jax.Array  # (S,) int32 1 once a session has emitted
 
 
 @dataclass(frozen=True)
@@ -77,10 +107,27 @@ class FleetOut:
 
 
 for _cls, _fields in (
-    (FleetState, ["counts", "filled", "frame_index"]),
+    (FleetState, ["counts", "filled", "frame_index", "class_rows",
+                  "am_counts", "am_n", "last_frame", "last_scores",
+                  "has_frame"]),
     (FleetOut, ["frames", "scores"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
+
+# logical sharding axes per FleetState leaf: session state splits along the
+# batch axis, everything trailing replicates (used by the step's constraints
+# and by the elastic checkpoint restore)
+_STATE_AXES = {
+    "counts": ("batch", None),
+    "filled": ("batch",),
+    "frame_index": ("batch",),
+    "class_rows": ("batch", None, None),
+    "am_counts": ("batch", None, None),
+    "am_n": ("batch", None),
+    "last_frame": ("batch", None),
+    "last_scores": ("batch", None),
+    "has_frame": ("batch",),
+}
 
 
 def _block_len(t_pad: int, cfg: HDCConfig) -> int:
@@ -98,7 +145,6 @@ def _fleet_step(
     state: FleetState,
     tables: jax.Array,
     owner: jax.Array,
-    class_rows: jax.Array,
     thresholds: jax.Array,
     chunk: jax.Array,
     lengths: jax.Array,
@@ -111,7 +157,11 @@ def _fleet_step(
 
     chunk: (S, t_pad, channels) uint8; lengths: (S,) int32 valid cycles per
     session; masks: (S, K+1, t_pad) f32 host-built cycle masks (rows 0..K-1
-    = cycles closing each completed frame, row K = leftover tail).
+    = cycles closing each completed frame, row K = leftover tail).  Frames
+    score against ``state.class_rows`` (refreshed by ``adapt``), and the
+    step records each emitting session's last frame HV + scores — the
+    operands a later ``adapt`` call consumes, captured inside the same
+    jitted program.
     """
     s, t_pad, _ = chunk.shape
     kp1 = masks.shape[1]
@@ -146,16 +196,72 @@ def _fleet_step(
         frames = hv.majority_pack(frame_counts, cfg.window, cfg.dim)
     else:
         frames = hv.threshold_pack(frame_counts, thresholds[:, None, None])
-    scores = dispatch.owner_am_scores(frames, class_rows[:, None], cfg)
+    scores = dispatch.owner_am_scores(frames, state.class_rows[:, None], cfg)
     new_counts = seg[:, -1] + jnp.where(emits[:, None], 0, state.counts)
-    new_state = FleetState(
-        counts=shd.constrain(new_counts, ("batch", None), ctx),
+    # capture each emitting session's LAST completed frame for adapt
+    sidx = jnp.arange(s)
+    last_slot = jnp.maximum(n_emit - 1, 0)
+    new_state = replace(
+        state,
+        counts=shd.constrain(new_counts, _STATE_AXES["counts"], ctx),
         filled=shd.constrain(
-            state.filled + lengths - n_emit * cfg.window, ("batch",), ctx
+            state.filled + lengths - n_emit * cfg.window,
+            _STATE_AXES["filled"], ctx,
         ),
-        frame_index=shd.constrain(state.frame_index + n_emit, ("batch",), ctx),
+        frame_index=shd.constrain(
+            state.frame_index + n_emit, _STATE_AXES["frame_index"], ctx
+        ),
+        last_frame=shd.constrain(
+            jnp.where(emits[:, None], frames[sidx, last_slot],
+                      state.last_frame),
+            _STATE_AXES["last_frame"], ctx,
+        ),
+        last_scores=shd.constrain(
+            # int32 pinned: the popcount scores promote to int64 under
+            # JAX_ENABLE_X64, which would drift the carried state dtype
+            # (and the jit cache key) after the first step
+            jnp.where(emits[:, None], scores[sidx, last_slot],
+                      state.last_scores).astype(jnp.int32),
+            _STATE_AXES["last_scores"], ctx,
+        ),
+        has_frame=shd.constrain(
+            state.has_frame | emits.astype(jnp.int32),
+            _STATE_AXES["has_frame"], ctx,
+        ),
     )
     return new_state, FleetOut(frames=frames, scores=scores)
+
+
+def _fleet_adapt(
+    state: FleetState,
+    labels: jax.Array,
+    margin: jax.Array,
+    density: jax.Array,
+    *,
+    cfg: HDCConfig,
+    ctx: shd.ShardCtx,
+) -> tuple[FleetState, jax.Array]:
+    """One gated online update for ALL S sessions (core.online).
+
+    labels: (S,) int32 true class of each session's last emitted frame
+    (-1 = no feedback); density: (S,) f32 per-patient ``class_density``.
+    Sessions whose gate fires get their counter-file rows updated and their
+    class rows re-thresholded; everyone else's state passes through
+    bit-identically.  Returns (state, applied (S,) bool)."""
+    bits = hv.unpack_bits(state.last_frame, cfg.dim)            # (S, D)
+    am_state = online.OnlineAMState(counts=state.am_counts, n=state.am_n)
+    new_am, applied = online.update(
+        am_state, bits, labels, state.last_scores,
+        margin=margin, valid=state.has_frame > 0)
+    chvs = online.class_hvs_from_state(new_am, cfg, density=density[:, None])
+    class_rows = jnp.where(applied[:, None, None], chvs, state.class_rows)
+    new_state = replace(
+        state,
+        am_counts=shd.constrain(new_am.counts, _STATE_AXES["am_counts"], ctx),
+        am_n=shd.constrain(new_am.n, _STATE_AXES["am_n"], ctx),
+        class_rows=shd.constrain(class_rows, _STATE_AXES["class_rows"], ctx),
+    )
+    return new_state, applied
 
 
 class StreamingFleet:
@@ -172,6 +278,12 @@ class StreamingFleet:
     the smallest configured bucket (longer chunks are split over multiple
     steps), so a steady stream compiles once per bucket — see
     ``compile_count``.
+
+    ``adapt(labels)`` personalizes AMs in place: one jitted gated update for
+    the whole fleet against each session's last emitted frame (labels of -1
+    mask out sessions without feedback), bit-exact with per-session
+    ``SeizureSession.adapt`` calls.  ``save``/``restore`` checkpoint the
+    full fleet state (streaming + online AM banks) for mid-stream resume.
     """
 
     def __init__(
@@ -208,9 +320,23 @@ class StreamingFleet:
         # replicated pre-bound codebook bank (P_unique, C, codes, W)
         self._tables = put(tables, (None,) * 4)
         self._bank = put(bank, (None, None, None))  # replicated (P, C, W)
-        self._class_rows = put(bank[owner_idx], ("batch", None, None))
         self._thresholds = put(jnp.asarray(thresholds[owner_idx]), ("batch",))
         self._param_owner = put(jnp.asarray(param_rows[owner_idx]), ("batch",))
+        # online-adaptation operands: each session starts from its patient's
+        # class rows + counter-file am_state (host copies: the jitted step
+        # donates its state, so reset() must rebuild fresh device arrays)
+        self._class_rows0 = np.asarray(bank)[owner_idx]  # (S, C, W)
+        self._density = put(
+            jnp.asarray(np.asarray(
+                [p.cfg.class_density for p in pipes], np.float32)[owner_idx]),
+            ("batch",))
+        if all(p.am_state is not None for p in pipes):
+            self._am_counts0 = np.stack(
+                [np.asarray(pipes[i].am_state.counts) for i in owner_idx])
+            self._am_n0 = np.stack(
+                [np.asarray(pipes[i].am_state.n) for i in owner_idx])
+        else:  # bank mixes in externally built pipelines: adapt unavailable
+            self._am_counts0 = self._am_n0 = None
         self._state = self._zero_state()
         # host mirrors of filled/frame_index: the emission schedule (and so
         # the step's cycle masks) is a pure function of the pushed lengths,
@@ -222,6 +348,13 @@ class StreamingFleet:
             functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx),
             donate_argnums=(0,),
         )
+        # NOT donated: several state leaves pass through adapt untouched and
+        # XLA cannot alias every same-shaped pair, which trips the
+        # donation warning; adapt is rare relative to push, so the one
+        # transient copy is the cheaper trade
+        self._adapt_step = jax.jit(
+            functools.partial(_fleet_adapt, cfg=self._cfg, ctx=self._ctx),
+        )
 
     # -- state management ---------------------------------------------------
 
@@ -230,16 +363,34 @@ class StreamingFleet:
         return jax.device_put(x, s) if s is not None else jnp.asarray(x)
 
     def _zero_state(self) -> FleetState:
+        s, cfg = self._n, self._cfg
+        c = self._class_rows0.shape[1]
+        if self._am_counts0 is not None:
+            am_counts, am_n = self._am_counts0, self._am_n0
+        else:
+            am_counts = np.zeros((s, c, cfg.dim), np.int32)
+            am_n = np.zeros((s, c), np.int32)
+        axes = _STATE_AXES
         return FleetState(
             counts=self._put(
-                jnp.zeros((self._n, self._cfg.dim), jnp.int32), ("batch", None)
-            ),
-            filled=self._put(jnp.zeros((self._n,), jnp.int32), ("batch",)),
-            frame_index=self._put(jnp.zeros((self._n,), jnp.int32), ("batch",)),
+                jnp.zeros((s, cfg.dim), jnp.int32), axes["counts"]),
+            filled=self._put(jnp.zeros((s,), jnp.int32), axes["filled"]),
+            frame_index=self._put(
+                jnp.zeros((s,), jnp.int32), axes["frame_index"]),
+            class_rows=self._put(
+                jnp.asarray(self._class_rows0), axes["class_rows"]),
+            am_counts=self._put(jnp.asarray(am_counts), axes["am_counts"]),
+            am_n=self._put(jnp.asarray(am_n), axes["am_n"]),
+            last_frame=self._put(
+                jnp.zeros((s, cfg.words), jnp.uint32), axes["last_frame"]),
+            last_scores=self._put(
+                jnp.zeros((s, c), jnp.int32), axes["last_scores"]),
+            has_frame=self._put(jnp.zeros((s,), jnp.int32), axes["has_frame"]),
         )
 
     def reset(self) -> None:
-        """Zero all accumulators, fill levels and frame indices."""
+        """Zero all accumulators, fill levels and frame indices, and restore
+        every session's AM to its patient's trained (pre-adaptation) state."""
         self._state = self._zero_state()
         self._filled_h[:] = 0
         self._fidx_h[:] = 0
@@ -348,7 +499,6 @@ class StreamingFleet:
                 self._state,
                 self._tables,
                 self._param_owner,
-                self._class_rows,
                 self._thresholds,
                 jnp.asarray(batch),
                 jnp.asarray(round_len, dtype=jnp.int32),
@@ -378,3 +528,120 @@ class StreamingFleet:
                         frame_hv=frames[s, k],
                     )
                 )
+
+    # -- online adaptation ----------------------------------------------------
+
+    @property
+    def class_rows(self) -> np.ndarray:
+        """(S, C, W) per-session (possibly adapted) class HV rows."""
+        return np.asarray(self._state.class_rows)
+
+    def adapt(self, labels: Sequence[int], *,
+              margin: float = 0.0) -> np.ndarray:
+        """Personalize all S sessions' AMs from one feedback label each.
+
+        ``labels[i]`` is the true class of session ``i``'s LAST emitted
+        frame; ``-1`` means no feedback (skip).  Sessions that have not
+        emitted a frame yet are skipped too.  One jitted gated update
+        (core.online) for the whole fleet: misclassified / low-margin
+        sessions add the frame's bits to the true class's counters, subtract
+        from the rival's, and get their class rows re-thresholded.
+        Bit-exact with calling ``SeizureSession.adapt`` per stream.  Returns
+        the (S,) bool mask of sessions whose update fired."""
+        if self._am_counts0 is None:
+            raise ValueError(
+                "fleet bank has pipelines without am_state counter files; "
+                "train them with train_one_shot/fit_iterative to enable "
+                "adapt()")
+        lab = np.asarray(labels, np.int64)
+        if lab.shape != (self._n,):
+            raise ValueError(
+                f"adapt needs one label per session ({self._n}), got shape "
+                f"{lab.shape}")
+        if lab.max(initial=-1) >= self._cfg.n_classes:
+            raise ValueError(
+                f"labels must be < n_classes={self._cfg.n_classes} "
+                "(-1 = no feedback)")
+        self._state, applied = self._adapt_step(
+            self._state,
+            jnp.asarray(lab, dtype=jnp.int32),
+            jnp.asarray(margin, jnp.float32),
+            self._density,
+        )
+        return np.asarray(applied)
+
+    # -- durability -----------------------------------------------------------
+
+    def _meta(self) -> dict:
+        return {
+            "kind": "hdc_fleet",
+            "n_sessions": self._n,
+            "dim": self._cfg.dim,
+            "window": self._cfg.window,
+            "n_classes": self._cfg.n_classes,
+            "variant": self._cfg.variant,
+            "bank": self._bank_fingerprint(),
+        }
+
+    def _bank_fingerprint(self) -> str:
+        """Digest of everything a checkpointed state is only valid against:
+        the per-session codebook tables, initial class rows / AM banks and
+        the per-session operand registers.  A fleet built from DIFFERENT
+        patient pipelines shares none of these, and restoring state across
+        banks would silently score one bank's frames against another's class
+        HVs."""
+        h = hashlib.sha256()
+        operands = [self._tables, self._param_owner, self._thresholds,
+                    self._density, self._class_rows0]
+        if self._am_counts0 is not None:
+            operands += [self._am_counts0, self._am_n0]
+        for a in operands:
+            arr = np.ascontiguousarray(np.asarray(a))
+            h.update(str((arr.dtype.str, arr.shape)).encode())
+            h.update(arr.tobytes())
+        return h.hexdigest()[:16]
+
+    def _state_shardings(self) -> FleetState | None:
+        if self._ctx.mesh is None:
+            return None
+        return FleetState(**{
+            f: shd.sharding_for(axes, self._ctx,
+                                jnp.shape(getattr(self._state, f)))
+            for f, axes in _STATE_AXES.items()
+        })
+
+    def save(self, root: str, step: int | None = None) -> str:
+        """Checkpoint the full fleet state (streaming accumulators + online
+        AM banks) under ``root`` via ckpt.checkpoint's atomic-rename
+        contract; ``step`` defaults to one past the latest.  Returns the
+        checkpoint directory."""
+        if step is None:
+            latest = ckpt.latest_step(root)
+            step = 0 if latest is None else latest + 1
+        return ckpt.save(root, step, self._state, meta=self._meta())
+
+    def restore(self, root: str, step: int | None = None) -> int:
+        """Restore a ``save``d fleet state into THIS fleet (same bank
+        geometry and session count), elastic under the current mesh: leaves
+        re-shard onto however many devices the restored fleet runs on.  The
+        host-side emission schedule resumes from the restored fill levels,
+        so pushes continue mid-stream bit-exactly.  Returns the step."""
+        if step is None:
+            step = ckpt.latest_step(root)
+            if step is None:
+                raise FileNotFoundError(f"no fleet checkpoint under {root!r}")
+        with open(os.path.join(root, f"step_{step:08d}",
+                               "manifest.json")) as f:
+            meta = json.load(f).get("meta", {})
+        want = self._meta()
+        bad = {k: (meta.get(k), v) for k, v in want.items()
+               if meta.get(k) != v}
+        if bad:
+            raise ValueError(
+                f"checkpoint does not match this fleet: {bad} "
+                "(saved, expected)")
+        self._state = ckpt.restore(root, step, like=self._state,
+                                   shardings=self._state_shardings())
+        self._filled_h = np.asarray(self._state.filled).astype(np.int64)
+        self._fidx_h = np.asarray(self._state.frame_index).astype(np.int64)
+        return step

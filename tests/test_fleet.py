@@ -32,9 +32,10 @@ def _trained(variant: str, seed: int, **overrides) -> HDCPipeline:
     cfg = _cfg(variant, **overrides)
     codes = jnp.asarray(rng.integers(0, 64, (2, 4 * WINDOW, CHANNELS), np.uint8))
     frames = codes.shape[1] // cfg.window
-    labels = jnp.asarray(rng.integers(0, 2, (2, frames), np.int32))
+    labels = np.asarray(rng.integers(0, 2, (2, frames), np.int32))
+    labels[0, :2] = (0, 1)  # every class needs >= 1 example
     pipe = HDCPipeline.init(jax.random.PRNGKey(seed), cfg)
-    return pipe.train_one_shot(codes, labels)
+    return pipe.train_one_shot(codes, jnp.asarray(labels))
 
 
 def _chunk(rng, t):

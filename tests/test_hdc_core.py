@@ -10,7 +10,8 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import am, binding, bundling, classifier, dense, hdtrain, hv, metrics
+from repro.core import am, binding, bundling, classifier, hv, metrics
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
 jax.config.update("jax_platform_name", "cpu")
@@ -171,7 +172,8 @@ def test_one_shot_detection_end_to_end(params, patient):
     codes = jnp.asarray(rec.codes[None])
     labels = jnp.asarray(ieeg.frame_labels(rec, CFG.window)[None])
     cfg = classifier.with_density_target(params, codes, CFG, 0.25)
-    class_hvs = hdtrain.train_one_shot(params, codes, labels, cfg)
+    class_hvs = HDCPipeline(params=params, cfg=cfg).train_one_shot(
+        codes, labels).class_hvs
     dens = np.asarray(hv.density(class_hvs, CFG.dim))
     assert (np.abs(dens - 0.5) < 0.12).all(), f"class densities {dens} not ~50%"
     results = []
@@ -185,15 +187,15 @@ def test_one_shot_detection_end_to_end(params, patient):
 
 
 def test_dense_baseline_end_to_end(patient):
-    dcfg = dense.DenseHDCConfig()
-    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
+    dcfg = HDCConfig(variant="dense")
     rec = patient.records[0]
     codes = jnp.asarray(rec.codes[None])
     labels = jnp.asarray(ieeg.frame_labels(rec, dcfg.window)[None])
-    class_hvs = dense.train_one_shot(dparams, codes, labels, dcfg)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(7), dcfg).train_one_shot(
+        codes, labels)
     results = []
     for rec2 in patient.records[1:]:
-        _, preds = dense.infer(dparams, class_hvs, jnp.asarray(rec2.codes[None]), dcfg)
+        _, preds = pipe.infer(jnp.asarray(rec2.codes[None]))
         results.append(metrics.detection_metrics(
             np.asarray(preds[0]), ieeg.onset_frame(rec2, dcfg.window)))
     agg = metrics.aggregate(results)
@@ -223,8 +225,74 @@ def test_metrics_postprocess():
     assert fired[5] == 1 and fired[1] == 0
 
 
+def test_metrics_postprocess_stream_start_requires_full_k():
+    """Regression: the old ``min(k, f - lo + 1)`` relaxation degenerated to
+    1-of-1 at stream start — a single ictal flicker at frame 0 fired the
+    detector.  The full k votes are required at every frame."""
+    flicker = np.asarray([1, 0, 0, 0, 0])
+    np.testing.assert_array_equal(metrics.postprocess(flicker, k=2, m=3),
+                                  [0, 0, 0, 0, 0])
+    # frame 0 can never fire with k=2; frame 1 fires only with 2 real votes
+    burst = np.asarray([1, 1, 1, 0, 0])
+    np.testing.assert_array_equal(metrics.postprocess(burst, k=2, m=3),
+                                  [0, 1, 1, 0, 0])
+    # a frame-0-only false alarm no longer corrupts the delay metric
+    r = metrics.detection_metrics(flicker, onset_frame=2)
+    assert not r.detected and not r.false_alarm
+    with pytest.raises(ValueError, match="1 <= k <= m"):
+        metrics.postprocess(flicker, k=4, m=3)
+
+
 def test_metrics_delay():
     preds = np.zeros(20, np.int32)
     preds[12:] = 1
     r = metrics.detection_metrics(preds, onset_frame=10)
     assert r.detected and r.delay_frames == 3.0 and not r.false_alarm
+
+
+# ---------------------------------------------------------------------------
+# config geometry validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(dim=1000),                    # not a multiple of 32 (words truncates)
+    dict(dim=0),
+    dict(dim=96, segments=7),          # dim % segments != 0 (seg_len truncates)
+    dict(segments=0),
+    dict(dim=4096, segments=8),        # seg_len 512 wraps the uint8 positions
+    dict(lbp_bits=9),                  # codes would overflow uint8
+    dict(lbp_bits=0),
+    dict(window=0),
+    dict(n_classes=0),
+    dict(class_density=1.5),           # silently thins class HVs to zero
+    dict(class_density=0.0),
+])
+def test_config_rejects_corrupt_geometry(bad):
+    with pytest.raises(ValueError):
+        classifier.HDCConfig(**bad)
+
+
+def test_config_dense_skips_segment_checks():
+    # the dense datapath has no segment structure: big dims stay legal
+    cfg = classifier.HDCConfig(variant="dense", dim=4096, segments=8)
+    assert cfg.words == 128
+
+
+def test_train_rejects_empty_class(patient):
+    """A class with zero training examples would silently yield an all-zero
+    class HV that still scores plausibly in the AM — reject instead."""
+    rec = patient.records[0]
+    codes = jnp.asarray(rec.codes[None, :2048])
+    frames = 2048 // CFG.window
+    all_interictal = jnp.zeros((1, frames), jnp.int32)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(42), CFG)
+    with pytest.raises(ValueError, match="no examples"):
+        pipe.train_one_shot(codes, all_interictal)
+    with pytest.raises(ValueError, match="no examples"):
+        pipe.fit_iterative(codes, all_interictal, epochs=2)
+    dense_pipe = HDCPipeline.init(jax.random.PRNGKey(7),
+                                  HDCConfig(variant="dense"))
+    with pytest.raises(ValueError, match="no examples"):
+        dense_pipe.train_one_shot(codes, all_interictal)
+    with pytest.raises(ValueError, match=r"labels must be in"):
+        pipe.train_one_shot(codes, all_interictal + 7)

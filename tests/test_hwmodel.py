@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import classifier, dense, hwmodel
+from repro.core import classifier, hwmodel
+from repro.core import im as im_mod
 from repro.data import ieeg
 
 jax.config.update("jax_platform_name", "cpu")
@@ -18,7 +19,8 @@ jax.config.update("jax_platform_name", "cpu")
 def reports():
     cfg = classifier.HDCConfig(spatial_threshold=1)
     params = classifier.init_params(jax.random.PRNGKey(42), cfg)
-    dparams = dense.init_params(jax.random.PRNGKey(7), dense.DenseHDCConfig())
+    dparams = im_mod.make_dense_im(jax.random.PRNGKey(7), channels=cfg.channels,
+                                   codes=cfg.codes, dim=cfg.dim)
     codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
     es, asc = hwmodel.calibration_factors(params, codes, cfg)
     return {

@@ -9,7 +9,8 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import classifier, dense, hv
+from repro.core import classifier, hv
+from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 from repro.kernels.hdc_encoder.kernel import encoder_pallas
 from repro.kernels.hdc_encoder.ref import encoder_ref
@@ -144,11 +145,11 @@ def test_dense_kernel_vs_ref(b, f, window, c, dim):
 
 
 def test_dense_fused_matches_core():
-    dcfg = dense.DenseHDCConfig()
-    dparams = dense.init_params(jax.random.PRNGKey(7), dcfg)
+    dcfg = HDCConfig(variant="dense")
+    pipe = HDCPipeline.init(jax.random.PRNGKey(7), dcfg)
     codes = jnp.asarray(ieeg.make_patient(5, n_seizures=1).records[0].codes[None, :1024])
-    fused = dense_encode_frames_fused(dparams, codes, dcfg, use_kernel=True)
-    unfused = dense.encode_frames(dparams, codes, dcfg)
+    fused = dense_encode_frames_fused(pipe.params, codes, dcfg, use_kernel=True)
+    unfused = pipe.encode_frames(codes)   # jnp backend = unfused reference
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
 
 

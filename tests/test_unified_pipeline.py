@@ -24,10 +24,14 @@ def patient():
 
 @pytest.fixture(scope="module")
 def train_data(patient):
+    # slice straddling the seizure onset so BOTH classes have examples
+    # (train_one_shot now rejects empty classes — the all-zero-HV bugfix)
     rec = patient.records[0]
-    codes = jnp.asarray(rec.codes[None, :2048])
-    labels = jnp.asarray(ieeg.frame_labels(rec, WINDOW)[None, : 2048 // WINDOW])
-    return codes, labels
+    start = (rec.onset_sample // WINDOW - 4) * WINDOW
+    codes = jnp.asarray(rec.codes[None, start:start + 2048])
+    labels = ieeg.frame_labels(rec, WINDOW)[start // WINDOW:][: 2048 // WINDOW]
+    assert set(labels) == {0, 1}
+    return codes, jnp.asarray(labels[None])
 
 
 def _cfg(variant: str, backend: str = "jnp") -> HDCConfig:
