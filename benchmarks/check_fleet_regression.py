@@ -1,0 +1,78 @@
+"""CI perf-regression gate for the fleet benchmark.
+
+Compares the ``fleet.*.speedup`` rows of a freshly produced BENCH_fleet.json
+against a committed reference and fails (exit 1) when any matching row's
+fleet-vs-baseline speedup regressed by more than ``--tolerance`` (default
+25%).  Speedups are RATIOS of two timings from the same process on the same
+machine, so they transfer across runner hardware far better than absolute
+times; the committed CI reference (benchmarks/BENCH_fleet_tiny.json) uses
+the BENCH_TINY geometry so the gate stays stable on small shared runners.
+
+Usage::
+
+    python -m benchmarks.check_fleet_regression FRESH.json REFERENCE.json \
+        [--tolerance 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_SPEEDUP = re.compile(r"^([0-9.]+)x ")
+
+
+def speedups(path: str) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("status") != "ok":
+        raise SystemExit(f"{path}: benchmark status is not ok: "
+                         f"{payload.get('error')}")
+    out: dict[str, float] = {}
+    for row in payload.get("rows", []):
+        name = row.get("name", "")
+        if not (name.startswith("fleet.") and name.endswith(".speedup")):
+            continue
+        m = _SPEEDUP.match(row.get("derived", ""))
+        if not m:
+            raise SystemExit(f"{path}: unparseable speedup row {row!r}")
+        out[name] = float(m.group(1))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="BENCH_fleet.json from this run")
+    ap.add_argument("reference", help="committed reference BENCH_fleet.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+
+    fresh = speedups(args.fresh)
+    ref = speedups(args.reference)
+    common = sorted(set(fresh) & set(ref))
+    if not common:
+        print(f"no overlapping fleet.*.speedup rows between {args.fresh} "
+              f"({sorted(fresh)}) and {args.reference} ({sorted(ref)})",
+              file=sys.stderr)
+        return 1
+
+    failed = []
+    for name in common:
+        floor = ref[name] * (1.0 - args.tolerance)
+        status = "OK" if fresh[name] >= floor else "REGRESSED"
+        print(f"{name}: fresh {fresh[name]:.2f}x vs reference "
+              f"{ref[name]:.2f}x (floor {floor:.2f}x) -> {status}")
+        if fresh[name] < floor:
+            failed.append(name)
+    if failed:
+        print(f"fleet speedup regression >{args.tolerance:.0%} in: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

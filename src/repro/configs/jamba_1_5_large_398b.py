@@ -1,7 +1,8 @@
 """jamba-1.5-large-398b [arXiv:2403.19887; hf] — hybrid Mamba+attention 1:7
 interleave (1 attention per 8-layer period block), MoE 16e top-2 on every
 other layer.  bf16 optimizer state (optim.OptConfig.state_dtype) is the
-intended training mode at this size; see DESIGN.md §4."""
+intended training mode at this size (fp32 state would not fit the assumed
+fleet)."""
 from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(

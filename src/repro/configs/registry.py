@@ -1,7 +1,8 @@
 """Architecture registry: ``--arch <id>`` -> ArchConfig.
 
 Also owns the per-arch shape applicability matrix (which of the four
-assigned input shapes each architecture runs; see DESIGN.md §5).
+assigned input shapes each architecture runs; the matrix in this module is
+the single source of truth).
 """
 
 from __future__ import annotations

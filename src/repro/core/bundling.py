@@ -82,6 +82,8 @@ def temporal_counts(frames: jax.Array, dim: int) -> jax.Array:
 
     Hardware: a D x 8-bit register file (8192 bits for D=1024) accumulating
     for T = 256 cycles.  Counts are <= T so 8 bits suffice (paper Sec. II-C).
+    For T a multiple of 32 this runs as a bit-plane popcount adder
+    (hv.bitplane_counts) — same integers, no unpacked (..., T, D) expansion.
     """
     return hv.unpacked_counts(frames, axis=-2, dim=dim)
 

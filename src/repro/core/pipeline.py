@@ -86,6 +86,7 @@ def _encode_frames_jnp(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
         return classifier.encode_frames(params, codes, cfg)
     framed = classifier.frame_view(codes, cfg.window)
     spatial = spatial_encode(params, framed, cfg)               # (B, F, win, W)
+    # window-length reduction -> bit-plane popcount adder (hv.bitplane_counts)
     counts = hv.unpacked_counts(spatial, axis=-2, dim=cfg.dim)
     return hv.majority_pack(counts, cfg.window, cfg.dim)
 

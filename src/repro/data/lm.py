@@ -13,7 +13,7 @@ precomputed embeddings):
   vlm    `media` (B, M, d_model) patch embeddings; text length = seq - M so
          the backbone sees exactly `seq` positions.
   audio  `frames` (B, seq, d_model) to the encoder; decoder text length =
-         seq // 8 for train/prefill (ASR-ish ratio, see DESIGN.md).
+         seq // 8 for train/prefill (an ASR-ish 8:1 frame-to-token ratio).
 """
 
 from __future__ import annotations

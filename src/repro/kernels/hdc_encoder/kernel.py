@@ -10,7 +10,7 @@ One grid step produces ONE time-frame HV for one (batch, frame) cell:
 Fusing the whole encoder keeps the per-cycle 1024-bit spatial HVs and the
 8-bit temporal counters in VMEM: HBM traffic is just 56-bit positions in and
 one packed HV out per frame (the TPU analogue of the CompIM energy win; see
-DESIGN.md §2).
+README.md "Kernel & datapath design").
 
 VMEM budget per grid step (defaults window=256, C=64, S=8, L=128):
   positions block  256*64*8  B   = 128 KiB

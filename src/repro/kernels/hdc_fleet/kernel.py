@@ -1,0 +1,120 @@
+"""Fused fleet-step kernel: spatial bundling + bit-plane temporal counts.
+
+One grid cell is (session, 32-cycle time group).  The kernel consumes
+owner-gathered PRE-BOUND packed codebook rows (binding folded into the table
+build, serve/dispatch.py) and keeps the whole per-group pipeline in VMEM:
+
+    bound rows (32, C, W) uint32
+        --spatial bundle-->  (32, W) per-cycle packed HVs
+           (OR tree / adder tree + thinning / majority, per variant)
+        --bit transpose-->   (32, W) time-packed bit planes
+           (one uint32 = 32 cycles of one bit position)
+        --masked popcount--> (K+1, 32, W) int32 counter bank
+           accumulated across time groups, like hdc_encoder's counter bank
+
+HBM traffic per group is the bound rows in and (on the last group) one
+(K+1, D) count bank out — the per-cycle HVs, the bit planes and the
+temporal counters never leave VMEM, and no float math or 32x unpacked
+expansion exists anywhere (the TPU analogue of the paper's binary-domain
+argument; see README.md "Kernel & datapath design").
+
+VMEM per grid step (defaults window=256, C=64, D=1024, K=1):
+  bound block   32*64*32*4 B = 256 KiB
+  spatial/planes  32*32*4 B  =   4 KiB
+  counter bank  2*32*32*4 B  =   8 KiB
+
+The emission schedule arrives as time-packed per-slot cycle masks
+(ref.emission_masks) computed on device from (filled, lengths): bit j of
+mask word g selects cycle 32 g + j into a slot, so the masked popcount IS
+the temporal bundling of that slot.  Bit-exact with ref.fleet_counts_ref
+(tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import hv
+
+
+def _spatial_bundle(bound: jax.Array, *, mode: str, channels: int, dim: int,
+                    threshold: int) -> jax.Array:
+    """(32, C, W) bound rows -> (32, W) per-cycle packed spatial HVs.
+
+    Mirrors dispatch.owner_spatial_encode: ``or`` = OR tree (optimized
+    sparse), ``thin`` = adder tree + threshold (naive sparse), ``majority``
+    = adder tree + majority (dense).
+    """
+    if mode == "or":
+        x = bound
+        n = x.shape[1]
+        while n > 1:  # pairwise OR tree, fully packed
+            half = n // 2
+            merged = x[:, :half] | x[:, half:2 * half]
+            if n % 2:
+                merged = jnp.concatenate([merged, x[:, 2 * half:]], axis=1)
+            x = merged
+            n = x.shape[1]
+        return x[:, 0]
+    # count variants need per-bit channel sums
+    w = dim // 32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, channels, w, 32), 3)
+    bits = (bound[..., None] >> shifts) & jnp.uint32(1)       # (32, C, w, 32)
+    counts = jnp.sum(bits.astype(jnp.int32), axis=1, dtype=jnp.int32)
+    if mode == "thin":
+        keep = counts >= threshold
+    else:  # majority (ties broken low, matches hv.majority_pack)
+        keep = counts * 2 > channels
+    pack_shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, w, 32), 2)
+    return jnp.sum(keep.astype(jnp.uint32) << pack_shifts, axis=2,
+                   dtype=jnp.uint32)
+
+
+def _fleet_kernel(bound_ref, tm_ref, out_ref, *, mode: str, channels: int,
+                  dim: int, threshold: int):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bound = bound_ref[0]                                   # (32, C, W)
+    words = _spatial_bundle(bound, mode=mode, channels=channels, dim=dim,
+                           threshold=threshold)            # (32, W)
+    planes = hv.bit_transpose32(words)                     # (32b, W)
+    tm = tm_ref[0, :, 0]                                   # (K+1,) uint32
+    # masked popcount: one AND + popcount bundles 32 cycles into each slot
+    contrib = hv.lax_popcount(planes[None] & tm[:, None, None])
+    out_ref[0] += contrib.astype(jnp.int32)                # (1, K+1, 32, W)
+
+
+def fleet_counts_pallas(bound: jax.Array, tm: jax.Array, *, mode: str,
+                        dim: int, threshold: int = 1,
+                        interpret: bool = True) -> jax.Array:
+    """bound: (S, T32, C, W) uint32 owner-gathered pre-bound rows (T32 a
+    multiple of 32; padded cycles are masked off by ``tm``);
+    tm: (S, K+1, T32 // 32) uint32 time-packed slot masks
+    (ref.emission_masks).  Returns (S, K+1, D) int32 slot counts."""
+    s, t32, c, w = bound.shape
+    assert t32 % 32 == 0 and w * 32 == dim
+    groups = t32 // 32
+    kp1 = tm.shape[1]
+    kernel = functools.partial(_fleet_kernel, mode=mode, channels=c, dim=dim,
+                               threshold=threshold)
+    counts = pl.pallas_call(
+        kernel,
+        grid=(s, groups),
+        in_specs=[
+            pl.BlockSpec((1, 32, c, w), lambda i, g: (i, g, 0, 0)),
+            pl.BlockSpec((1, kp1, 1), lambda i, g: (i, 0, g)),
+        ],
+        out_specs=pl.BlockSpec((1, kp1, 32, w), lambda i, g: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, kp1, 32, w), jnp.int32),
+        interpret=interpret,
+    )(bound, tm)
+    # time_pack's (bit, word) layout -> standard d = word * 32 + bit order
+    return counts.transpose(0, 1, 3, 2).reshape(s, kp1, dim)

@@ -1,0 +1,58 @@
+"""Public entry points for the fleet's packed-domain temporal bundling.
+
+Two paths, both bit-exact with the per-session reference datapaths:
+
+* ``fleet_counts`` — pure-jnp bit-plane path (ref.py): takes the per-cycle
+  packed spatial HVs and needs NO masks (slot membership is contiguous, so
+  counts are prefix-count differences at slot boundaries).
+* ``fleet_counts_fused`` — the Pallas kernel (kernel.py): takes
+  owner-gathered pre-bound codebook rows and fuses spatial bundling + bit
+  transpose + masked-popcount temporal accumulation in VMEM, driven by
+  device-computed time-packed emission masks (ref.emission_masks).
+
+``spatial_mode`` maps an HDCConfig onto the kernel's spatial-bundle variant
+exactly as serve/dispatch.owner_spatial_encode routes it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.classifier import HDCConfig
+from repro.kernels.common import use_interpret
+from repro.kernels.hdc_fleet.kernel import fleet_counts_pallas
+from repro.kernels.hdc_fleet.ref import emission_masks, fleet_counts_ref
+
+
+def spatial_mode(cfg: HDCConfig) -> tuple[str, int]:
+    """(mode, threshold) for the fused kernel's spatial bundling stage."""
+    if cfg.variant == "dense":
+        return "majority", 0
+    if cfg.variant == "sparse_naive" or cfg.spatial_thinning:
+        return "thin", cfg.spatial_threshold
+    return "or", 0
+
+
+def fleet_counts(words: jax.Array, filled: jax.Array, lengths: jax.Array,
+                 cfg: HDCConfig) -> jax.Array:
+    """(S, T, W) spatial HVs -> (S, K+1, D) int32 frame-slot counts."""
+    return fleet_counts_ref(words, filled, lengths, window=cfg.window,
+                            dim=cfg.dim)
+
+
+def fleet_counts_fused(bound: jax.Array, filled: jax.Array,
+                       lengths: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """(S, T, C, W) owner-gathered pre-bound rows -> (S, K+1, D) counts.
+
+    Pads the cycle axis to a 32 multiple (padded cycles are masked off by
+    the emission schedule) and runs the fused kernel; interpret mode off-TPU.
+    """
+    s, t, c, w = bound.shape
+    t32 = -(-t // 32) * 32
+    if t32 != t:
+        bound = jnp.pad(bound, ((0, 0), (0, t32 - t), (0, 0), (0, 0)))
+    tm = emission_masks(filled, lengths, t_pad=t, window=cfg.window)
+    mode, threshold = spatial_mode(cfg)
+    return fleet_counts_pallas(bound, tm, mode=mode, dim=cfg.dim,
+                               threshold=threshold, interpret=use_interpret())

@@ -1,0 +1,119 @@
+"""Pure-jnp bit-plane reference for the fleet's masked temporal bundling.
+
+The fleet step must split each session's chunk cycles across K completed
+frame slots plus a leftover tail, and accumulate per-bit temporal counts for
+every slot.  The old implementation unpacked every cycle's packed HV to a
+(S, block, D) float32 tensor and pushed it through an f32 einsum against
+dense host-built cycle masks — a 32x memory blowup plus FP math for what is
+logically a masked popcount.
+
+This path stays in the packed domain end to end:
+
+* ``hv.time_pack`` flips the cycle axis into bit planes: one uint32 then
+  holds 32 CYCLES of one bit position, so popcount(plane) is 32 cycles of
+  temporal bundling at once.
+* Frame-slot membership is CONTIGUOUS in time (cycle j belongs to slot
+  ``(filled + j) // window``), so no per-slot masks exist at all: slot
+  counts are differences of prefix counts ``C(x)`` evaluated at the K + 2
+  slot boundaries — group-popcount cumulative sums plus one edge-masked
+  popcount per boundary.
+
+Bit-exact with the einsum formulation for every (filled, lengths) schedule
+(integer counts, no rounding anywhere); tested against it and against
+per-session ``SeizureSession`` loops in tests/test_kernels.py and
+tests/test_fleet.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hv
+
+
+def fleet_counts_ref(words: jax.Array, filled: jax.Array, lengths: jax.Array,
+                     *, window: int, dim: int) -> jax.Array:
+    """Per-frame-slot temporal counts from packed per-cycle spatial HVs.
+
+    words: (S, T, W) uint32 — cycle-major spatial HVs (entries at cycle
+    index >= ``lengths[s]`` are never counted, whatever they contain);
+    filled: (S,) int32 cycles already accumulated toward each next frame;
+    lengths: (S,) int32 valid cycles this step.
+
+    Returns (S, K + 1, D) int32 with K = (T - 1) // window + 1: rows
+    0..K-1 are the counts closing each completed frame slot (zero rows for
+    slots this session does not reach), row K the leftover tail.
+    """
+    s, t, w = words.shape
+    k_max = (t - 1) // window + 1
+    t32 = -(-t // 32) * 32
+    if t32 != t:
+        words = jnp.pad(words, ((0, 0), (0, t32 - t), (0, 0)))
+    groups = t32 // 32
+    tb = hv.time_pack(words)                               # (S, G, 32, W)
+    gpop = hv.lax_popcount(tb).astype(jnp.int32)
+    # inclusive prefix over the (static, small) group axis; unrolled slice
+    # adds lower leaner than jnp.cumsum's generic window-reduce on CPU
+    acc = gpop[:, 0]
+    prefixes = [acc]
+    for g in range(1, groups):
+        acc = acc + gpop[:, g]
+        prefixes.append(acc)
+    csum = jnp.stack(prefixes, axis=1)                     # (S, G, 32, W)
+
+    filled = filled.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    n_emit = (filled + lengths) // window                  # (S,)
+    # slot k spans cycles [k*window - filled, (k+1)*window - filled), clipped
+    # to the valid range; slots past n_emit collapse to empty (their cycles
+    # belong to the tail), which the min(k, n_emit) clamp encodes.
+    k = jnp.arange(k_max + 2, dtype=jnp.int32)
+    bx = jnp.clip(jnp.minimum(k[None, :], n_emit[:, None]) * window
+                  - filled[:, None], 0, lengths[:, None])  # (S, K+2)
+    bx = bx.at[:, -1].set(lengths)                         # tail ends at len
+    xg = bx // 32
+    xr = (bx - xg * 32).astype(jnp.uint32)
+    # prefix count C(x) = full groups below x + popcount of the edge group's
+    # first (x mod 32) cycles ((1 << r) - 1 keeps exactly bits 0..r-1, the
+    # LSB-first cycle order of time_pack)
+    idx = jnp.minimum(xg, groups - 1)[..., None, None]
+    part = jnp.take_along_axis(tb, idx, axis=1)            # (S, K+2, 32, W)
+    edge = (jnp.uint32(1) << xr)[..., None, None] - jnp.uint32(1)
+    pref = jnp.where((xg > 0)[..., None, None],
+                     jnp.take_along_axis(
+                         csum, jnp.maximum(xg - 1, 0)[..., None, None],
+                         axis=1),
+                     0)
+    cx = pref + hv.lax_popcount(part & edge).astype(jnp.int32)
+    seg = cx[:, 1:] - cx[:, :-1]                           # (S, K+1, 32, W)
+    # time_pack's (bit, word) layout -> standard d = word * 32 + bit order
+    return seg.transpose(0, 1, 3, 2).reshape(s, k_max + 1, dim)
+
+
+def emission_masks(filled: jax.Array, lengths: jax.Array, *, t_pad: int,
+                   window: int) -> jax.Array:
+    """Device-side emission schedule: time-packed per-slot cycle masks.
+
+    Returns (S, K + 1, ceil(t_pad / 32)) uint32; bit j of word g in row k is
+    set iff cycle 32 g + j of this step belongs to frame slot k (row K: the
+    leftover tail).  Pure function of ``(filled, lengths)`` — the host ships
+    only the (S,) lengths, not a dense (S, K+1, t_pad) mask.  Used by the
+    fused Pallas kernel; the jnp reference path needs no masks at all
+    (prefix counts at slot boundaries, see ``fleet_counts_ref``).
+    """
+    t32 = -(-t_pad // 32) * 32
+    k_max = (t_pad - 1) // window + 1
+    filled = filled.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    j = jnp.arange(t32, dtype=jnp.int32)
+    ordinal = (filled[:, None] + j[None, :]) // window     # (S, t32)
+    valid = j[None, :] < lengths[:, None]
+    n_emit = (filled + lengths) // window
+    rows = jnp.arange(k_max, dtype=jnp.int32)
+    frame = ((ordinal[:, None, :] == rows[None, :, None])
+             & (rows[None, :, None] < n_emit[:, None, None])
+             & valid[:, None, :])
+    tail = (ordinal >= n_emit[:, None]) & valid
+    dense = jnp.concatenate([frame, tail[:, None, :]], axis=1)
+    return hv.pack_bits(dense.astype(jnp.uint8))           # (S, K+1, t32//32)

@@ -7,7 +7,7 @@ diagonal A; gate by SiLU(z); out_proj.
 Training/prefill uses an **associative scan** over the time axis (the
 recurrence h_t = a_t * h_{t-1} + b_t is a linear first-order recurrence, so
 ``jax.lax.associative_scan`` gives O(L log L) work with O(log L) depth —
-the TPU-native counterpart of the CUDA chunked-scan kernel; see DESIGN.md).
+the TPU-native counterpart of the CUDA chunked-scan kernel).
 Decode keeps the (B, d_inner, d_state) state and a (B, d_inner, k-1) conv
 tail and advances one step per token.
 """

@@ -18,6 +18,11 @@ Serves a fleet of implant streams against one accelerator:
   one-shot encoder.  For thousands of concurrent streams use
   ``serve.fleet.StreamingFleet`` — one jitted step for the whole fleet.
 
+The batched temporal bundling under ``serve`` runs on the bit-plane popcount
+adder (``hv.unpacked_counts`` routes window-length reductions through
+``hv.bitplane_counts``), so no unpacked (..., window, D) expansion is
+materialized on the encode path.
+
 All per-patient configs in a bank must share one datapath
 (``dispatch.datapath_key``): per-patient calibrated ``temporal_threshold``
 (and training-only / deployment-only fields) may differ, anything that

@@ -16,18 +16,29 @@ plus per-stream operands gathered once at construction: each session's class
 HVs from the stacked (P, C, W) AM bank, its calibrated temporal threshold,
 and its row into the stacked unique-params codebook bank.
 
-One jitted ``step(state, chunk, lengths, masks)`` advances ALL sessions.  The
-key structural trick: WHEN each session's window boundaries fall is a pure
-function of the chunk lengths, so the host computes the emission schedule and
-ships it as a dense (S, K+1, t_pad) cycle-mask — rows 0..K-1 select the
-cycles that close each completed frame (at most K = ceil(t_pad / window) per
-step), row K the leftover tail.  The device then never branches per cycle: a
-``lax.scan`` over fixed-size time blocks accumulates the masked per-frame
-counts as one batched GEMM per block (f32 is exact for counts <= window),
-and ONE threshold/majority-pack + AM search scores all K frame slots of all
-sessions together.  ``lengths`` masks the padding — sessions push chunks of
-ANY length, including 0 — and chunk lengths are bucketed/padded to a fixed
-set so steady streams compile once per bucket.
+One jitted ``step(state, chunk, lengths)`` advances ALL sessions, and the
+whole step stays in the packed/bit-plane domain (kernels/hdc_fleet): a
+``lax.scan`` over fixed time blocks produces the per-cycle packed spatial
+HVs, ``hv.time_pack`` flips them into bit planes (one uint32 = 32 cycles of
+one bit position), and per-frame-slot temporal counts fall out of popcount
+prefix sums — no unpacked (S, block, D) float tensor, no f32 GEMM, no
+per-cycle branching.  WHEN each session's window boundaries fall is a pure
+function of ``(filled, lengths)``, so the emission schedule is computed
+INSIDE the jitted step (at most K = ceil(t_pad / window) completed slots
+plus a leftover tail per step); the host ships only the (S,) chunk lengths
+and keeps O(S) mirrors for collection.  ONE threshold/majority-pack + AM
+search scores all K frame slots of all sessions together.  ``lengths``
+masks the padding — sessions push chunks of ANY length, including 0 — and
+chunk lengths are bucketed/padded to a fixed set so steady streams compile
+once per bucket.  With ``backend="pallas"`` the spatial bundle + bit
+transpose + masked-popcount accumulate run as ONE fused VMEM kernel.
+
+The step is memory-bound, so the fleet partitions sessions into TILES
+(default 256) that keep each step's gather/bit-plane temporaries
+cache-resident — throughput now grows with S instead of plateauing — and
+round-robins tiles over the local devices: per-tile steps dispatch
+asynchronously, so multi-device hosts advance tiles concurrently with no
+SPMD machinery.  All tiles share one jitted executable per chunk bucket.
 
 Online adaptation (core.online): the fleet carries a stacked (S, C, D)
 counter-file bank — each session's private, adaptable view of its patient's
@@ -69,11 +80,23 @@ import numpy as np
 from repro.ckpt import checkpoint as ckpt
 from repro.core import hv, online
 from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.kernels.hdc_fleet import ops as fleet_ops
 from repro.runtime import sharding as shd
 from repro.serve import dispatch
 from repro.serve.engine import FrameDecision
 
 DEFAULT_BUCKETS = (32, 64, 128, 256)
+# sessions per device step: the step is memory-bound, and tiles this size
+# keep its gather/bit-plane temporaries cache-resident (one 1024-session
+# step measures ~1.7x slower than four 256-session steps on CPU).  Session
+# capacity is provisioned in WHOLE tiles: a fleet pads up to a multiple of
+# ``tile``, so every step runs the ONE tile-shaped executable per chunk
+# bucket, a fleet grows within its provisioned capacity without
+# recompiling, and step latency is predictable.  Fleets smaller than a
+# quarter tile compile exact shapes instead (tile-padding down there
+# would dominate their cost, and latency-sensitive few-stream users are
+# better served by exact shapes or by SeizureSession directly).
+DEFAULT_TILE = 256
 
 
 @dataclass(frozen=True)
@@ -106,6 +129,19 @@ class FleetOut:
     scores: jax.Array  # (S, K, C) int32 AM scores
 
 
+@dataclass(frozen=True)
+class FleetRound:
+    """One step's raw results plus the host-side schedule needed to read
+    them: ``tiles`` holds each session tile's ``FleetOut`` as DEVICE arrays
+    (no forced sync), and ``(session, slot)`` pairs with ``slot <
+    n_emit[session]`` are real emissions with frame index
+    ``frame_base[session] + slot``."""
+
+    tiles: tuple[FleetOut, ...]  # per-tile (tile_s, K, ...) device outputs
+    n_emit: np.ndarray      # (S,) frames emitted this round
+    frame_base: np.ndarray  # (S,) frame index of each session's slot 0
+
+
 for _cls, _fields in (
     (FleetState, ["counts", "filled", "frame_index", "class_rows",
                   "am_counts", "am_n", "last_frame", "last_scores",
@@ -130,17 +166,6 @@ _STATE_AXES = {
 }
 
 
-def _block_len(t_pad: int, cfg: HDCConfig) -> int:
-    """Largest divisor of t_pad <= min(cap, window): the scan's time-block.
-
-    Blocks bound the per-iteration temporaries of the vectorized spatial
-    encode (the bit-domain variants materialize a (S, block, channels, D)
-    expansion, so they get a tighter cap than the position-domain default).
-    """
-    cap = min(8 if cfg.variant == "sparse_compim" else 4, cfg.window, t_pad)
-    return max(b for b in range(1, cap + 1) if t_pad % b == 0)
-
-
 def _fleet_step(
     state: FleetState,
     tables: jax.Array,
@@ -148,42 +173,33 @@ def _fleet_step(
     thresholds: jax.Array,
     chunk: jax.Array,
     lengths: jax.Array,
-    masks: jax.Array,
     *,
     cfg: HDCConfig,
     ctx: shd.ShardCtx,
+    use_kernel: bool,
 ) -> tuple[FleetState, FleetOut]:
     """Advance all S sessions by one padded chunk batch.
 
     chunk: (S, t_pad, channels) uint8; lengths: (S,) int32 valid cycles per
-    session; masks: (S, K+1, t_pad) f32 host-built cycle masks (rows 0..K-1
-    = cycles closing each completed frame, row K = leftover tail).  Frames
-    score against ``state.class_rows`` (refreshed by ``adapt``), and the
-    step records each emitting session's last frame HV + scores — the
-    operands a later ``adapt`` call consumes, captured inside the same
-    jitted program.
+    session.  The emission schedule is computed HERE from
+    ``(state.filled, lengths)`` — the host ships no masks — and the
+    temporal bundling runs in the packed/bit-plane domain
+    (kernels/hdc_fleet): popcount prefix sums at frame-slot boundaries, or
+    the fused VMEM kernel when ``use_kernel``.  Frames score against
+    ``state.class_rows`` (refreshed by ``adapt``), and the step records
+    each emitting session's last frame HV + scores — the operands a later
+    ``adapt`` call consumes, captured inside the same jitted program.
     """
     s, t_pad, _ = chunk.shape
-    kp1 = masks.shape[1]
-    block = _block_len(t_pad, cfg)
-    nb = t_pad // block
-    # (nb, S, block, ...): scan over time blocks, vectorize within
-    blocks = chunk.reshape(s, nb, block, cfg.channels).transpose(1, 0, 2, 3)
-    mask_blocks = masks.reshape(s, kp1, nb, block).transpose(2, 0, 1, 3)
-
-    def body(acc, xs):
-        codes_b, m_b = xs  # (S, block, channels), (S, K+1, block)
-        spatial = dispatch.owner_spatial_encode(tables, owner, codes_b, cfg)
-        bits = hv.unpack_bits(spatial, cfg.dim).astype(jnp.float32)  # (S, b, D)
-        # one batched GEMM accumulates every frame-slot's counts; f32 is
-        # exact for counts <= window << 2^24
-        return acc + jnp.einsum("skb,sbd->skd", m_b, bits), None
-
-    acc0 = shd.constrain(
-        jnp.zeros((s, kp1, cfg.dim), jnp.float32), ("batch", None, None), ctx
-    )
-    seg, _ = jax.lax.scan(body, acc0, (blocks, mask_blocks))
-    seg = seg.astype(jnp.int32)  # (S, K+1, D)
+    if use_kernel:
+        # fused kernel: owner-gather the pre-bound rows, everything else
+        # (spatial bundle, bit transpose, masked popcount) stays in VMEM
+        bound = dispatch.owner_gather_bound(tables, owner, chunk)
+        seg = fleet_ops.fleet_counts_fused(bound, state.filled, lengths, cfg)
+    else:
+        words = dispatch.owner_spatial_words(tables, owner, chunk, cfg)
+        seg = fleet_ops.fleet_counts(words, state.filled, lengths, cfg)
+    seg = shd.constrain(seg, ("batch", None, None), ctx)  # (S, K+1, D) int32
 
     n_emit = (state.filled + lengths) // cfg.window  # (S,)
     # the carried accumulator belongs to the FIRST completed frame when the
@@ -277,7 +293,14 @@ class StreamingFleet:
     bit-exact with per-session ``SeizureSession`` loops.  Chunks are padded to
     the smallest configured bucket (longer chunks are split over multiple
     steps), so a steady stream compiles once per bucket — see
-    ``compile_count``.
+    ``compile_count``.  Steady-state serving should prefer ``push_raw``: it
+    returns the device-resident ``FleetRound`` results WITHOUT materializing
+    per-frame Python objects or forcing a device sync (``push`` is
+    ``collect_decisions(push_raw(...))``).
+
+    ``backend`` selects the temporal-bundling implementation ("jnp" = pure
+    XLA bit-plane path, "pallas" = fused VMEM kernel; both bit-exact);
+    defaults to the bank's pipeline backend.
 
     ``adapt(labels)`` personalizes AMs in place: one jitted gated update for
     the whole fleet against each session's last emitted frame (labels of -1
@@ -293,8 +316,15 @@ class StreamingFleet:
         *,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         mesh=None,
+        backend: str | None = None,
+        tile: int | None = None,
     ):
         self._cfg = dispatch.validate_bank(pipelines)
+        if backend is None:
+            backend = next(iter(pipelines.values())).cfg.backend
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self._backend = backend
         if not owners:
             raise ValueError("StreamingFleet needs at least one session")
         if not buckets or any(b <= 0 for b in buckets):
@@ -316,20 +346,56 @@ class StreamingFleet:
         self._ctx = shd.make_ctx(mesh)
         self._n = len(owner_idx)
         self._owners = list(owners)
-        put = self._put
-        # replicated pre-bound codebook bank (P_unique, C, codes, W)
-        self._tables = put(tables, (None,) * 4)
-        self._bank = put(bank, (None, None, None))  # replicated (P, C, W)
-        self._thresholds = put(jnp.asarray(thresholds[owner_idx]), ("batch",))
-        self._param_owner = put(jnp.asarray(param_rows[owner_idx]), ("batch",))
+        # session tiles: bound each device step's working set so the
+        # memory-bound step stays cache-resident, and round-robin tiles over
+        # the local devices (independent async dispatches, so multi-device
+        # hosts advance tiles concurrently).  Capacity pads to whole tiles
+        # (see DEFAULT_TILE); padded phantom sessions always push
+        # zero-length chunks and never emit or adapt.  A mesh replaces
+        # tiling with SPMD sharding: one (padded) tile spanning the mesh.
+        if tile is None:
+            tile = DEFAULT_TILE
+        if tile <= 0:
+            raise ValueError(f"tile={tile} must be positive")
+        if self._n < tile // 4:
+            # tile-padding a tiny fleet would dominate its cost: compile an
+            # exact shape instead
+            self._np = self._n
+        else:
+            self._np = -(-self._n // tile) * tile
+        if self._np > self._n:
+            owner_idx = np.concatenate(
+                [owner_idx, np.zeros(self._np - self._n, np.int32)])
+        if self._ctx.mesh is not None:
+            tile = self._np
+        self._tile_slices = [slice(i, min(i + tile, self._np))
+                             for i in range(0, self._np, tile)]
+        if self._ctx.mesh is not None:
+            devs: list = [None]
+        else:
+            devs = jax.local_devices()
+        self._tile_devs = [devs[k % len(devs)]
+                           for k in range(len(self._tile_slices))]
+        # pre-bound codebook bank (P_unique, C, codes, W): replicated across
+        # the mesh, or one copy per device used by the tiles
+        if self._ctx.mesh is not None:
+            shared = self._put(tables, (None,) * 4)
+            self._tables_t = [shared]
+        else:
+            per_dev = {d: jax.device_put(tables, d) for d in set(devs)}
+            self._tables_t = [per_dev[d] for d in self._tile_devs]
+        # per-session operand registers, sliced per tile
+        thr_all = thresholds[owner_idx]
+        prow_all = np.asarray(param_rows)[owner_idx]
+        dens_all = np.asarray(
+            [p.cfg.class_density for p in pipes], np.float32)[owner_idx]
+        self._thresholds_t = self._put_tiles(thr_all, ("batch",))
+        self._param_owner_t = self._put_tiles(prow_all, ("batch",))
+        self._density_t = self._put_tiles(dens_all, ("batch",))
         # online-adaptation operands: each session starts from its patient's
         # class rows + counter-file am_state (host copies: the jitted step
         # donates its state, so reset() must rebuild fresh device arrays)
         self._class_rows0 = np.asarray(bank)[owner_idx]  # (S, C, W)
-        self._density = put(
-            jnp.asarray(np.asarray(
-                [p.cfg.class_density for p in pipes], np.float32)[owner_idx]),
-            ("batch",))
         if all(p.am_state is not None for p in pipes):
             self._am_counts0 = np.stack(
                 [np.asarray(pipes[i].am_state.counts) for i in owner_idx])
@@ -337,15 +403,16 @@ class StreamingFleet:
                 [np.asarray(pipes[i].am_state.n) for i in owner_idx])
         else:  # bank mixes in externally built pipelines: adapt unavailable
             self._am_counts0 = self._am_n0 = None
-        self._state = self._zero_state()
-        # host mirrors of filled/frame_index: the emission schedule (and so
-        # the step's cycle masks) is a pure function of the pushed lengths,
-        # so the host tracks it without any device round-trip
-        self._filled_h = np.zeros((self._n,), np.int64)
-        self._fidx_h = np.zeros((self._n,), np.int64)
+        self._state_t = self._zero_states()
+        # host mirrors of filled/frame_index: the emission schedule runs on
+        # device, but the host needs O(S) mirrors to route raw results
+        # (which (session, slot) pairs really emitted) without a round-trip
+        self._filled_h = np.zeros((self._np,), np.int64)
+        self._fidx_h = np.zeros((self._np,), np.int64)
         self._shapes_seen: set[int] = set()  # buckets pushed so far
         self._step = jax.jit(
-            functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx),
+            functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx,
+                              use_kernel=self._backend == "pallas"),
             donate_argnums=(0,),
         )
         # NOT donated: several state leaves pass through adapt untouched and
@@ -362,36 +429,61 @@ class StreamingFleet:
         s = shd.sharding_for(axes, self._ctx, jnp.shape(x))
         return jax.device_put(x, s) if s is not None else jnp.asarray(x)
 
-    def _zero_state(self) -> FleetState:
-        s, cfg = self._n, self._cfg
+    def _put_tile(self, x, axes: tuple, dev) -> jax.Array:
+        """Place one tile's operand: sharded under a mesh, pinned to the
+        tile's device otherwise."""
+        if self._ctx.mesh is not None:
+            return self._put(jnp.asarray(x), axes)
+        return jax.device_put(x, dev)
+
+    def _put_tiles(self, x: np.ndarray, axes: tuple) -> list[jax.Array]:
+        return [self._put_tile(x[sl], axes, d)
+                for sl, d in zip(self._tile_slices, self._tile_devs)]
+
+    def _zero_states(self) -> list[FleetState]:
+        cfg = self._cfg
         c = self._class_rows0.shape[1]
-        if self._am_counts0 is not None:
-            am_counts, am_n = self._am_counts0, self._am_n0
-        else:
-            am_counts = np.zeros((s, c, cfg.dim), np.int32)
-            am_n = np.zeros((s, c), np.int32)
         axes = _STATE_AXES
-        return FleetState(
-            counts=self._put(
-                jnp.zeros((s, cfg.dim), jnp.int32), axes["counts"]),
-            filled=self._put(jnp.zeros((s,), jnp.int32), axes["filled"]),
-            frame_index=self._put(
-                jnp.zeros((s,), jnp.int32), axes["frame_index"]),
-            class_rows=self._put(
-                jnp.asarray(self._class_rows0), axes["class_rows"]),
-            am_counts=self._put(jnp.asarray(am_counts), axes["am_counts"]),
-            am_n=self._put(jnp.asarray(am_n), axes["am_n"]),
-            last_frame=self._put(
-                jnp.zeros((s, cfg.words), jnp.uint32), axes["last_frame"]),
-            last_scores=self._put(
-                jnp.zeros((s, c), jnp.int32), axes["last_scores"]),
-            has_frame=self._put(jnp.zeros((s,), jnp.int32), axes["has_frame"]),
-        )
+        out = []
+        for sl, d in zip(self._tile_slices, self._tile_devs):
+            s = sl.stop - sl.start
+            if self._am_counts0 is not None:
+                am_counts, am_n = self._am_counts0[sl], self._am_n0[sl]
+            else:
+                am_counts = np.zeros((s, c, cfg.dim), np.int32)
+                am_n = np.zeros((s, c), np.int32)
+            put = self._put_tile
+            out.append(FleetState(
+                counts=put(np.zeros((s, cfg.dim), np.int32),
+                           axes["counts"], d),
+                filled=put(np.zeros((s,), np.int32), axes["filled"], d),
+                frame_index=put(np.zeros((s,), np.int32),
+                                axes["frame_index"], d),
+                class_rows=put(self._class_rows0[sl], axes["class_rows"], d),
+                am_counts=put(am_counts, axes["am_counts"], d),
+                am_n=put(am_n, axes["am_n"], d),
+                last_frame=put(np.zeros((s, cfg.words), np.uint32),
+                               axes["last_frame"], d),
+                last_scores=put(np.zeros((s, c), np.int32),
+                                axes["last_scores"], d),
+                has_frame=put(np.zeros((s,), np.int32), axes["has_frame"], d),
+            ))
+        return out
+
+    def _split_state(self, full: FleetState) -> list[FleetState]:
+        """Scatter a whole-fleet state (e.g. a restored checkpoint) back
+        onto the session tiles and their devices."""
+        if self._ctx.mesh is not None:
+            return [full]
+        return [
+            jax.tree.map(lambda x, sl=sl, d=d: jax.device_put(x[sl], d), full)
+            for sl, d in zip(self._tile_slices, self._tile_devs)
+        ]
 
     def reset(self) -> None:
         """Zero all accumulators, fill levels and frame indices, and restore
         every session's AM to its patient's trained (pre-adaptation) state."""
-        self._state = self._zero_state()
+        self._state_t = self._zero_states()
         self._filled_h[:] = 0
         self._fidx_h[:] = 0
 
@@ -400,18 +492,30 @@ class StreamingFleet:
         return self._n
 
     @property
+    def n_tiles(self) -> int:
+        return len(self._tile_slices)
+
+    @property
     def state(self) -> FleetState:
-        return self._state
+        """Whole-fleet state view (tiles concatenated; one gather when the
+        fleet spans several tiles — cheap relative to how rarely callers
+        need it: checkpointing and tests).  Leading dim is the PROVISIONED
+        capacity (sessions padded to whole capacity tiles); rows past
+        ``n_sessions`` are phantom slots that never emit or adapt."""
+        if len(self._state_t) == 1:
+            return self._state_t[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                            *self._state_t)
 
     @property
     def fill_levels(self) -> np.ndarray:
         """(S,) cycles accumulated toward each next (incomplete) frame."""
-        return np.asarray(self._state.filled)
+        return self._filled_h[:self._n].copy()
 
     @property
     def frame_indices(self) -> np.ndarray:
         """(S,) frames emitted so far per session."""
-        return np.asarray(self._state.frame_index)
+        return self._fidx_h[:self._n].copy()
 
     @property
     def compile_count(self) -> int:
@@ -434,40 +538,10 @@ class StreamingFleet:
                 return b
         raise AssertionError("length exceeds max bucket")  # pragma: no cover
 
-    def _round_masks(self, round_len: np.ndarray, t_pad: int) -> np.ndarray:
-        """Host-built (S, K+1, t_pad) f32 cycle masks for one step.
-
-        Cycle j of session s belongs to frame-slot ``(filled_s + j) //
-        window`` — slots below the session's emission count are completed
-        frames, everything else (and the padding) lands in the tail row.
-        """
-        window = self._cfg.window
-        k_max = (t_pad - 1) // window + 1
-        j = np.arange(t_pad)
-        ordinal = (self._filled_h[:, None] + j[None, :]) // window  # (S, t)
-        valid = j[None, :] < round_len[:, None]
-        n_emit = (self._filled_h + round_len) // window  # (S,)
-        rows = np.arange(k_max)
-        frame_rows = (
-            (ordinal[:, None, :] == rows[None, :, None])
-            & (rows[None, :, None] < n_emit[:, None, None])
-            & valid[:, None, :]
-        )
-        tail = (ordinal >= n_emit[:, None]) & valid
-        return np.concatenate(
-            [frame_rows, tail[:, None, :]], axis=1
-        ).astype(np.float32)
-
-    def push(self, chunks: Sequence) -> list[list[FrameDecision]]:
-        """Feed one (t_i, channels) uint8 chunk per session.
-
-        Chunk lengths may differ per session (0 included).  Returns, per
-        session, the decisions for every frame completed by this push.
-        """
-        if len(chunks) != self._n:
-            raise ValueError(
-                f"push needs one chunk per session ({self._n}), got {len(chunks)}"
-            )
+    def _ingest(self, chunks: Sequence) -> tuple[np.ndarray, np.ndarray]:
+        """Validate + pack the ragged chunk list into one (S, T_max, ch)
+        buffer with a single vectorized scatter (no per-session copy loop).
+        Returns ``(buffer, lengths)``."""
         ch = self._cfg.channels
         arrs = []
         for i, c in enumerate(chunks):
@@ -480,7 +554,37 @@ class StreamingFleet:
                 )
             arrs.append(a)
         lengths = np.asarray([a.shape[0] for a in arrs], np.int64)
-        out: list[list[FrameDecision]] = [[] for _ in range(self._n)]
+        total = int(lengths.max(initial=0))
+        if total == 0:
+            return np.zeros((self._n, 0, ch), np.uint8), lengths
+        flat = np.concatenate(arrs, axis=0)                # (sum(t_i), ch)
+        if (lengths == total).all():                       # steady streams
+            return flat.reshape(self._n, total, ch), lengths
+        big = np.zeros((self._n, total, ch), np.uint8)
+        rows = np.repeat(np.arange(self._n), lengths)
+        starts = np.cumsum(lengths) - lengths
+        cols = np.arange(int(lengths.sum())) - np.repeat(starts, lengths)
+        big[rows, cols] = flat
+        return big, lengths
+
+    def push_raw(self, chunks: Sequence) -> list[FleetRound]:
+        """Feed one (t_i, channels) uint8 chunk per session; zero host-side
+        schedule work beyond O(S) per round.
+
+        Returns one ``FleetRound`` per bucketed device step (chunks longer
+        than the largest bucket split over several).  ``frames``/``scores``
+        stay on device — nothing here blocks on the step's results, so
+        steady-state serving can overlap pushes with downstream reads; use
+        ``collect_decisions`` (or ``push``) to materialize FrameDecisions.
+        """
+        if len(chunks) != self._n:
+            raise ValueError(
+                f"push needs one chunk per session ({self._n}), got {len(chunks)}"
+            )
+        big, real_lengths = self._ingest(chunks)
+        lengths = np.zeros((self._np,), np.int64)  # phantom rows stay empty
+        lengths[:self._n] = real_lengths
+        rounds: list[FleetRound] = []
         max_bucket = self._buckets[-1]
         pos = 0
         total = int(lengths.max(initial=0))
@@ -488,53 +592,80 @@ class StreamingFleet:
             round_len = np.clip(lengths - pos, 0, max_bucket)
             t_pad = self._bucket_for(int(round_len.max()))
             self._shapes_seen.add(t_pad)
-            batch = np.zeros((self._n, t_pad, ch), np.uint8)
-            for i, a in enumerate(arrs):
-                n = int(round_len[i])
-                if n:
-                    batch[i, :n] = a[pos : pos + n]
-            masks = self._round_masks(round_len, t_pad)
+            width = min(t_pad, total - pos)
+            batch = np.zeros((self._np, t_pad, self._cfg.channels), np.uint8)
+            batch[:self._n, :width] = big[:, pos:pos + width]
+            round_len32 = round_len.astype(np.int32)
             n_emit = (self._filled_h + round_len) // self._cfg.window
-            self._state, fo = self._step(
-                self._state,
-                self._tables,
-                self._param_owner,
-                self._thresholds,
-                jnp.asarray(batch),
-                jnp.asarray(round_len, dtype=jnp.int32),
-                jnp.asarray(masks),
-            )
-            self._collect(fo, n_emit, out)
+            fos = []
+            # per-tile steps dispatch asynchronously: tiles on different
+            # devices overlap, and nothing here waits on the results
+            for k, (sl, d) in enumerate(
+                    zip(self._tile_slices, self._tile_devs)):
+                self._state_t[k], fo = self._step(
+                    self._state_t[k],
+                    self._tables_t[k],
+                    self._param_owner_t[k],
+                    self._thresholds_t[k],
+                    self._put_tile(batch[sl], ("batch", None, None), d),
+                    self._put_tile(round_len32[sl], ("batch",), d),
+                )
+                fos.append(fo)
+            # rounds expose REAL sessions only ((S,) arrays); phantom
+            # capacity-padding rows never emit, so dropping them is lossless
+            rounds.append(FleetRound(tiles=tuple(fos),
+                                     n_emit=n_emit[:self._n],
+                                     frame_base=self._fidx_h[:self._n].copy()))
             self._filled_h += round_len - n_emit * self._cfg.window
             self._fidx_h += n_emit
             pos += max_bucket
+        return rounds
+
+    def collect_decisions(
+        self, rounds: Sequence[FleetRound]
+    ) -> list[list[FrameDecision]]:
+        """Materialize per-session FrameDecision lists from raw rounds.
+
+        This is the ONLY place the raw path syncs with the device; the
+        argmax runs vectorized over all (session, slot) pairs and the Python
+        loop touches only sessions that actually emitted."""
+        out: list[list[FrameDecision]] = [[] for _ in range(self._n)]
+        for r in rounds:
+            if not r.n_emit.any():
+                continue
+            for sl, fo in zip(self._tile_slices, r.tiles):
+                ne = r.n_emit[sl]
+                if not ne.any():
+                    continue
+                frames = np.asarray(fo.frames)
+                scores = np.asarray(fo.scores)
+                preds = np.argmax(scores, axis=-1)         # (tile_s, K)
+                for i in np.nonzero(ne)[0]:
+                    g = sl.start + int(i)
+                    base = int(r.frame_base[g])
+                    out[g].extend(
+                        FrameDecision(frame_index=base + k,
+                                      scores=scores[i, k],
+                                      prediction=int(preds[i, k]),
+                                      frame_hv=frames[i, k])
+                        for k in range(int(ne[i]))
+                    )
         return out
 
-    def _collect(
-        self, fo: FleetOut, n_emit: np.ndarray, out: list[list[FrameDecision]]
-    ) -> None:
-        if not n_emit.any():
-            return
-        frames = np.asarray(fo.frames)
-        scores = np.asarray(fo.scores)
-        for s in np.nonzero(n_emit)[0]:
-            for k in range(int(n_emit[s])):
-                sc = scores[s, k]
-                out[s].append(
-                    FrameDecision(
-                        frame_index=int(self._fidx_h[s]) + k,
-                        scores=sc,
-                        prediction=int(np.argmax(sc)),
-                        frame_hv=frames[s, k],
-                    )
-                )
+    def push(self, chunks: Sequence) -> list[list[FrameDecision]]:
+        """Feed one (t_i, channels) uint8 chunk per session.
+
+        Chunk lengths may differ per session (0 included).  Returns, per
+        session, the decisions for every frame completed by this push.
+        """
+        return self.collect_decisions(self.push_raw(chunks))
 
     # -- online adaptation ----------------------------------------------------
 
     @property
     def class_rows(self) -> np.ndarray:
         """(S, C, W) per-session (possibly adapted) class HV rows."""
-        return np.asarray(self._state.class_rows)
+        return np.asarray(self.state.class_rows)[:self._n]
 
     def adapt(self, labels: Sequence[int], *,
               margin: float = 0.0) -> np.ndarray:
@@ -562,13 +693,19 @@ class StreamingFleet:
             raise ValueError(
                 f"labels must be < n_classes={self._cfg.n_classes} "
                 "(-1 = no feedback)")
-        self._state, applied = self._adapt_step(
-            self._state,
-            jnp.asarray(lab, dtype=jnp.int32),
-            jnp.asarray(margin, jnp.float32),
-            self._density,
-        )
-        return np.asarray(applied)
+        lab32 = np.full((self._np,), -1, np.int32)  # phantoms: no feedback
+        lab32[:self._n] = lab
+        margin32 = jnp.asarray(margin, jnp.float32)
+        applied = []
+        for k, (sl, d) in enumerate(zip(self._tile_slices, self._tile_devs)):
+            self._state_t[k], app = self._adapt_step(
+                self._state_t[k],
+                self._put_tile(lab32[sl], ("batch",), d),
+                margin32,
+                self._density_t[k],
+            )
+            applied.append(app)
+        return np.concatenate([np.asarray(a) for a in applied])[:self._n]
 
     # -- durability -----------------------------------------------------------
 
@@ -591,8 +728,13 @@ class StreamingFleet:
         banks would silently score one bank's frames against another's class
         HVs."""
         h = hashlib.sha256()
-        operands = [self._tables, self._param_owner, self._thresholds,
-                    self._density, self._class_rows0]
+        operands = [self._tables_t[0],
+                    np.concatenate([np.asarray(x)
+                                    for x in self._param_owner_t]),
+                    np.concatenate([np.asarray(x)
+                                    for x in self._thresholds_t]),
+                    np.concatenate([np.asarray(x) for x in self._density_t]),
+                    self._class_rows0]
         if self._am_counts0 is not None:
             operands += [self._am_counts0, self._am_n0]
         for a in operands:
@@ -604,9 +746,10 @@ class StreamingFleet:
     def _state_shardings(self) -> FleetState | None:
         if self._ctx.mesh is None:
             return None
+        full = self.state
         return FleetState(**{
             f: shd.sharding_for(axes, self._ctx,
-                                jnp.shape(getattr(self._state, f)))
+                                jnp.shape(getattr(full, f)))
             for f, axes in _STATE_AXES.items()
         })
 
@@ -618,7 +761,7 @@ class StreamingFleet:
         if step is None:
             latest = ckpt.latest_step(root)
             step = 0 if latest is None else latest + 1
-        return ckpt.save(root, step, self._state, meta=self._meta())
+        return ckpt.save(root, step, self.state, meta=self._meta())
 
     def restore(self, root: str, step: int | None = None) -> int:
         """Restore a ``save``d fleet state into THIS fleet (same bank
@@ -640,8 +783,9 @@ class StreamingFleet:
             raise ValueError(
                 f"checkpoint does not match this fleet: {bad} "
                 "(saved, expected)")
-        self._state = ckpt.restore(root, step, like=self._state,
-                                   shardings=self._state_shardings())
-        self._filled_h = np.asarray(self._state.filled).astype(np.int64)
-        self._fidx_h = np.asarray(self._state.frame_index).astype(np.int64)
+        full = ckpt.restore(root, step, like=self.state,
+                            shardings=self._state_shardings())
+        self._state_t = self._split_state(full)
+        self._filled_h = np.asarray(full.filled).astype(np.int64)
+        self._fidx_h = np.asarray(full.frame_index).astype(np.int64)
         return step

@@ -160,6 +160,61 @@ def test_bucketed_lengths_bound_compiles():
     assert fleet.compile_count <= len(buckets)
 
 
+class _NoCacheSize:
+    """Wraps the jitted step but hides the private ``_cache_size`` API."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def __call__(self, *args, **kwargs):
+        return self._fn(*args, **kwargs)
+
+
+def test_compile_count_bucket_fallback(monkeypatch):
+    """If jax's private ``_cache_size`` disappears, ``compile_count`` falls
+    back to counting distinct bucket shapes — and must still count
+    multi-bucket pushes correctly (one entry per bucket, not per push)."""
+    pipe = _trained("sparse_compim", seed=9)
+    fleet = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(8, 32))
+    monkeypatch.setattr(fleet, "_step", _NoCacheSize(fleet._step))
+    assert not hasattr(fleet._step, "_cache_size")
+    assert fleet.compile_count == 0
+    rng = np.random.default_rng(4)
+    fleet.push([_chunk(rng, 5), _chunk(rng, 3)])     # bucket 8
+    assert fleet.compile_count == 1
+    fleet.push([_chunk(rng, 7), _chunk(rng, 0)])     # bucket 8 again
+    assert fleet.compile_count == 1
+    # 40 > max bucket: splits into a 32-round AND an 8-round in ONE push
+    fleet.push([_chunk(rng, 40), _chunk(rng, 12)])
+    assert fleet.compile_count == 2
+    # decisions through the wrapped step still work
+    out = fleet.push([_chunk(rng, WINDOW), _chunk(rng, 0)])
+    assert len(out[0]) >= 1
+
+
+def test_push_raw_matches_push():
+    """push_raw + collect_decisions is push; raw rounds expose the schedule
+    (n_emit / frame_base) and per-tile device outputs without syncing."""
+    pipes = {"a": _trained("sparse_compim", seed=0, temporal_threshold=4),
+             "b": _trained("sparse_compim", seed=1, temporal_threshold=6)}
+    owners = ["a", "b", "a"]
+    fleet_a = StreamingFleet(pipes, owners, buckets=(8, 32))
+    fleet_b = StreamingFleet(pipes, owners, buckets=(8, 32))
+    rng = np.random.default_rng(12)
+    for _ in range(5):
+        lens = rng.integers(0, 70, len(owners))
+        chunks = [_chunk(rng, int(t)) for t in lens]
+        via_push = fleet_a.push(chunks)
+        rounds = fleet_b.push_raw(chunks)
+        assert all(isinstance(r.tiles, tuple) for r in rounds)
+        via_raw = fleet_b.collect_decisions(rounds)
+        for da, db in zip(via_push, via_raw):
+            _assert_decisions_equal(da, db)
+        # schedule consistency: emitted counts sum to collected decisions
+        total = sum(int(r.n_emit.sum()) for r in rounds)
+        assert total == sum(len(d) for d in via_raw)
+
+
 # ---------------------------------------------------------------------------
 # sharded placement
 # ---------------------------------------------------------------------------

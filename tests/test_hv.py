@@ -104,3 +104,114 @@ def test_density():
     assert float(hv.density(ones, 1024)[0]) == 1.0
     zeros = jnp.zeros((1, 32), dtype=jnp.uint32)
     assert float(hv.density(zeros, 1024)[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# property tests: pack/unpack round trips, positions fallback, or_reduce
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**63), st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip_property(seed, batch, words):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (batch, words * 32)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    np.testing.assert_array_equal(np.asarray(hv.unpack_bits(packed)), bits)
+    np.testing.assert_array_equal(np.asarray(packed), hv.np_pack_bits(bits))
+
+
+@given(st.integers(0, 2**63))
+@settings(max_examples=25, deadline=None)
+def test_positions_to_packed_word_fallback_property(seed):
+    """seg_len % 32 != 0 takes the pack_bits fallback branch: dim=128,
+    segments=8 -> seg_len=16.  Round trip + agreement with the bits path."""
+    rng = np.random.default_rng(seed)
+    dim, segments = 128, 8
+    pos = jnp.asarray(
+        rng.integers(0, dim // segments, (3, segments)), jnp.uint8)
+    packed = hv.positions_to_packed(pos, dim, segments)
+    via_bits = hv.pack_bits(hv.positions_to_bits(pos, dim, segments))
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(via_bits))
+    np.testing.assert_array_equal(
+        np.asarray(hv.packed_to_positions(packed, dim, segments)),
+        np.asarray(pos))
+
+
+@given(st.integers(0, 2**63), st.integers(1, 9))
+@settings(max_examples=25, deadline=None)
+def test_or_reduce_odd_lengths_property(seed, n):
+    """OR tree over odd / 1-length axes equals numpy's any()."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (2, n, 64)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    ored = hv.or_reduce(packed, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(hv.unpack_bits(ored)), bits.any(axis=1).astype(np.uint8))
+
+
+def test_or_reduce_length_one_axis():
+    rng = np.random.default_rng(6)
+    packed = jnp.asarray(rng.integers(0, 2**32, (4, 1, 8), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(hv.or_reduce(packed, axis=1)), np.asarray(packed)[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# bit-plane counters: time_pack layout + equivalence with unpacked_counts
+# ---------------------------------------------------------------------------
+
+def test_time_pack_layout():
+    rng = np.random.default_rng(7)
+    words = rng.integers(0, 2**32, (2, 64, 3), dtype=np.uint32)
+    tp = np.asarray(hv.time_pack(jnp.asarray(words)))  # (2, 2, 32, 3)
+    assert tp.shape == (2, 2, 32, 3)
+    for s in range(2):
+        for g in range(2):
+            for b in range(0, 32, 7):
+                for w in range(3):
+                    want = 0
+                    for j in range(32):
+                        want |= ((int(words[s, 32 * g + j, w]) >> b) & 1) << j
+                    assert int(tp[s, g, b, w]) == want
+
+
+def test_bit_transpose32_is_involution():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.integers(0, 2**32, (5, 32, 4), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(hv.bit_transpose32(hv.bit_transpose32(x))), np.asarray(x))
+
+
+@given(st.integers(0, 2**63), st.sampled_from([32, 64, 96]))
+@settings(max_examples=25, deadline=None)
+def test_bitplane_counts_match_unpacked_counts(seed, n):
+    """The popcount-plane adder is bit-exact with the unpack-and-add tree
+    (and with a dense numpy sum) whenever the reduce length packs evenly."""
+    rng = np.random.default_rng(seed)
+    dim = 64
+    bits = rng.integers(0, 2, (2, n, dim)).astype(np.uint8)
+    packed = hv.pack_bits(jnp.asarray(bits))
+    counts = hv.bitplane_counts(packed, dim)
+    np.testing.assert_array_equal(np.asarray(counts), bits.sum(axis=1))
+    # unpacked_counts routes n % 32 == 0 through the same bit-plane path
+    np.testing.assert_array_equal(
+        np.asarray(hv.unpacked_counts(packed, axis=1, dim=dim)),
+        bits.sum(axis=1))
+
+
+def test_unpacked_counts_ragged_fallback_matches_bitplane():
+    """Ragged N uses the scan fallback; both paths agree with numpy."""
+    rng = np.random.default_rng(9)
+    dim = 96
+    bits = rng.integers(0, 2, (3, 33, dim)).astype(np.uint8)  # 33 % 32 != 0
+    packed = hv.pack_bits(jnp.asarray(bits))
+    np.testing.assert_array_equal(
+        np.asarray(hv.unpacked_counts(packed, axis=1, dim=dim)),
+        bits.sum(axis=1))
+
+
+def test_time_pack_rejects_ragged_t():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        hv.time_pack(jnp.zeros((2, 33, 4), jnp.uint32))
+    with pytest.raises(ValueError, match="size 32"):
+        hv.bit_transpose32(jnp.zeros((2, 16, 4), jnp.uint32))

@@ -189,3 +189,91 @@ def test_lbp_codes_in_range(seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), (1, 64, 3))
     out = np.asarray(lbp_pallas(x, bits=6, interpret=True))
     assert out.dtype == np.uint8 and (out < 64).all()
+
+
+# ---------------------------------------------------------------------------
+# hdc_fleet: bit-plane masked temporal bundling (ref + fused kernel)
+# ---------------------------------------------------------------------------
+
+def _einsum_slot_counts(words, filled, lengths, window):
+    """Dense-mask oracle: the pre-bit-plane formulation (unpack -> f32
+    einsum against host-built cycle masks), kept as the reference here."""
+    s, t, w = words.shape
+    k_max = (t - 1) // window + 1
+    j = np.arange(t)
+    ordinal = (filled[:, None] + j[None, :]) // window
+    valid = j[None, :] < lengths[:, None]
+    n_emit = (filled + lengths) // window
+    rows = np.arange(k_max)
+    frame = ((ordinal[:, None, :] == rows[None, :, None])
+             & (rows[None, :, None] < n_emit[:, None, None])
+             & valid[:, None, :])
+    tail = (ordinal >= n_emit[:, None]) & valid
+    masks = np.concatenate([frame, tail[:, None, :]], 1).astype(np.float32)
+    bits = ((words[..., None] >> np.arange(32, dtype=np.uint32)) & 1)
+    bits = bits.reshape(s, t, w * 32).astype(np.float32)
+    return np.einsum("skt,std->skd", masks, bits).astype(np.int32)
+
+
+@pytest.mark.parametrize("t_pad,window", [(8, 32), (32, 32), (64, 32),
+                                          (96, 64), (64, 17)])
+def test_fleet_counts_ref_matches_einsum_oracle(t_pad, window):
+    from repro.kernels.hdc_fleet.ref import fleet_counts_ref
+    rng = np.random.default_rng(t_pad * 100 + window)
+    s, w = 7, 4
+    words = rng.integers(0, 2**32, (s, t_pad, w), dtype=np.uint32)
+    filled = rng.integers(0, window, s).astype(np.int32)
+    lengths = rng.integers(0, t_pad + 1, s).astype(np.int32)
+    got = np.asarray(fleet_counts_ref(
+        jnp.asarray(words), jnp.asarray(filled), jnp.asarray(lengths),
+        window=window, dim=w * 32))
+    want = _einsum_slot_counts(words, filled, lengths, window)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode,threshold", [("or", 0), ("thin", 2),
+                                            ("majority", 0)])
+def test_fleet_kernel_vs_ref(mode, threshold):
+    """The fused kernel (spatial bundle + bit transpose + masked popcount in
+    VMEM) must match the jnp bit-plane path for every spatial-bundle mode."""
+    from repro.kernels.hdc_fleet.kernel import fleet_counts_pallas
+    from repro.kernels.hdc_fleet.ref import emission_masks, fleet_counts_ref
+    rng = np.random.default_rng(3)
+    s, t, c, w, window = 5, 64, 6, 2, 32
+    dim = w * 32
+    bound = rng.integers(0, 2**32, (s, t, c, w), dtype=np.uint32)
+    filled = jnp.asarray(rng.integers(0, window, s), jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, t + 1, s), jnp.int32)
+    # spatial bundle in numpy -> per-cycle words for the ref path
+    bits = ((bound[..., None] >> np.arange(32, dtype=np.uint32)) & 1)
+    bits = bits.reshape(s, t, c, dim)
+    if mode == "or":
+        spat = bits.any(axis=2)
+    elif mode == "thin":
+        spat = bits.sum(axis=2) >= threshold
+    else:
+        spat = bits.sum(axis=2) * 2 > c
+    words = hv.np_pack_bits(spat.astype(np.uint8))
+    ref = np.asarray(fleet_counts_ref(
+        jnp.asarray(words), filled, lengths, window=window, dim=dim))
+    tm = emission_masks(filled, lengths, t_pad=t, window=window)
+    got = np.asarray(fleet_counts_pallas(
+        jnp.asarray(bound), tm, mode=mode, dim=dim, threshold=threshold,
+        interpret=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+@given(st.integers(0, 2**63))
+@settings(max_examples=10, deadline=None)
+def test_fleet_counts_ref_property(seed):
+    from repro.kernels.hdc_fleet.ref import fleet_counts_ref
+    rng = np.random.default_rng(seed)
+    s, t_pad, w, window = 4, 40, 2, 16
+    words = rng.integers(0, 2**32, (s, t_pad, w), dtype=np.uint32)
+    filled = rng.integers(0, window, s).astype(np.int32)
+    lengths = rng.integers(0, t_pad + 1, s).astype(np.int32)
+    got = np.asarray(fleet_counts_ref(
+        jnp.asarray(words), jnp.asarray(filled), jnp.asarray(lengths),
+        window=window, dim=w * 32))
+    want = _einsum_slot_counts(words, filled, lengths, window)
+    np.testing.assert_array_equal(got, want)
