@@ -8,10 +8,16 @@ machine, so they transfer across runner hardware far better than absolute
 times; the committed CI reference (benchmarks/BENCH_fleet_tiny.json) uses
 the BENCH_TINY geometry so the gate stays stable on small shared runners.
 
+The gate also reads the fresh run's per-stage breakdown
+(``fleet.*.stage_*`` rows, another same-process ratio): the code-domain
+datapath's whole point is that the spatial gather+bundle stops dominating
+the step, so a fresh ``stage_spatial`` share above ``--max-spatial-share``
+(default 50% of steady-state push time) fails the gate.
+
 Usage::
 
     python -m benchmarks.check_fleet_regression FRESH.json REFERENCE.json \
-        [--tolerance 0.25]
+        [--tolerance 0.25] [--max-spatial-share 0.5]
 """
 
 from __future__ import annotations
@@ -22,6 +28,7 @@ import re
 import sys
 
 _SPEEDUP = re.compile(r"^([0-9.]+)x ")
+_SHARE = re.compile(r"^share=([0-9.]+)% ")
 
 
 def speedups(path: str) -> dict[str, float]:
@@ -42,12 +49,31 @@ def speedups(path: str) -> dict[str, float]:
     return out
 
 
+def stage_shares(path: str) -> dict[str, float]:
+    """``fleet.*.stage_*`` rows -> fractional share of steady-state push."""
+    with open(path) as f:
+        payload = json.load(f)
+    out: dict[str, float] = {}
+    for row in payload.get("rows", []):
+        name = row.get("name", "")
+        if not (name.startswith("fleet.") and ".stage_" in name):
+            continue
+        m = _SHARE.match(row.get("derived", ""))
+        if not m:
+            raise SystemExit(f"{path}: unparseable stage row {row!r}")
+        out[name] = float(m.group(1)) / 100.0
+    return out
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", help="BENCH_fleet.json from this run")
     ap.add_argument("reference", help="committed reference BENCH_fleet.json")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--max-spatial-share", type=float, default=0.5,
+                    help="fail when the fresh stage_spatial share of the "
+                         "steady-state push exceeds this (default 0.5)")
     args = ap.parse_args(argv)
 
     fresh = speedups(args.fresh)
@@ -67,9 +93,26 @@ def main(argv: list[str] | None = None) -> int:
               f"{ref[name]:.2f}x (floor {floor:.2f}x) -> {status}")
         if fresh[name] < floor:
             failed.append(name)
+
+    shares = stage_shares(args.fresh)
+    spatial = {n: v for n, v in shares.items() if n.endswith("stage_spatial")}
+    if not spatial:
+        print("no fleet.*.stage_spatial row in fresh run "
+              "(per-stage breakdown missing)", file=sys.stderr)
+        return 1
+    for name, share in sorted(shares.items()):
+        note = ""
+        if name in spatial:
+            ok = share <= args.max_spatial_share
+            note = (f" (cap {args.max_spatial_share:.0%}) -> "
+                    f"{'OK' if ok else 'DOMINANT'}")
+            if not ok:
+                failed.append(name)
+        print(f"{name}: {share:.1%} of steady-state push{note}")
+
     if failed:
-        print(f"fleet speedup regression >{args.tolerance:.0%} in: "
-              f"{', '.join(failed)}", file=sys.stderr)
+        print(f"fleet perf gate failed: {', '.join(failed)}",
+              file=sys.stderr)
         return 1
     return 0
 

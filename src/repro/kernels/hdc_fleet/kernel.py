@@ -1,33 +1,46 @@
-"""Fused fleet-step kernel: spatial bundling + bit-plane temporal counts.
+"""Fused code-domain fleet-step kernel: gather + bind + bundle + counters.
 
-One grid cell is (session, 32-cycle time group).  The kernel consumes
-owner-gathered PRE-BOUND packed codebook rows (binding folded into the table
-build, serve/dispatch.py) and keeps the whole per-group pipeline in VMEM:
+One grid cell is (session, 32-cycle time group).  The kernel consumes RAW
+uint8 LBP codes — the only per-cycle input that ever crosses HBM — and keeps
+the session's pre-bound CompIM table bank (binding folded into the table
+build, serve/dispatch.py) resident in VMEM, selected per session by a
+scalar-prefetched owner index (the table BlockSpec's index map reads
+``owner[i]``, so patients sharing a codebook share one VMEM block and no
+per-session table copy is ever materialized):
 
-    bound rows (32, C, W) uint32
-        --spatial bundle-->  (32, W) per-cycle packed HVs
+    codes (32, C) uint8
+        --VMEM table gather-->  (32, C, W) bound rows
+           (rows[j, c] = table[c, codes[j, c]]; the CompIM insight one
+           stage further: binding IS the lookup)
+        --spatial bundle-->     (32, W) per-cycle packed HVs
            (OR tree / adder tree + thinning / majority, per variant)
-        --bit transpose-->   (32, W) time-packed bit planes
+        --bit transpose-->      (32, W) time-packed bit planes
            (one uint32 = 32 cycles of one bit position)
-        --masked popcount--> (K+1, 32, W) int32 counter bank
+        --masked popcount-->    (K+1, 32, W) int32 counter bank
            accumulated across time groups, like hdc_encoder's counter bank
 
-HBM traffic per group is the bound rows in and (on the last group) one
-(K+1, D) count bank out — the per-cycle HVs, the bit planes and the
-temporal counters never leave VMEM, and no float math or 32x unpacked
+HBM traffic per group is 32*C bytes of codes in and (on the last group) one
+(K+1, D) count bank out — the bound rows, the per-cycle HVs, the bit planes
+and the temporal counters never leave VMEM, and no float math or unpacked
 expansion exists anywhere (the TPU analogue of the paper's binary-domain
-argument; see README.md "Kernel & datapath design").
+argument; see README.md "Kernel & datapath design").  The old bound-rows
+kernel shipped (32, C, W) uint32 per group from HBM — 128 bytes per
+(cycle, channel) where this kernel ships ONE.
 
-VMEM per grid step (defaults window=256, C=64, D=1024, K=1):
-  bound block   32*64*32*4 B = 256 KiB
+VMEM per grid step (defaults window=256, C=64, K=64 codes, D=1024, K+1=2):
+  table bank    64*64*32*4 B = 1 MiB  (resident; re-fetched only when the
+                                       session's owner row changes)
+  codes block      32*64 B   =   2 KiB
   spatial/planes  32*32*4 B  =   4 KiB
   counter bank  2*32*32*4 B  =   8 KiB
 
 The emission schedule arrives as time-packed per-slot cycle masks
 (ref.emission_masks) computed on device from (filled, lengths): bit j of
 mask word g selects cycle 32 g + j into a slot, so the masked popcount IS
-the temporal bundling of that slot.  Bit-exact with ref.fleet_counts_ref
-(tests/test_kernels.py).
+the temporal bundling of that slot.  Bit-exact with the pure-jnp code-domain
+path (dispatch.owner_spatial_codes + ref.fleet_counts_ref); validated in
+interpret mode (tests/test_kernels.py) — Mosaic lowering of the in-kernel
+gather is untested on real TPUs, like the SWAR transpose (ROADMAP).
 """
 
 from __future__ import annotations
@@ -37,6 +50,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hv
 
@@ -45,7 +59,7 @@ def _spatial_bundle(bound: jax.Array, *, mode: str, channels: int, dim: int,
                     threshold: int) -> jax.Array:
     """(32, C, W) bound rows -> (32, W) per-cycle packed spatial HVs.
 
-    Mirrors dispatch.owner_spatial_encode: ``or`` = OR tree (optimized
+    Mirrors dispatch.owner_spatial_codes: ``or`` = OR tree (optimized
     sparse), ``thin`` = adder tree + threshold (naive sparse), ``majority``
     = adder tree + majority (dense).
     """
@@ -74,17 +88,26 @@ def _spatial_bundle(bound: jax.Array, *, mode: str, channels: int, dim: int,
                    dtype=jnp.uint32)
 
 
-def _fleet_kernel(bound_ref, tm_ref, out_ref, *, mode: str, channels: int,
-                  dim: int, threshold: int):
+def _fleet_kernel(owner_ref, tab_ref, codes_ref, tm_ref, out_ref, *,
+                  mode: str, channels: int, n_codes: int, dim: int,
+                  threshold: int):
+    del owner_ref  # consumed by the BlockSpec index maps (scalar prefetch)
     g = pl.program_id(1)
 
     @pl.when(g == 0)
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    bound = bound_ref[0]                                   # (32, C, W)
+    tab = tab_ref[0]                                       # (C, K, W)
+    # out-of-alphabet codes clamp within their channel's rows, like the
+    # jnp path (dispatch.owner_spatial_codes) and the reference indexing
+    cb = jnp.minimum(codes_ref[0].astype(jnp.int32), n_codes - 1)  # (32, C)
+    # per-cycle gather out of the VMEM-resident bank: row (c, codes[j, c])
+    flat = tab.reshape(channels * n_codes, tab.shape[-1])
+    cbase = jax.lax.broadcasted_iota(jnp.int32, (32, channels), 1) * n_codes
+    bound = jnp.take(flat, cbase + cb, axis=0)             # (32, C, W)
     words = _spatial_bundle(bound, mode=mode, channels=channels, dim=dim,
-                           threshold=threshold)            # (32, W)
+                            threshold=threshold)           # (32, W)
     planes = hv.bit_transpose32(words)                     # (32b, W)
     tm = tm_ref[0, :, 0]                                   # (K+1,) uint32
     # masked popcount: one AND + popcount bundles 32 cycles into each slot
@@ -92,29 +115,40 @@ def _fleet_kernel(bound_ref, tm_ref, out_ref, *, mode: str, channels: int,
     out_ref[0] += contrib.astype(jnp.int32)                # (1, K+1, 32, W)
 
 
-def fleet_counts_pallas(bound: jax.Array, tm: jax.Array, *, mode: str,
+def fleet_counts_pallas(tables: jax.Array, owner: jax.Array,
+                        codes: jax.Array, tm: jax.Array, *, mode: str,
                         dim: int, threshold: int = 1,
                         interpret: bool = True) -> jax.Array:
-    """bound: (S, T32, C, W) uint32 owner-gathered pre-bound rows (T32 a
-    multiple of 32; padded cycles are masked off by ``tm``);
+    """tables: (P, C, K, W) uint32 stacked pre-bound codebook bank;
+    owner: (S,) int32 each session's table row (scalar-prefetched so the
+    BlockSpec can gather the right bank into VMEM);
+    codes: (S, T32, C) uint8 raw LBP codes (T32 a multiple of 32; padded
+    cycles are masked off by ``tm``);
     tm: (S, K+1, T32 // 32) uint32 time-packed slot masks
     (ref.emission_masks).  Returns (S, K+1, D) int32 slot counts."""
-    s, t32, c, w = bound.shape
-    assert t32 % 32 == 0 and w * 32 == dim
+    p, c, k, w = tables.shape
+    s, t32, c2 = codes.shape
+    assert c2 == c and t32 % 32 == 0 and w * 32 == dim
     groups = t32 // 32
     kp1 = tm.shape[1]
-    kernel = functools.partial(_fleet_kernel, mode=mode, channels=c, dim=dim,
-                               threshold=threshold)
-    counts = pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_fleet_kernel, mode=mode, channels=c,
+                               n_codes=k, dim=dim, threshold=threshold)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(s, groups),
         in_specs=[
-            pl.BlockSpec((1, 32, c, w), lambda i, g: (i, g, 0, 0)),
-            pl.BlockSpec((1, kp1, 1), lambda i, g: (i, 0, g)),
+            pl.BlockSpec((1, c, k, w), lambda i, g, owner_ref: (owner_ref[i], 0, 0, 0)),
+            pl.BlockSpec((1, 32, c), lambda i, g, owner_ref: (i, g, 0)),
+            pl.BlockSpec((1, kp1, 1), lambda i, g, owner_ref: (i, 0, g)),
         ],
-        out_specs=pl.BlockSpec((1, kp1, 32, w), lambda i, g: (i, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, kp1, 32, w),
+                               lambda i, g, owner_ref: (i, 0, 0, 0)),
+    )
+    counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s, kp1, 32, w), jnp.int32),
         interpret=interpret,
-    )(bound, tm)
+    )(owner.astype(jnp.int32), tables, codes, tm)
     # time_pack's (bit, word) layout -> standard d = word * 32 + bit order
     return counts.transpose(0, 1, 3, 2).reshape(s, kp1, dim)

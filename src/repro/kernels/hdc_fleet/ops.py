@@ -5,13 +5,15 @@ Two paths, both bit-exact with the per-session reference datapaths:
 * ``fleet_counts`` — pure-jnp bit-plane path (ref.py): takes the per-cycle
   packed spatial HVs and needs NO masks (slot membership is contiguous, so
   counts are prefix-count differences at slot boundaries).
-* ``fleet_counts_fused`` — the Pallas kernel (kernel.py): takes
-  owner-gathered pre-bound codebook rows and fuses spatial bundling + bit
-  transpose + masked-popcount temporal accumulation in VMEM, driven by
-  device-computed time-packed emission masks (ref.emission_masks).
+* ``fleet_counts_fused`` — the Pallas kernel (kernel.py): takes RAW uint8
+  codes plus the stacked pre-bound codebook bank and fuses the table gather
+  (bind), spatial bundling, bit transpose and masked-popcount temporal
+  accumulation in VMEM, driven by device-computed time-packed emission
+  masks (ref.emission_masks).  Nothing per-cycle wider than the codes
+  themselves ever crosses HBM.
 
 ``spatial_mode`` maps an HDCConfig onto the kernel's spatial-bundle variant
-exactly as serve/dispatch.owner_spatial_encode routes it.
+exactly as serve/dispatch.owner_spatial_codes routes it.
 """
 
 from __future__ import annotations
@@ -41,18 +43,23 @@ def fleet_counts(words: jax.Array, filled: jax.Array, lengths: jax.Array,
                             dim=cfg.dim)
 
 
-def fleet_counts_fused(bound: jax.Array, filled: jax.Array,
+def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
+                       codes: jax.Array, filled: jax.Array,
                        lengths: jax.Array, cfg: HDCConfig) -> jax.Array:
-    """(S, T, C, W) owner-gathered pre-bound rows -> (S, K+1, D) counts.
+    """(S, T, C) raw uint8 codes -> (S, K+1, D) counts, one fused pass.
 
-    Pads the cycle axis to a 32 multiple (padded cycles are masked off by
-    the emission schedule) and runs the fused kernel; interpret mode off-TPU.
+    ``tables`` is the stacked (P, C, K, W) pre-bound codebook bank and
+    ``owner`` each session's row into it (scalar-prefetched by the kernel's
+    table BlockSpec).  Pads the cycle axis to a 32 multiple (padded cycles
+    gather row 0 but are masked off by the emission schedule) and runs the
+    fused kernel; interpret mode off-TPU.
     """
-    s, t, c, w = bound.shape
+    s, t, c = codes.shape
     t32 = -(-t // 32) * 32
     if t32 != t:
-        bound = jnp.pad(bound, ((0, 0), (0, t32 - t), (0, 0), (0, 0)))
+        codes = jnp.pad(codes, ((0, 0), (0, t32 - t), (0, 0)))
     tm = emission_masks(filled, lengths, t_pad=t, window=cfg.window)
     mode, threshold = spatial_mode(cfg)
-    return fleet_counts_pallas(bound, tm, mode=mode, dim=cfg.dim,
-                               threshold=threshold, interpret=use_interpret())
+    return fleet_counts_pallas(tables, owner, codes, tm, mode=mode,
+                               dim=cfg.dim, threshold=threshold,
+                               interpret=use_interpret())

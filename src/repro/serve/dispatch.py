@@ -9,7 +9,11 @@ MANY patients against ONE device computation.  Two shared tricks:
   patient (the CompIM observation, pushed one stage further: position-domain
   binding collapses into the table build).  Per cycle, spatial encoding is
   then just a gather + OR-tree (or adder-tree for the thinning/dense
-  variants), with no per-cycle decode/shift/pack work.
+  variants), with no per-cycle decode/shift/pack work.  The serving device
+  step consumes RAW uint8 codes end to end (``owner_spatial_codes`` / the
+  fused ``kernels/hdc_fleet`` kernel): the gather and the bundling reduce
+  are fused, so the per-cycle bound ``(..., C, W)`` expansion is never
+  materialized and the host ships one byte per (cycle, channel).
 * **Owner gathering.**  The per-patient tables stack along a leading
   unique-params axis and each stream's rows are gathered INSIDE the lookup,
   so a single jitted call encodes any mix of patients — no Python
@@ -34,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binding, bundling, classifier, hv
+from repro.core import binding, bundling, hv
 from repro.core.pipeline import HDCConfig, HDCPipeline
 
 
@@ -113,16 +117,6 @@ def stack_bound_tables(pipes: Sequence[HDCPipeline]) -> tuple[jax.Array, np.ndar
     return jnp.stack(unique), np.asarray(rows, np.int32)
 
 
-def owner_gather_bound(
-    tables: jax.Array, owner: jax.Array, codes: jax.Array
-) -> jax.Array:
-    """Gather each stream's pre-bound rows: ``(B, ..., channels)`` codes ->
-    ``(B, ..., C, W)`` packed bound HVs (the fused fleet kernel's input)."""
-    ch = jnp.arange(tables.shape[1])
-    o = owner.reshape((-1,) + (1,) * (codes.ndim - 1))
-    return tables[o, ch, codes.astype(jnp.int32)]
-
-
 def owner_spatial_encode(
     tables: jax.Array, owner: jax.Array, codes: jax.Array, cfg: HDCConfig
 ) -> jax.Array:
@@ -130,9 +124,14 @@ def owner_spatial_encode(
 
     ``tables`` is the stacked pre-bound codebook bank; ``owner`` (B,) selects
     each stream's row.  Bit-exact with ``pipeline.spatial_encode`` on each
-    stream's own params, for every variant.
+    stream's own params, for every variant.  This is the REFERENCE
+    formulation (it materializes the full ``(B, ..., C, W)`` bound
+    expansion); the serving paths run ``owner_spatial_codes``, which is
+    bit-exact with it and never materializes the expansion.
     """
-    bound = owner_gather_bound(tables, owner, codes)  # (B, ..., C, W)
+    ch = jnp.arange(tables.shape[1])
+    o = owner.reshape((-1,) + (1,) * (codes.ndim - 1))
+    bound = tables[o, ch, codes.astype(jnp.int32)]  # (B, ..., C, W)
     if cfg.variant == "dense":
         counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
         return hv.majority_pack(counts, cfg.channels, cfg.dim)
@@ -142,49 +141,91 @@ def owner_spatial_encode(
 
 
 def spatial_block_len(t_pad: int, cfg: HDCConfig) -> int:
-    """Largest divisor of t_pad <= min(cap, window): the time-block of the
-    scanned spatial encode.
+    """Largest divisor of t_pad <= min(8, window): the time-block of the
+    scanned count-domain spatial encode.
 
-    Blocks bound the per-iteration temporaries of the vectorized spatial
-    encode (the bit-domain variants materialize a (S, block, channels, D)
-    expansion, so they get a tighter cap than the position-domain default).
+    Blocks bound the per-iteration channel-gather temporary of the
+    adder-tree variants to ``(channels, S, block, W)`` packed words.  The
+    old tighter bit-domain cap is gone: the code-domain path channel-pads
+    the gathered stack to a 32-multiple so the reduction always runs on the
+    bit-plane popcount adder — no ``(S, block, channels, D)`` unpacked
+    expansion exists on any variant anymore.  The OR-tree variant takes the
+    scan-free whole-chunk path and never calls this.
     """
-    cap = min(8 if cfg.variant == "sparse_compim" else 4, cfg.window, t_pad)
+    cap = min(8, cfg.window, t_pad)
     return max(b for b in range(1, cap + 1) if t_pad % b == 0)
 
 
-def owner_spatial_words(
+def owner_spatial_codes(
     tables: jax.Array, owner: jax.Array, codes: jax.Array, cfg: HDCConfig
 ) -> jax.Array:
-    """Blockwise-scanned spatial encode of a chunk batch: (S, T, channels)
-    codes -> (S, T, W) per-cycle packed HVs.
+    """Code-domain fused gather+bind+bundle: (S, T, channels) uint8 codes ->
+    (S, T, W) per-cycle packed spatial HVs.
 
-    A lax.scan over fixed time blocks bounds the channel-gather temporary,
-    and the gather runs CHANNEL-major over a flattened (P*C*codes, W) table
-    (one jnp.take with contiguous rows): the bundling tree then reduces a
-    leading axis with dense slices instead of strided (..., C, W) ones,
-    which is ~40% faster on CPU and identical bit-for-bit.  The packed
-    per-cycle stream feeds the bit-plane temporal bundler
-    (kernels/hdc_fleet)."""
+    The device-side spatial stage of the fleet/engine ``backend="jnp"``
+    datapath.  Binding is already folded into the pre-bound table build
+    (``bound_table``), so the whole spatial encode is table lookups feeding
+    a reduction — and the reduction is fused into the gather consumer, so
+    the ``(S, T, C, W)`` bound expansion is never materialized:
+
+    * OR tree (optimized sparse): one flattened contiguous ``jnp.take`` per
+      CHANNEL over the whole chunk, pairwise-OR-reduced as a tree so XLA
+      overlaps independent gather+OR pairs.  The gathers clamp
+      (``mode="clip"``, the same OOB rule as the reference's advanced
+      indexing — and ~2x cheaper than the default fill mode, which
+      materializes a select+broadcast per gather).  The peak temporary is
+      one tree level of channel rows, and there is no scan (the scan
+      carry/stacking overhead dominated the old blockwise path).
+    * adder tree (naive sparse / thinning / dense majority): a scan over
+      ``spatial_block_len`` time blocks; per block one c-major flattened
+      take, channel-padded to a 32-multiple so the per-bit counts always
+      run on the bit-plane popcount adder (no unpacked channel expansion),
+      then threshold/majority pack.
+
+    Bit-exact with ``owner_spatial_encode`` for every variant (OR and
+    integer adds are associative/commutative; zero pad rows add nothing).
+    """
     s, t, c = codes.shape
     p, _, k, w = tables.shape
+    flat = tables.reshape(p * c * k, w)
+    if t == 0:
+        return jnp.zeros((s, 0, w), jnp.uint32)
+
+    # clamp BEFORE flattening the (patient, channel, code) index: an
+    # out-of-alphabet code (hostile input, stale staging bytes) must clip
+    # within its channel's rows like the reference's advanced indexing,
+    # not spill into the next channel's table
+    codes = jnp.minimum(codes, jnp.asarray(k - 1, codes.dtype))
+
+    if cfg.variant == "sparse_compim" and not cfg.spatial_thinning:
+        ob = (owner.astype(jnp.int32) * (c * k))[:, None]  # (S, 1)
+        ci32 = codes.astype(jnp.int32)
+        lvl = [jnp.take(flat, ob + ci * k + ci32[:, :, ci], axis=0,
+                        mode="clip")
+               for ci in range(c)]                          # C x (S, T, W)
+        while len(lvl) > 1:
+            nxt = [a | b for a, b in zip(lvl[0::2], lvl[1::2])]
+            if len(lvl) % 2:
+                nxt.append(lvl[-1])
+            lvl = nxt
+        return lvl[0]
+
     block = spatial_block_len(t, cfg)
     nb = t // block
     blocks = codes.reshape(s, nb, block, c).transpose(1, 0, 2, 3)
-    flat = tables.reshape(p * c * k, w)
-    ob = owner[None, :, None] * (c * k)                    # (1, S, 1)
+    ob = owner[None, :, None].astype(jnp.int32) * (c * k)  # (1, S, 1)
     cbase = (jnp.arange(c) * k)[:, None, None]             # (C, 1, 1)
+    c32 = -(-c // 32) * 32
 
     def body(_, cb):
         idx = ob + cbase + cb.transpose(2, 0, 1).astype(jnp.int32)
-        bound = jnp.take(flat, idx, axis=0)                # (C, S, block, W)
+        bound = jnp.take(flat, idx, axis=0, mode="clip")   # (C, S, block, W)
+        if c32 != c:  # zero rows count nothing; keeps the bit-plane route
+            bound = jnp.pad(bound, ((0, c32 - c), (0, 0), (0, 0), (0, 0)))
+        counts = hv.unpacked_counts(bound, axis=0, dim=cfg.dim)
         if cfg.variant == "dense":
-            counts = hv.unpacked_counts(bound, axis=0, dim=cfg.dim)
             return None, hv.majority_pack(counts, cfg.channels, cfg.dim)
-        if cfg.variant == "sparse_naive" or cfg.spatial_thinning:
-            counts = hv.unpacked_counts(bound, axis=0, dim=cfg.dim)
-            return None, hv.threshold_pack(counts, cfg.spatial_threshold)
-        return None, hv.or_reduce(bound, axis=0)
+        return None, hv.threshold_pack(counts, cfg.spatial_threshold)
 
     _, out = jax.lax.scan(body, None, blocks)              # (nb, S, block, W)
     return out.transpose(1, 0, 2, 3).reshape(s, t, cfg.words)
@@ -200,10 +241,15 @@ def owner_encode_frames(
     """Vectorized multi-patient ``encode_frames``: (B, T, ch) -> (B, F, W).
 
     ``thresholds`` is the per-stream (B,) temporal-threshold register bank;
-    bit-exact with each stream's own ``pipeline.encode_frames`` (jnp backend).
+    bit-exact with each stream's own ``pipeline.encode_frames`` (jnp
+    backend).  Runs the code-domain spatial stage (``owner_spatial_codes``)
+    over the whole truncated stream, then frames the packed per-cycle HVs —
+    batched serving never materializes per-frame bound expansions either.
     """
-    framed = classifier.frame_view(codes, cfg.window)  # (B, F, win, C)
-    spatial = owner_spatial_encode(tables, owner, framed, cfg)
+    b, t, _ = codes.shape
+    f = t // cfg.window
+    words = owner_spatial_codes(tables, owner, codes[:, : f * cfg.window], cfg)
+    spatial = words.reshape(b, f, cfg.window, cfg.words)
     counts = bundling.temporal_counts(spatial, cfg.dim)  # (B, F, D)
     if cfg.variant == "dense":
         return hv.majority_pack(counts, cfg.window, cfg.dim)

@@ -18,10 +18,14 @@ Serves a fleet of implant streams against one accelerator:
   one-shot encoder.  For thousands of concurrent streams use
   ``serve.fleet.StreamingFleet`` — one jitted step for the whole fleet.
 
-The batched temporal bundling under ``serve`` runs on the bit-plane popcount
-adder (``hv.unpacked_counts`` routes window-length reductions through
+The batched encode path is code-domain end to end: the spatial stage is the
+fused gather+bind+bundle over the pre-bound codebook bank
+(``dispatch.owner_spatial_codes`` — the request's uint8 codes are the only
+per-cycle operand, and the (B, F, win, C, W) bound expansion is never
+materialized), and temporal bundling runs on the bit-plane popcount adder
+(``hv.unpacked_counts`` routes window-length reductions through
 ``hv.bitplane_counts``), so no unpacked (..., window, D) expansion is
-materialized on the encode path.
+materialized either.
 
 All per-patient configs in a bank must share one datapath
 (``dispatch.datapath_key``): per-patient calibrated ``temporal_threshold``

@@ -17,28 +17,39 @@ HVs from the stacked (P, C, W) AM bank, its calibrated temporal threshold,
 and its row into the stacked unique-params codebook bank.
 
 One jitted ``step(state, chunk, lengths)`` advances ALL sessions, and the
-whole step stays in the packed/bit-plane domain (kernels/hdc_fleet): a
-``lax.scan`` over fixed time blocks produces the per-cycle packed spatial
-HVs, ``hv.time_pack`` flips them into bit planes (one uint32 = 32 cycles of
-one bit position), and per-frame-slot temporal counts fall out of popcount
+whole step consumes RAW uint8 LBP codes end to end (the CODE domain —
+1 byte per (cycle, channel) of host->device traffic): the spatial stage is
+a fused gather+bind+bundle out of the pre-bound per-(channel, code)
+codebook bank (``dispatch.owner_spatial_codes`` — binding folded into the
+table build, the reduction fused into the gather consumer, the
+(S, T, C, W) bound expansion never materialized), ``hv.time_pack`` flips
+the per-cycle packed HVs into bit planes (one uint32 = 32 cycles of one
+bit position), and per-frame-slot temporal counts fall out of popcount
 prefix sums — no unpacked (S, block, D) float tensor, no f32 GEMM, no
 per-cycle branching.  WHEN each session's window boundaries fall is a pure
 function of ``(filled, lengths)``, so the emission schedule is computed
 INSIDE the jitted step (at most K = ceil(t_pad / window) completed slots
-plus a leftover tail per step); the host ships only the (S,) chunk lengths
-and keeps O(S) mirrors for collection.  ONE threshold/majority-pack + AM
-search scores all K frame slots of all sessions together.  ``lengths``
-masks the padding — sessions push chunks of ANY length, including 0 — and
-chunk lengths are bucketed/padded to a fixed set so steady streams compile
-once per bucket.  With ``backend="pallas"`` the spatial bundle + bit
-transpose + masked-popcount accumulate run as ONE fused VMEM kernel.
+plus a leftover tail per step); the host ships only the codes and the (S,)
+chunk lengths and keeps O(S) mirrors for collection.  ONE
+threshold/majority-pack + AM search scores all K frame slots of all
+sessions together.  ``lengths`` masks the padding — sessions push chunks
+of ANY length, including 0 — and chunk lengths are bucketed/padded to a
+fixed set so steady streams compile once per bucket.  With
+``backend="pallas"`` the table gather + spatial bundle + bit transpose +
+masked-popcount accumulate run as ONE fused VMEM kernel with the CompIM
+table bank resident in VMEM (codes in, per-slot counts out).
 
 The step is memory-bound, so the fleet partitions sessions into TILES
-(default 256) that keep each step's gather/bit-plane temporaries
+(``derive_tile``: sized from the device's reported memory geometry, the
+``REPRO_FLEET_TILE`` env var, or the cache-tuned ``DEFAULT_TILE=256`` CPU
+fallback) that keep each step's gather/bit-plane temporaries
 cache-resident — throughput now grows with S instead of plateauing — and
 round-robins tiles over the local devices: per-tile steps dispatch
 asynchronously, so multi-device hosts advance tiles concurrently with no
 SPMD machinery.  All tiles share one jitted executable per chunk bucket.
+Ingest is staged through per-tile pinned uint8 code rings: one vectorized
+slice write + one device put per tile per round (``push_codes`` skips even
+the ragged-list packing for pre-stacked steady streams).
 
 Online adaptation (core.online): the fleet carries a stacked (S, C, D)
 counter-file bank — each session's private, adaptable view of its patient's
@@ -96,7 +107,54 @@ DEFAULT_BUCKETS = (32, 64, 128, 256)
 # quarter tile compile exact shapes instead (tile-padding down there
 # would dominate their cost, and latency-sensitive few-stream users are
 # better served by exact shapes or by SeizureSession directly).
+# DEFAULT_TILE is the CPU-cache-tuned fallback; ``derive_tile`` sizes the
+# tile from the device's memory geometry when it exposes one.
 DEFAULT_TILE = 256
+
+
+def derive_tile(cfg: HDCConfig, *, max_bucket: int = DEFAULT_BUCKETS[-1],
+                device=None) -> int:
+    """Sessions-per-tile default for this device and config geometry.
+
+    Resolution order:
+
+    1. ``REPRO_FLEET_TILE`` env var (explicit operator override);
+    2. devices that report a memory size (``device.memory_stats()``:
+       TPU/GPU ``bytes_limit``): the largest power-of-two tile whose
+       per-session working set — streaming state, online AM bank, staged
+       chunk codes and the step's bit-plane temporaries — fills at most
+       ~1/16 of device memory, clamped to [64, 4096] (the banks, the other
+       round-robin tiles and the executables share the rest);
+    3. otherwise (CPU hosts expose no memory stats): ``DEFAULT_TILE``, the
+       L2/L3-cache-tuned measurement from this repo's benchmark container.
+
+    The ``StreamingFleet(tile=...)`` constructor argument bypasses all of
+    this.
+    """
+    env = os.environ.get("REPRO_FLEET_TILE", "")
+    if env:
+        tile = int(env)
+        if tile <= 0:
+            raise ValueError(f"REPRO_FLEET_TILE={env!r} must be positive")
+        return tile
+    if device is None:
+        device = jax.local_devices()[0]
+    try:
+        stats = device.memory_stats() or {}
+    except Exception:  # backends without memory introspection
+        stats = {}
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    if not limit:
+        return DEFAULT_TILE
+    per_session = (
+        cfg.dim * 4 * (1 + cfg.n_classes)          # counts + online AM bank
+        + cfg.n_classes * cfg.words * 4            # class-HV rows
+        + max_bucket * cfg.channels                # staged uint8 codes
+        + 8 * max_bucket * cfg.words               # bit-plane temporaries
+    )
+    budget = int(limit) // 16
+    tile = max(64, min(4096, budget // max(per_session, 1)))
+    return 1 << (tile.bit_length() - 1)            # floor to a power of two
 
 
 @dataclass(frozen=True)
@@ -180,24 +238,28 @@ def _fleet_step(
 ) -> tuple[FleetState, FleetOut]:
     """Advance all S sessions by one padded chunk batch.
 
-    chunk: (S, t_pad, channels) uint8; lengths: (S,) int32 valid cycles per
+    chunk: (S, t_pad, channels) uint8 RAW LBP codes — the only per-cycle
+    payload the host ever ships; lengths: (S,) int32 valid cycles per
     session.  The emission schedule is computed HERE from
-    ``(state.filled, lengths)`` — the host ships no masks — and the
-    temporal bundling runs in the packed/bit-plane domain
-    (kernels/hdc_fleet): popcount prefix sums at frame-slot boundaries, or
-    the fused VMEM kernel when ``use_kernel``.  Frames score against
-    ``state.class_rows`` (refreshed by ``adapt``), and the step records
-    each emitting session's last frame HV + scores — the operands a later
-    ``adapt`` call consumes, captured inside the same jitted program.
+    ``(state.filled, lengths)`` — the host ships no masks — and the whole
+    datapath stays in the code/packed/bit-plane domain (kernels/hdc_fleet):
+    the spatial stage is a fused gather+bind+bundle out of the pre-bound
+    codebook bank (``dispatch.owner_spatial_codes``, never materializing
+    the (S, T, C, W) bound expansion), temporal counts are popcount prefix
+    sums at frame-slot boundaries, or ONE fused VMEM kernel does all of it
+    when ``use_kernel``.  Frames score against ``state.class_rows``
+    (refreshed by ``adapt``), and the step records each emitting session's
+    last frame HV + scores — the operands a later ``adapt`` call consumes,
+    captured inside the same jitted program.
     """
     s, t_pad, _ = chunk.shape
     if use_kernel:
-        # fused kernel: owner-gather the pre-bound rows, everything else
-        # (spatial bundle, bit transpose, masked popcount) stays in VMEM
-        bound = dispatch.owner_gather_bound(tables, owner, chunk)
-        seg = fleet_ops.fleet_counts_fused(bound, state.filled, lengths, cfg)
+        # fused kernel: codes in, slot counts out — the table gather,
+        # spatial bundle, bit transpose and masked popcount stay in VMEM
+        seg = fleet_ops.fleet_counts_fused(tables, owner, chunk,
+                                           state.filled, lengths, cfg)
     else:
-        words = dispatch.owner_spatial_words(tables, owner, chunk, cfg)
+        words = dispatch.owner_spatial_codes(tables, owner, chunk, cfg)
         seg = fleet_ops.fleet_counts(words, state.filled, lengths, cfg)
     seg = shd.constrain(seg, ("batch", None, None), ctx)  # (S, K+1, D) int32
 
@@ -296,11 +358,15 @@ class StreamingFleet:
     ``compile_count``.  Steady-state serving should prefer ``push_raw``: it
     returns the device-resident ``FleetRound`` results WITHOUT materializing
     per-frame Python objects or forcing a device sync (``push`` is
-    ``collect_decisions(push_raw(...))``).
+    ``collect_decisions(push_raw(...))``).  Equal-length pre-stacked streams
+    should use ``push_codes`` / ``push_codes_raw`` — the (S, t, channels)
+    batch goes straight into the per-tile staging rings with no ragged-list
+    packing at all.
 
-    ``backend`` selects the temporal-bundling implementation ("jnp" = pure
-    XLA bit-plane path, "pallas" = fused VMEM kernel; both bit-exact);
-    defaults to the bank's pipeline backend.
+    ``backend`` selects the device datapath ("jnp" = pure XLA code-domain
+    gather + bit-plane path, "pallas" = fused VMEM kernel with the CompIM
+    table bank resident on chip; both bit-exact); defaults to the bank's
+    pipeline backend.
 
     ``adapt(labels)`` personalizes AMs in place: one jitted gated update for
     the whole fleet against each session's last emitted frame (labels of -1
@@ -354,7 +420,16 @@ class StreamingFleet:
         # zero-length chunks and never emit or adapt.  A mesh replaces
         # tiling with SPMD sharding: one (padded) tile spanning the mesh.
         if tile is None:
-            tile = DEFAULT_TILE
+            tile = derive_tile(self._cfg, max_bucket=self._buckets[-1])
+            if not os.environ.get("REPRO_FLEET_TILE", ""):
+                # phantom-capacity guard: capacity pads to WHOLE tiles, so
+                # a memory-derived tile (up to 4096 on big accelerators) is
+                # also capped at the fleet's own size rounded up to a power
+                # of two — provisioning headroom stays < n instead of up to
+                # 4095 phantom rows stepped on every push.  Explicit
+                # tile=/env overrides are the operator's choice, uncapped.
+                tile = min(tile,
+                           max(64, 1 << (max(self._n - 1, 1).bit_length())))
         if tile <= 0:
             raise ValueError(f"tile={tile} must be positive")
         if self._n < tile // 4:
@@ -376,6 +451,24 @@ class StreamingFleet:
             devs = jax.local_devices()
         self._tile_devs = [devs[k % len(devs)]
                            for k in range(len(self._tile_slices))]
+        # per-tile pinned uint8 code staging rings: each round writes one
+        # vectorized slice per tile then ships it with ONE device put — no
+        # per-push allocation and no np scatter on the steady path.  Stale
+        # bytes past a session's round length are never re-zeroed: the step
+        # masks dead cycles via ``lengths`` and the table gather clips.
+        # One CONTIGUOUS buffer per (slot, bucket) — allocated lazily on a
+        # bucket's first use, so every round's put is the zero-copy aliasing
+        # case, never a strided-view copy — and DOUBLE-buffered: a slot is
+        # rewritten only after the round that consumed it completed
+        # (``_stage_busy``).  On the CPU backend ``jax.device_put`` of a
+        # contiguous aligned numpy array is ZERO-COPY — the jitted step
+        # reads the ring itself — so an unsynchronized rewrite would race
+        # an in-flight async step.
+        self._stage_t: list[dict] = [{} for _ in self._tile_slices]
+        # per tile: {(slot, bucket): output of the last round that read it}
+        self._stage_busy: list[dict] = [{} for _ in self._tile_slices]
+        self._stage_phase = 0
+        self._ragged_buf: np.ndarray | None = None
         # pre-bound codebook bank (P_unique, C, codes, W): replicated across
         # the mesh, or one copy per device used by the tiles
         if self._ctx.mesh is not None:
@@ -538,10 +631,22 @@ class StreamingFleet:
                 return b
         raise AssertionError("length exceeds max bucket")  # pragma: no cover
 
-    def _ingest(self, chunks: Sequence) -> tuple[np.ndarray, np.ndarray]:
-        """Validate + pack the ragged chunk list into one (S, T_max, ch)
-        buffer with a single vectorized scatter (no per-session copy loop).
-        Returns ``(buffer, lengths)``."""
+    def _stage_buf(self, k: int, slot: int, t_pad: int) -> np.ndarray:
+        """Tile ``k``'s contiguous staging buffer for (slot, bucket), safe
+        to rewrite: waits for the previous round that read this buffer (the
+        CPU backend's device_put aliases it zero-copy) before returning."""
+        key = (slot, t_pad)
+        busy = self._stage_busy[k].pop(key, None)
+        if busy is not None:
+            jax.block_until_ready(busy)
+        if key not in self._stage_t[k]:
+            sl = self._tile_slices[k]
+            self._stage_t[k][key] = np.zeros(
+                (sl.stop - sl.start, t_pad, self._cfg.channels), np.uint8)
+        return self._stage_t[k][key]
+
+    def _validate(self, chunks: Sequence) -> tuple[list[np.ndarray], np.ndarray]:
+        """Per-chunk dtype/shape validation; returns (arrays, lengths)."""
         ch = self._cfg.channels
         arrs = []
         for i, c in enumerate(chunks):
@@ -553,37 +658,50 @@ class StreamingFleet:
                     f"session {i}: chunk must be (t, {ch}), got {a.shape}"
                 )
             arrs.append(a)
-        lengths = np.asarray([a.shape[0] for a in arrs], np.int64)
+        return arrs, np.asarray([a.shape[0] for a in arrs], np.int64)
+
+    def _pack(self, arrs: list[np.ndarray], lengths: np.ndarray) -> np.ndarray:
+        """Ragged chunk list -> one (S, T_max, ch) code batch.
+
+        Steady streams (all lengths equal — the service-interval shape) are
+        one concatenate + reshape VIEW, no scatter.  Ragged pushes scatter
+        once into a REUSED staging buffer (grown geometrically, never
+        re-zeroed: rows past a session's length are dead cycles — the
+        device step masks them via ``lengths`` and the code-domain gather
+        clips, so stale bytes are harmless).
+        """
+        ch = self._cfg.channels
         total = int(lengths.max(initial=0))
-        if total == 0:
-            return np.zeros((self._n, 0, ch), np.uint8), lengths
         flat = np.concatenate(arrs, axis=0)                # (sum(t_i), ch)
         if (lengths == total).all():                       # steady streams
-            return flat.reshape(self._n, total, ch), lengths
-        big = np.zeros((self._n, total, ch), np.uint8)
+            return flat.reshape(self._n, total, ch)
+        if (self._ragged_buf is None
+                or self._ragged_buf.shape[1] < total):
+            cap = max(total, 2 * (0 if self._ragged_buf is None
+                                  else self._ragged_buf.shape[1]))
+            self._ragged_buf = np.empty((self._n, cap, ch), np.uint8)
+        big = self._ragged_buf
         rows = np.repeat(np.arange(self._n), lengths)
         starts = np.cumsum(lengths) - lengths
         cols = np.arange(int(lengths.sum())) - np.repeat(starts, lengths)
         big[rows, cols] = flat
-        return big, lengths
+        return big
 
-    def push_raw(self, chunks: Sequence) -> list[FleetRound]:
-        """Feed one (t_i, channels) uint8 chunk per session; zero host-side
-        schedule work beyond O(S) per round.
+    def _rounds(self, big: np.ndarray, lengths: np.ndarray) -> list[FleetRound]:
+        """Advance the fleet over one packed (S, T, ch) code batch.
 
-        Returns one ``FleetRound`` per bucketed device step (chunks longer
-        than the largest bucket split over several).  ``frames``/``scores``
-        stay on device — nothing here blocks on the step's results, so
-        steady-state serving can overlap pushes with downstream reads; use
-        ``collect_decisions`` (or ``push``) to materialize FrameDecisions.
+        The per-round device payload is staged through PER-TILE pinned uint8
+        code buffers (one contiguous buffer per (slot, bucket), allocated on
+        first use, reused round-robin): one vectorized slice write + ONE
+        device put per tile per round, nothing else — codes are 1 byte per
+        (cycle, channel), 128x less than the packed bound rows the spatial
+        stage used to expand on device.  The CPU backend's ``device_put``
+        zero-copy-aliases the staging buffer, so each buffer is rewritten
+        only AFTER the round that read it finished (``_stage_buf``; double
+        buffering keeps a pipeline depth of two before that wait can
+        stall).  ``lengths`` must already be padded to provisioned capacity
+        (phantom rows 0).
         """
-        if len(chunks) != self._n:
-            raise ValueError(
-                f"push needs one chunk per session ({self._n}), got {len(chunks)}"
-            )
-        big, real_lengths = self._ingest(chunks)
-        lengths = np.zeros((self._np,), np.int64)  # phantom rows stay empty
-        lengths[:self._n] = real_lengths
         rounds: list[FleetRound] = []
         max_bucket = self._buckets[-1]
         pos = 0
@@ -593,23 +711,32 @@ class StreamingFleet:
             t_pad = self._bucket_for(int(round_len.max()))
             self._shapes_seen.add(t_pad)
             width = min(t_pad, total - pos)
-            batch = np.zeros((self._np, t_pad, self._cfg.channels), np.uint8)
-            batch[:self._n, :width] = big[:, pos:pos + width]
             round_len32 = round_len.astype(np.int32)
             n_emit = (self._filled_h + round_len) // self._cfg.window
+            slot = self._stage_phase & 1
+            self._stage_phase += 1
             fos = []
             # per-tile steps dispatch asynchronously: tiles on different
             # devices overlap, and nothing here waits on the results
+            # (except a slot whose previous reader is still in flight)
             for k, (sl, d) in enumerate(
                     zip(self._tile_slices, self._tile_devs)):
+                stage = self._stage_buf(k, slot, t_pad)
+                hi = min(sl.stop, self._n)   # phantom rows: stale == masked
+                if hi > sl.start:
+                    stage[:hi - sl.start, :width] = big[sl.start:hi,
+                                                        pos:pos + width]
                 self._state_t[k], fo = self._step(
                     self._state_t[k],
                     self._tables_t[k],
                     self._param_owner_t[k],
                     self._thresholds_t[k],
-                    self._put_tile(batch[sl], ("batch", None, None), d),
+                    self._put_tile(stage, ("batch", None, None), d),
                     self._put_tile(round_len32[sl], ("batch",), d),
                 )
+                # fo depends on the staged codes: once it is ready the
+                # step has consumed the slot and it is safe to rewrite
+                self._stage_busy[k][(slot, t_pad)] = fo
                 fos.append(fo)
             # rounds expose REAL sessions only ((S,) arrays); phantom
             # capacity-padding rows never emit, so dropping them is lossless
@@ -620,6 +747,69 @@ class StreamingFleet:
             self._fidx_h += n_emit
             pos += max_bucket
         return rounds
+
+    def push_raw(self, chunks: Sequence) -> list[FleetRound]:
+        """Feed one (t_i, channels) uint8 chunk per session; zero host-side
+        schedule work beyond O(S) per round.
+
+        Returns one ``FleetRound`` per bucketed device step (chunks longer
+        than the largest bucket split over several).  ``frames``/``scores``
+        stay on device — nothing here blocks on the step's results, so
+        steady-state serving can overlap pushes with downstream reads; use
+        ``collect_decisions`` (or ``push``) to materialize FrameDecisions.
+        For pre-stacked equal-length streams prefer ``push_codes`` (skips
+        the ragged-list handling entirely).
+        """
+        if len(chunks) != self._n:
+            raise ValueError(
+                f"push needs one chunk per session ({self._n}), got {len(chunks)}"
+            )
+        arrs, real_lengths = self._validate(chunks)
+        lengths = np.zeros((self._np,), np.int64)  # phantom rows stay empty
+        lengths[:self._n] = real_lengths
+        if int(real_lengths.max(initial=0)) == 0:
+            return []
+        return self._rounds(self._pack(arrs, real_lengths), lengths)
+
+    def push_codes_raw(self, batch, lengths: Sequence[int] | None = None
+                       ) -> list[FleetRound]:
+        """Zero-scatter ingest fast path: feed one pre-stacked (S, t, ch)
+        uint8 code batch for the whole fleet.
+
+        The batch goes straight to the per-tile staging buffers — no
+        per-session list handling, no concatenate, no scatter; the host
+        work per round is one vectorized tile-slice write and one device
+        put per tile.  ``lengths`` optionally gives per-session valid
+        cycles (default: all ``t``); bit-exact with ``push_raw`` on the
+        equivalent chunk list.
+        """
+        batch = np.asarray(batch, np.uint8)
+        ch = self._cfg.channels
+        if batch.ndim != 3 or batch.shape[0] != self._n or batch.shape[2] != ch:
+            raise ValueError(
+                f"push_codes needs a ({self._n}, t, {ch}) batch, got "
+                f"{batch.shape}")
+        t = batch.shape[1]
+        lens = np.zeros((self._np,), np.int64)
+        if lengths is None:
+            lens[:self._n] = t
+        else:
+            ll = np.asarray(lengths, np.int64)
+            if ll.shape != (self._n,) or ll.min(initial=0) < 0 or \
+                    ll.max(initial=0) > t:
+                raise ValueError(
+                    f"lengths must be ({self._n},) ints in [0, {t}]")
+            lens[:self._n] = ll
+        if t == 0 or int(lens.max(initial=0)) == 0:
+            return []
+        return self._rounds(batch, lens)
+
+    def push_codes(self, batch, lengths: Sequence[int] | None = None
+                   ) -> list[list[FrameDecision]]:
+        """``push`` for a pre-stacked (S, t, ch) uint8 code batch: the
+        zero-scatter steady-stream ingest path.  Bit-exact with
+        ``push(list(batch))``."""
+        return self.collect_decisions(self.push_codes_raw(batch, lengths))
 
     def collect_decisions(
         self, rounds: Sequence[FleetRound]
@@ -659,6 +849,95 @@ class StreamingFleet:
         session, the decisions for every frame completed by this push.
         """
         return self.collect_decisions(self.push_raw(chunks))
+
+    # -- instrumentation ------------------------------------------------------
+
+    def stage_probes(self, batch) -> dict[str, tuple]:
+        """Per-stage sub-benchmarks of one steady push round, for the fleet
+        benchmark's breakdown rows (bench_fleet.py) — the stages live HERE so
+        the probe tracks the step implementation instead of reaching into
+        fleet internals from the benchmark.
+
+        ``batch`` is one (S, t, channels) uint8 code round (t <= max
+        bucket).  Returns ``{stage: (fn, scale)}``: ``fn()`` runs that stage
+        once on ONE session tile and blocks on the result; ``scale`` (the
+        tile count, 1 for the host-side ``ingest``) multiplies the time to
+        cover the whole fleet.  Each fn is pre-run once, so jit compilation
+        never pollutes the first timed call.  Stages overlap/fuse inside
+        the real jitted step, so their times need not sum to a push.
+        """
+        cfg = self._cfg
+        if self._backend != "jnp":
+            # the probes time the jnp reference stages; the pallas backend
+            # fuses gather+bundle+transpose+counters into one kernel, so
+            # per-stage shares measured here would describe a datapath the
+            # fleet never runs
+            raise ValueError(
+                "stage_probes breaks the step into the jnp reference "
+                f"stages; this fleet runs backend={self._backend!r} — "
+                "benchmark a backend='jnp' fleet")
+        batch = np.asarray(batch, np.uint8)
+        t = batch.shape[1]
+        if not 0 < t <= self._buckets[-1]:
+            raise ValueError(
+                f"stage_probes needs one round, 0 < t <= {self._buckets[-1]}")
+        sl, dev = self._tile_slices[0], self._tile_devs[0]
+        tile_s = sl.stop - sl.start
+        tables, owner = self._tables_t[0], self._param_owner_t[0]
+        thresholds = self._thresholds_t[0]
+        # SNAPSHOT the class rows: the live state leaf is donated by the
+        # next real push, which would delete the buffer under the probe
+        # (callers interleave probe timings with reference pushes)
+        class_rows = jnp.array(self._state_t[0].class_rows)
+        tile_batch = np.zeros((tile_s, t, cfg.channels), np.uint8)
+        tile_batch[:min(tile_s, self._n)] = batch[sl.start:
+                                                  min(sl.stop, self._n)]
+        chunk_d = self._put_tile(tile_batch, ("batch", None, None), dev)
+        filled = self._put_tile(np.zeros(tile_s, np.int32), ("batch",), dev)
+        lengths = self._put_tile(np.full(tile_s, t, np.int32),
+                                 ("batch",), dev)
+
+        # cfg rides in the closure (a static, like the step's partial) —
+        # operands stay explicit jit arguments so nothing constant-folds
+        f_spatial = jax.jit(
+            lambda t_, o, c: dispatch.owner_spatial_codes(t_, o, c, cfg))
+        words = jax.block_until_ready(f_spatial(tables, owner, chunk_d))
+        f_temporal = jax.jit(
+            lambda w, f, l: fleet_ops.fleet_counts(w, f, l, cfg))
+        seg = jax.block_until_ready(f_temporal(words, filled, lengths))
+
+        def _am(seg, thr, cls):
+            if cfg.variant == "dense":
+                frames = hv.majority_pack(seg[:, :-1], cfg.window, cfg.dim)
+            else:
+                frames = hv.threshold_pack(seg[:, :-1], thr[:, None, None])
+            return dispatch.owner_am_scores(frames, cls[:, None], cfg)
+        f_am = jax.jit(_am)
+        jax.block_until_ready(f_am(seg, thresholds, class_rows))
+
+        t_bucket = self._bucket_for(t)
+
+        def run_ingest():  # host side of one round: ring writes + puts
+            for k, (tsl, d) in enumerate(zip(self._tile_slices,
+                                             self._tile_devs)):
+                stage = self._stage_buf(k, 0, t_bucket)
+                hi = min(tsl.stop, self._n)
+                if hi > tsl.start:
+                    stage[:hi - tsl.start, :t] = batch[tsl.start:hi]
+                jax.block_until_ready(self._put_tile(
+                    stage, ("batch", None, None), d))
+        run_ingest()
+
+        n_tiles = self.n_tiles
+        return {
+            "ingest": (run_ingest, 1),
+            "spatial": (lambda: jax.block_until_ready(
+                f_spatial(tables, owner, chunk_d)), n_tiles),
+            "temporal": (lambda: jax.block_until_ready(
+                f_temporal(words, filled, lengths)), n_tiles),
+            "am": (lambda: jax.block_until_ready(
+                f_am(seg, thresholds, class_rows)), n_tiles),
+        }
 
     # -- online adaptation ----------------------------------------------------
 

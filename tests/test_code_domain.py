@@ -1,0 +1,241 @@
+"""Code-domain spatial datapath: owner_spatial_codes vs the reference
+owner_spatial_encode (all variants, mixed owners, odd geometries), the fused
+code-domain kernel, owner_encode_frames threading, and adaptive tile sizing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.pipeline import HDCConfig, HDCPipeline, VARIANTS
+from repro.serve import dispatch, fleet as fleet_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _bank(variant: str, *, n_patients: int = 2, dim=256, segments=8,
+          channels=8, window=32, **overrides):
+    cfg = HDCConfig(dim=dim, segments=segments, channels=channels,
+                    window=window, variant=variant, spatial_threshold=1,
+                    temporal_threshold=4, **overrides)
+    rng = np.random.default_rng(7)
+    codes = jnp.asarray(rng.integers(0, cfg.codes, (2, 4 * window, channels),
+                                     np.uint8))
+    labels = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
+    pipes = [HDCPipeline.init(jax.random.PRNGKey(i), cfg).train_one_shot(
+        codes, labels) for i in range(n_patients)]
+    tables, _ = dispatch.stack_bound_tables(pipes)
+    return cfg, tables
+
+
+# ---------------------------------------------------------------------------
+# owner_spatial_codes vs owner_spatial_encode: bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("thinning", [False, True])
+def test_spatial_codes_matches_reference(variant, thinning):
+    if variant == "dense" and thinning:
+        pytest.skip("thinning is a sparse knob")
+    cfg, tables = _bank(variant, spatial_thinning=thinning)
+    rng = np.random.default_rng(1)
+    s, t = 5, 48
+    owner = jnp.asarray(rng.integers(0, tables.shape[0], s), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, cfg.codes, (s, t, cfg.channels),
+                                     np.uint8))
+    got = np.asarray(dispatch.owner_spatial_codes(tables, owner, codes, cfg))
+    want = np.asarray(dispatch.owner_spatial_encode(tables, owner, codes, cfg))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dim,segments,channels", [
+    (192, 8, 6),    # seg_len=24: not a 32-multiple; non-power-of-two C
+    (224, 7, 5),    # seg_len=32 but 7 segments; odd C
+    (256, 16, 3),   # C < 4: tiny OR tree / count pad
+    (160, 5, 33),   # C just past a pad boundary
+])
+def test_spatial_codes_odd_geometries(dim, segments, channels):
+    """seg_len % 32 != 0 (positions_to_packed falls back to pack_bits) and
+    channel counts that are not powers of two must stay bit-exact on both
+    the OR-tree and the channel-padded count paths."""
+    for variant, thinning in (("sparse_compim", False),
+                              ("sparse_compim", True),
+                              ("sparse_naive", False)):
+        cfg, tables = _bank(variant, dim=dim, segments=segments,
+                            channels=channels, spatial_thinning=thinning)
+        rng = np.random.default_rng(dim + channels)
+        s, t = 4, 24
+        owner = jnp.asarray(rng.integers(0, tables.shape[0], s), jnp.int32)
+        codes = jnp.asarray(rng.integers(0, cfg.codes, (s, t, channels),
+                                         np.uint8))
+        got = np.asarray(dispatch.owner_spatial_codes(
+            tables, owner, codes, cfg))
+        want = np.asarray(dispatch.owner_spatial_encode(
+            tables, owner, codes, cfg))
+        np.testing.assert_array_equal(got, want, err_msg=f"{variant}")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(1, 4))
+@settings(max_examples=12, deadline=None)
+def test_spatial_codes_property(seed, t, n_patients):
+    """Random chunk lengths (including t < block and t not a block multiple),
+    random mixed owners, random codes: code-domain == reference."""
+    cfg, tables = _bank("sparse_compim", n_patients=n_patients)
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(1, 7))
+    owner = jnp.asarray(rng.integers(0, n_patients, s), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, cfg.codes, (s, t, cfg.channels),
+                                     np.uint8))
+    got = np.asarray(dispatch.owner_spatial_codes(tables, owner, codes, cfg))
+    want = np.asarray(dispatch.owner_spatial_encode(tables, owner, codes, cfg))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_spatial_codes_property_thinned(seed):
+    rng = np.random.default_rng(seed)
+    thr = int(rng.integers(1, 4))
+    cfg, tables = _bank("sparse_naive", channels=6, spatial_threshold=thr)
+    s, t = 3, int(rng.integers(1, 40))
+    owner = jnp.asarray(rng.integers(0, tables.shape[0], s), jnp.int32)
+    codes = jnp.asarray(rng.integers(0, cfg.codes, (s, t, 6), np.uint8))
+    got = np.asarray(dispatch.owner_spatial_codes(tables, owner, codes, cfg))
+    want = np.asarray(dispatch.owner_spatial_encode(tables, owner, codes, cfg))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_spatial_codes_empty_chunk():
+    cfg, tables = _bank("sparse_compim")
+    owner = jnp.zeros((3,), jnp.int32)
+    codes = jnp.zeros((3, 0, cfg.channels), jnp.uint8)
+    out = dispatch.owner_spatial_codes(tables, owner, codes, cfg)
+    assert out.shape == (3, 0, cfg.words)
+
+
+def test_spatial_codes_out_of_range_codes_clamp_like_reference():
+    """Codes >= 2**lbp_bits (stale staging bytes, hostile input) must not
+    crash and must clamp exactly like the reference's advanced indexing."""
+    cfg, tables = _bank("sparse_compim")
+    rng = np.random.default_rng(2)
+    owner = jnp.asarray([0, 1], jnp.int32)
+    codes = jnp.asarray(rng.integers(0, 256, (2, 16, cfg.channels), np.uint8))
+    got = np.asarray(dispatch.owner_spatial_codes(tables, owner, codes, cfg))
+    want = np.asarray(dispatch.owner_spatial_encode(tables, owner, codes, cfg))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# owner_encode_frames rides the code-domain path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_owner_encode_frames_matches_pipeline(variant):
+    cfg, tables = _bank(variant)
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(0, cfg.codes, (2, 2 * cfg.window + 5,
+                                                    cfg.channels), np.uint8))
+    pipes = [HDCPipeline.init(jax.random.PRNGKey(i), cfg) for i in range(2)]
+    tables, _ = dispatch.stack_bound_tables(pipes)
+    owner = jnp.asarray([1, 0], jnp.int32)
+    thr = jnp.full((2,), cfg.temporal_threshold, jnp.int32)
+    got = np.asarray(dispatch.owner_encode_frames(tables, owner, thr, codes,
+                                                  cfg))
+    for i, prow in enumerate([1, 0]):
+        want = np.asarray(pipes[prow].encode_frames(codes[i][None]))[0]
+        np.testing.assert_array_equal(got[i], want)
+
+
+# ---------------------------------------------------------------------------
+# adaptive tile sizing
+# ---------------------------------------------------------------------------
+
+class _FakeDevice:
+    def __init__(self, stats):
+        self._stats = stats
+
+    def memory_stats(self):
+        return self._stats
+
+
+def test_derive_tile_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_FLEET_TILE", "128")
+    assert fleet_mod.derive_tile(HDCConfig()) == 128
+    monkeypatch.setenv("REPRO_FLEET_TILE", "-1")
+    with pytest.raises(ValueError, match="REPRO_FLEET_TILE"):
+        fleet_mod.derive_tile(HDCConfig())
+
+
+def test_derive_tile_cpu_fallback(monkeypatch):
+    monkeypatch.delenv("REPRO_FLEET_TILE", raising=False)
+    # CPU devices report no memory geometry -> cache-tuned default
+    assert fleet_mod.derive_tile(
+        HDCConfig(), device=_FakeDevice(None)) == fleet_mod.DEFAULT_TILE
+    assert fleet_mod.derive_tile(
+        HDCConfig(), device=_FakeDevice({})) == fleet_mod.DEFAULT_TILE
+
+
+def test_derive_tile_memory_scaled(monkeypatch):
+    monkeypatch.delenv("REPRO_FLEET_TILE", raising=False)
+    cfg = HDCConfig()
+    # a 16 GiB accelerator: large power-of-two tile, clamped to 4096
+    big = fleet_mod.derive_tile(
+        cfg, device=_FakeDevice({"bytes_limit": 16 << 30}))
+    assert big == 4096
+    # a tiny device floors at 64 and stays a power of two
+    small = fleet_mod.derive_tile(
+        cfg, device=_FakeDevice({"bytes_limit": 1 << 20}))
+    assert small == 64
+    mid = fleet_mod.derive_tile(
+        cfg, device=_FakeDevice({"bytes_limit": 256 << 20}))
+    assert 64 <= mid <= 4096 and mid & (mid - 1) == 0
+    # more memory never shrinks the tile
+    assert fleet_mod.derive_tile(
+        cfg, device=_FakeDevice({"bytes_limit": 512 << 20})) >= mid
+
+
+def test_derived_tile_capped_by_fleet_size(monkeypatch):
+    """A memory-derived 4096 tile must not make a small fleet provision
+    thousands of phantom rows: the derived tile caps at the fleet size
+    rounded up to a power of two (explicit tile=/env stay uncapped)."""
+    cfg = HDCConfig(dim=256, segments=8, channels=8, window=32,
+                    temporal_threshold=4)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 64, (2, 128, 8), np.uint8))
+    labels = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
+    pipe = HDCPipeline.init(jax.random.PRNGKey(0), cfg).train_one_shot(
+        codes, labels)
+    monkeypatch.delenv("REPRO_FLEET_TILE", raising=False)
+    monkeypatch.setattr(fleet_mod, "derive_tile",
+                        lambda *a, **k: 4096)
+    f = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 100, buckets=(32,))
+    provisioned = int(np.asarray(f.state.counts).shape[0])
+    assert provisioned == 128  # next pow2 >= 100, not 4096
+    # explicit constructor tile is the operator's choice: uncapped (200
+    # sessions >= tile // 4, so capacity pads to the whole 512 tile)
+    g = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 200, buckets=(32,),
+                                 tile=512)
+    assert int(np.asarray(g.state.counts).shape[0]) == 512
+
+
+def test_fleet_tile_constructor_and_env(monkeypatch):
+    cfg = HDCConfig(dim=256, segments=8, channels=8, window=32,
+                    temporal_threshold=4)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 64, (2, 128, 8), np.uint8))
+    labels = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
+    pipe = HDCPipeline.init(jax.random.PRNGKey(0), cfg).train_one_shot(
+        codes, labels)
+    monkeypatch.setenv("REPRO_FLEET_TILE", "4")
+    f = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 9, buckets=(32,))
+    assert f.n_tiles == 3  # 9 sessions pad to 12 = 3 tiles of env tile 4
+    monkeypatch.delenv("REPRO_FLEET_TILE")
+    g = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 9, buckets=(32,),
+                                 tile=4)
+    assert g.n_tiles == 3
+    chunk = rng.integers(0, 64, (32, 8), np.uint8)
+    for a, b in zip(f.push([chunk] * 9), g.push([chunk] * 9)):
+        assert len(a) == len(b) == 1
+        np.testing.assert_array_equal(a[0].frame_hv, b[0].frame_hv)

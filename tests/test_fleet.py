@@ -192,6 +192,105 @@ def test_compile_count_bucket_fallback(monkeypatch):
     assert len(out[0]) >= 1
 
 
+def test_push_codes_matches_push():
+    """The zero-scatter stacked-ingest path (per-tile staging rings, one
+    device put per tile per round) must be bit-exact with the ragged-list
+    path — including reused staging buffers across pushes with shrinking
+    lengths (stale ring bytes must never leak into decisions)."""
+    pipes = {"a": _trained("sparse_compim", seed=0, temporal_threshold=4),
+             "b": _trained("sparse_compim", seed=1, temporal_threshold=6)}
+    owners = ["a", "b", "a"]
+    fleet_list = StreamingFleet(pipes, owners, buckets=(8, 32))
+    fleet_codes = StreamingFleet(pipes, owners, buckets=(8, 32))
+    rng = np.random.default_rng(21)
+    # equal lengths first (fills the staging rings), then shorter and
+    # ragged-length pushes that leave stale bytes behind
+    for t, ragged in ((40, False), (32, False), (5, False), (17, True),
+                      (3, True), (0, False), (9, False)):
+        if ragged:
+            lens = rng.integers(0, t + 1, len(owners))
+        else:
+            lens = np.full(len(owners), t)
+        chunks = [_chunk(rng, int(L)) for L in lens]
+        via_list = fleet_list.push(chunks)
+        batch = np.zeros((len(owners), t, CHANNELS), np.uint8)
+        for i, c in enumerate(chunks):
+            batch[i, :len(c)] = c
+        via_codes = fleet_codes.push_codes(batch, lengths=lens)
+        for da, db in zip(via_list, via_codes):
+            _assert_decisions_equal(da, db)
+    np.testing.assert_array_equal(fleet_list.fill_levels,
+                                  fleet_codes.fill_levels)
+
+
+def test_staging_ring_double_buffer_discipline():
+    """The staging rings are zero-copy-aliased by device_put on CPU, so a
+    slot may be rewritten only after the round that read it completed:
+    consecutive rounds must alternate slots and record a completion marker
+    per slot, and results must stay bit-exact across slot reuse."""
+    pipe = _trained("sparse_compim", seed=3)
+    fleet = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(WINDOW,))
+    sessions = [SeizureSession(pipe) for _ in range(2)]
+    rng = np.random.default_rng(9)
+    # 4 full-bucket rounds -> each slot reused twice
+    for i in range(4):
+        chunks = [_chunk(rng, WINDOW), _chunk(rng, WINDOW)]
+        out = fleet.push(chunks)
+        for j, s in enumerate(sessions):
+            _assert_decisions_equal(out[j], s.push(chunks[j]))
+    assert fleet._stage_phase == 4
+    for per_tile in fleet._stage_busy:
+        # both (slot, bucket) buffers carry a completion marker
+        assert {(0, WINDOW), (1, WINDOW)} <= set(per_tile)
+
+
+def test_stage_probes_stages_and_backend_guard():
+    """stage_probes exposes the four stage callables for a jnp fleet (the
+    bench + CI spatial-share gate depend on them) and refuses a pallas
+    fleet, whose fused kernel has no separable stages to time."""
+    pipe = _trained("sparse_compim", seed=3)
+    fleet = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(WINDOW,))
+    rng = np.random.default_rng(2)
+    batch = np.stack([_chunk(rng, WINDOW)] * 2)
+    probes = fleet.stage_probes(batch)
+    assert set(probes) == {"ingest", "spatial", "temporal", "am"}
+    for fn, scale in probes.values():
+        assert scale >= 1
+        fn()  # runs and blocks without error
+    pallas = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(WINDOW,),
+                            backend="pallas")
+    with pytest.raises(ValueError, match="backend='jnp'"):
+        pallas.stage_probes(batch)
+
+
+def test_push_codes_validation():
+    pipe = _trained("sparse_compim", seed=3)
+    fleet = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(8,))
+    with pytest.raises(ValueError, match="push_codes needs"):
+        fleet.push_codes(np.zeros((3, 8, CHANNELS), np.uint8))
+    with pytest.raises(ValueError, match="lengths must be"):
+        fleet.push_codes(np.zeros((2, 8, CHANNELS), np.uint8),
+                         lengths=[9, 0])
+    assert fleet.push_codes(np.zeros((2, 0, CHANNELS), np.uint8)) == [[], []]
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fleet_pallas_backend_matches_jnp(variant):
+    """backend="pallas" (fused code-domain VMEM kernel, interpret mode on
+    CPU) must reproduce the jnp bit-plane path decision-for-decision."""
+    pipes = {"a": _trained(variant, seed=0, temporal_threshold=4),
+             "b": _trained(variant, seed=1, temporal_threshold=6)}
+    owners = ["a", "b", "b"]
+    fj = StreamingFleet(pipes, owners, buckets=(8, 32), backend="jnp")
+    fp = StreamingFleet(pipes, owners, buckets=(8, 32), backend="pallas")
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        chunks = [_chunk(rng, int(t))
+                  for t in rng.integers(0, 40, len(owners))]
+        for a, b in zip(fj.push(chunks), fp.push(chunks)):
+            _assert_decisions_equal(a, b)
+
+
 def test_push_raw_matches_push():
     """push_raw + collect_decisions is push; raw rounds expose the schedule
     (n_emit / frame_base) and per-tile device outputs without syncing."""

@@ -234,17 +234,22 @@ def test_fleet_counts_ref_matches_einsum_oracle(t_pad, window):
 @pytest.mark.parametrize("mode,threshold", [("or", 0), ("thin", 2),
                                             ("majority", 0)])
 def test_fleet_kernel_vs_ref(mode, threshold):
-    """The fused kernel (spatial bundle + bit transpose + masked popcount in
-    VMEM) must match the jnp bit-plane path for every spatial-bundle mode."""
+    """The fused code-domain kernel (VMEM table gather + spatial bundle +
+    bit transpose + masked popcount) must match the jnp bit-plane path for
+    every spatial-bundle mode, with per-session owner-gathered tables."""
     from repro.kernels.hdc_fleet.kernel import fleet_counts_pallas
     from repro.kernels.hdc_fleet.ref import emission_masks, fleet_counts_ref
     rng = np.random.default_rng(3)
-    s, t, c, w, window = 5, 64, 6, 2, 32
+    s, t, c, w, window, p, k = 5, 64, 6, 2, 32, 3, 8
     dim = w * 32
-    bound = rng.integers(0, 2**32, (s, t, c, w), dtype=np.uint32)
+    tables = rng.integers(0, 2**32, (p, c, k, w), dtype=np.uint32)
+    owner = rng.integers(0, p, s).astype(np.int32)
+    codes = rng.integers(0, k, (s, t, c), dtype=np.uint8)
     filled = jnp.asarray(rng.integers(0, window, s), jnp.int32)
     lengths = jnp.asarray(rng.integers(0, t + 1, s), jnp.int32)
-    # spatial bundle in numpy -> per-cycle words for the ref path
+    # gather + spatial bundle in numpy -> per-cycle words for the ref path
+    bound = tables[owner[:, None, None],
+                   np.arange(c)[None, None, :], codes]     # (s, t, c, w)
     bits = ((bound[..., None] >> np.arange(32, dtype=np.uint32)) & 1)
     bits = bits.reshape(s, t, c, dim)
     if mode == "or":
@@ -258,9 +263,35 @@ def test_fleet_kernel_vs_ref(mode, threshold):
         jnp.asarray(words), filled, lengths, window=window, dim=dim))
     tm = emission_masks(filled, lengths, t_pad=t, window=window)
     got = np.asarray(fleet_counts_pallas(
-        jnp.asarray(bound), tm, mode=mode, dim=dim, threshold=threshold,
-        interpret=True))
+        jnp.asarray(tables), jnp.asarray(owner), jnp.asarray(codes), tm,
+        mode=mode, dim=dim, threshold=threshold, interpret=True))
     np.testing.assert_array_equal(got, ref)
+
+
+def test_fleet_fused_ops_matches_code_domain_jnp():
+    """ops.fleet_counts_fused (codes in, counts out, incl. the 32-padding of
+    the cycle axis) must match owner_spatial_codes + fleet_counts for a real
+    trained bank and a ragged (non-32-multiple) chunk."""
+    from repro.kernels.hdc_fleet import ops as fleet_ops
+    from repro.serve import dispatch
+
+    cfg = classifier.HDCConfig(dim=256, segments=8, channels=8, window=32,
+                               temporal_threshold=4)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 64, (2, 4 * 32, 8), np.uint8))
+    labels = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
+    pipes = [HDCPipeline.init(jax.random.PRNGKey(i), cfg).train_one_shot(
+        codes, labels) for i in range(2)]
+    tables, _ = dispatch.stack_bound_tables(pipes)
+    owner = jnp.asarray([0, 1, 1, 0, 1], jnp.int32)
+    chunk = jnp.asarray(rng.integers(0, 64, (5, 43, 8), np.uint8))
+    filled = jnp.asarray(rng.integers(0, 32, 5), jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, 44, 5), jnp.int32)
+    got = np.asarray(fleet_ops.fleet_counts_fused(
+        tables, owner, chunk, filled, lengths, cfg))
+    words = dispatch.owner_spatial_codes(tables, owner, chunk, cfg)
+    want = np.asarray(fleet_ops.fleet_counts(words, filled, lengths, cfg))
+    np.testing.assert_array_equal(got, want)
 
 
 @given(st.integers(0, 2**63))
