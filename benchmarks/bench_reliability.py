@@ -1,0 +1,143 @@
+"""Bit-error degradation curves + ECC tradeoff at fleet scale.
+
+Two sections, both built on ``repro.reliability.sweep`` (one StreamingFleet
+per grid cell, BER walked via the traced operand — zero recompiles per
+curve):
+
+* the MAIN GRID — all four hwmodel variants x density x BER with raw
+  (unprotected) memories and all three fault targets live (codebook bank,
+  AM rows, temporal counters): the paper-architecture robustness curves.
+* the ECC section — sparse_opt with AM-ONLY faults under none / parity /
+  SECDED protection: what word-level ECC buys back (accuracy, frame
+  disagreement) and what it costs (decode energy per AM read, priced
+  through the ``core.hwmodel`` gate constants).
+
+Every BER = 0 point is verified BIT-EXACT (full per-frame score streams)
+against a fault-free fleet; a mismatch raises, so the module ERRORs and CI
+fails rather than shipping curves anchored to a divergent datapath.
+
+Rows carry the metrics twice: human-greppable in ``derived`` and
+machine-readable under the ``point`` key of ``BENCH_reliability.json``.
+
+BENCH_TINY=1 (CI smoke) shrinks to 2 patients / short records / a 2-point
+BER grid.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import tiny
+from repro.core.classifier import HDCConfig
+from repro.reliability import sweep
+
+VARIANTS = ("dense", "sparse_naive", "sparse_compim", "sparse_opt")
+
+
+def _config() -> dict:
+    base = HDCConfig(dim=256, segments=8, window=128)
+    if tiny():
+        return dict(
+            base_cfg=base, n_patients=2, n_test=1,
+            record_kw=dict(pre_s=10.0, ictal_s=14.0, post_s=6.0),
+            bers=(0.0, 1e-2), densities=(0.25,), ecc_bers=(0.0, 1e-2),
+        )
+    return dict(
+        base_cfg=base, n_patients=4, n_test=2,
+        record_kw=dict(pre_s=16.0, ictal_s=20.0, post_s=8.0),
+        bers=(0.0, 1e-3, 3e-3, 1e-2, 3e-2),
+        densities=(0.15, 0.25, 0.35),
+        ecc_bers=(0.0, 1e-3, 3e-3, 1e-2),
+    )
+
+
+def _row(point: dict, section: str = "") -> dict:
+    name = (f"reliability.{section}{point['variant']}.d{point['density']:g}"
+            f".{point['scheme']}.ber{point['ber']:g}")
+    derived = (f"acc={point['detection_accuracy']:.2f}"
+               f";delay_s={point['mean_delay_s']:.2f}"
+               f";fa={point['false_alarm_rate']:.2f}"
+               f";disagree={point['frame_disagreement']:.3f}"
+               f";ecc_corr={point['ecc_corrected']}"
+               f";ecc_uncorr={point['ecc_uncorrectable']}"
+               f";ecc_ovh={point['ecc_read_overhead']:.2f}")
+    if "zero_ber_bitexact" in point:
+        derived += f";bitexact={point['zero_ber_bitexact']}"
+    return {"name": name, "us_per_call": "", "derived": derived,
+            "point": point}
+
+
+def _check_bitexact(points: list[dict]) -> None:
+    bad = [p for p in points
+           if p.get("ber") == 0.0 and not p.get("zero_ber_bitexact")]
+    if bad:
+        names = [f"{p['variant']}/d{p['density']:g}/{p['scheme']}"
+                 for p in bad]
+        raise AssertionError(
+            "BER=0 fleet not bit-exact with the fault-free step at: "
+            + ", ".join(names))
+
+
+def run() -> list[dict]:
+    c = _config()
+    rows = []
+
+    # main grid: raw memories, all targets faulted, all four variants
+    main = sweep.run_sweep(
+        variants=VARIANTS, densities=c["densities"], bers=c["bers"],
+        schemes=("none",), targets=("tables", "am", "counts"),
+        base_cfg=c["base_cfg"], n_patients=c["n_patients"],
+        n_test=c["n_test"], record_kw=c["record_kw"], seed=0)
+    _check_bitexact(main)
+    rows.extend(_row(p) for p in main)
+
+    # ECC tradeoff: AM-only faults on the paper-optimized design point
+    protected = sweep.run_sweep(
+        variants=("sparse_opt",), densities=(0.25,), bers=c["ecc_bers"],
+        schemes=("none", "parity", "secded"), targets=("am",),
+        base_cfg=c["base_cfg"], n_patients=c["n_patients"],
+        n_test=c["n_test"], record_kw=c["record_kw"], seed=1)
+    _check_bitexact(protected)
+    for p in protected:
+        p["section"] = "ecc"
+    rows.extend(_row(p, section="ecc.") for p in protected)
+
+    # summary: worst BER's accuracy floor per variant + SECDED recovery
+    by_var = {
+        v: [p for p in main if p["variant"] == v and p["ber"] == max(c["bers"])]
+        for v in VARIANTS}
+    floor = ";".join(
+        f"{v}={min(p['detection_accuracy'] for p in by_var[v]):.2f}"
+        for v in VARIANTS)
+    top = max(c["ecc_bers"])
+    raw = next(p for p in protected
+               if p["scheme"] == "none" and p["ber"] == top)
+    sec = next(p for p in protected
+               if p["scheme"] == "secded" and p["ber"] == top)
+    rows.append({
+        "name": "reliability.summary", "us_per_call": "",
+        "derived": (f"acc_floor@ber{max(c['bers']):g}[{floor}]"
+                    f";secded@ber{top:g}:disagree="
+                    f"{raw['frame_disagreement']:.3f}"
+                    f"->{sec['frame_disagreement']:.3f}"
+                    f";ecc_read_ovh={sec['ecc_read_overhead']:.2f}"),
+        "point": {
+            "ecc_ber": top,
+            "raw_frame_disagreement": raw["frame_disagreement"],
+            "secded_frame_disagreement": sec["frame_disagreement"],
+            "secded_recovers": bool(sec["frame_disagreement"]
+                                    <= raw["frame_disagreement"]),
+            "secded_read_overhead": sec["ecc_read_overhead"],
+            "secded_read_energy_nj": sec["ecc_read_energy_nj"],
+            "accuracy_floor": {
+                v: float(min(p["detection_accuracy"] for p in by_var[v]))
+                for v in VARIANTS},
+        },
+    })
+    assert np.isfinite(sec["ecc_read_energy_nj"])
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

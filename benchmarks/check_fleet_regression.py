@@ -8,6 +8,12 @@ machine, so they transfer across runner hardware far better than absolute
 times; the committed CI reference (benchmarks/BENCH_fleet_tiny.json) uses
 the BENCH_TINY geometry so the gate stays stable on small shared runners.
 
+Row families the REFERENCE does not know (new benchmarks land ahead of
+their reference refresh) are reported as warnings and skipped — the gate
+fails only on KNOWN rows that regressed, went missing, or stopped parsing.
+The committed reference itself is held to strict parsing: it is a curated
+artifact, and a malformed row there is a repo bug, not a perf signal.
+
 The gate also reads the fresh run's per-stage breakdown
 (``fleet.*.stage_*`` rows, another same-process ratio): the code-domain
 datapath's whole point is that the spatial gather+bundle stops dominating
@@ -31,38 +37,52 @@ _SPEEDUP = re.compile(r"^([0-9.]+)x ")
 _SHARE = re.compile(r"^share=([0-9.]+)% ")
 
 
-def speedups(path: str) -> dict[str, float]:
+def speedups(path: str, *, strict: bool = True
+             ) -> tuple[dict[str, float], dict[str, dict]]:
+    """``fleet.*.speedup`` rows -> ``({name: speedup}, {name: bad_row})``.
+
+    ``strict`` (the committed reference) raises on an unparseable row;
+    the fresh run parses leniently and returns bad rows separately —
+    whether one fails the gate depends on whether the reference knows it.
+    """
     with open(path) as f:
         payload = json.load(f)
     if payload.get("status") != "ok":
         raise SystemExit(f"{path}: benchmark status is not ok: "
                          f"{payload.get('error')}")
     out: dict[str, float] = {}
+    bad: dict[str, dict] = {}
     for row in payload.get("rows", []):
         name = row.get("name", "")
         if not (name.startswith("fleet.") and name.endswith(".speedup")):
             continue
         m = _SPEEDUP.match(row.get("derived", ""))
         if not m:
-            raise SystemExit(f"{path}: unparseable speedup row {row!r}")
+            if strict:
+                raise SystemExit(f"{path}: unparseable speedup row {row!r}")
+            bad[name] = row
+            continue
         out[name] = float(m.group(1))
-    return out
+    return out, bad
 
 
-def stage_shares(path: str) -> dict[str, float]:
-    """``fleet.*.stage_*`` rows -> fractional share of steady-state push."""
+def stage_shares(path: str) -> tuple[dict[str, float], dict[str, dict]]:
+    """``fleet.*.stage_*`` rows -> fractional share of steady-state push
+    (plus the rows whose derived string did not parse)."""
     with open(path) as f:
         payload = json.load(f)
     out: dict[str, float] = {}
+    bad: dict[str, dict] = {}
     for row in payload.get("rows", []):
         name = row.get("name", "")
         if not (name.startswith("fleet.") and ".stage_" in name):
             continue
         m = _SHARE.match(row.get("derived", ""))
         if not m:
-            raise SystemExit(f"{path}: unparseable stage row {row!r}")
+            bad[name] = row
+            continue
         out[name] = float(m.group(1)) / 100.0
-    return out
+    return out, bad
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -76,17 +96,30 @@ def main(argv: list[str] | None = None) -> int:
                          "steady-state push exceeds this (default 0.5)")
     args = ap.parse_args(argv)
 
-    fresh = speedups(args.fresh)
-    ref = speedups(args.reference)
-    common = sorted(set(fresh) & set(ref))
-    if not common:
-        print(f"no overlapping fleet.*.speedup rows between {args.fresh} "
-              f"({sorted(fresh)}) and {args.reference} ({sorted(ref)})",
+    fresh, fresh_bad = speedups(args.fresh, strict=False)
+    ref, _ = speedups(args.reference)
+    if not ref:
+        print(f"{args.reference}: no fleet.*.speedup rows — the committed "
+              "reference is empty, the gate would pass vacuously",
               file=sys.stderr)
         return 1
+    for name in sorted((set(fresh) | set(fresh_bad)) - set(ref)):
+        print(f"warning: {name}: not in reference {args.reference}; "
+              "skipping (refresh the committed reference to gate it)",
+              file=sys.stderr)
 
     failed = []
-    for name in common:
+    for name in sorted(ref):
+        if name in fresh_bad:
+            print(f"{name}: unparseable fresh row "
+                  f"{fresh_bad[name]!r} -> FAILED")
+            failed.append(name)
+            continue
+        if name not in fresh:
+            print(f"{name}: in reference but missing from fresh run "
+                  "-> FAILED")
+            failed.append(name)
+            continue
         floor = ref[name] * (1.0 - args.tolerance)
         status = "OK" if fresh[name] >= floor else "REGRESSED"
         print(f"{name}: fresh {fresh[name]:.2f}x vs reference "
@@ -94,7 +127,10 @@ def main(argv: list[str] | None = None) -> int:
         if fresh[name] < floor:
             failed.append(name)
 
-    shares = stage_shares(args.fresh)
+    shares, shares_bad = stage_shares(args.fresh)
+    for name in sorted(shares_bad):
+        print(f"warning: {name}: unparseable stage row "
+              f"{shares_bad[name]!r}; skipping", file=sys.stderr)
     spatial = {n: v for n, v in shares.items() if n.endswith("stage_spatial")}
     if not spatial:
         print("no fleet.*.stage_spatial row in fresh run "

@@ -128,6 +128,35 @@ def xor(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.bitwise_xor(a, b)
 
 
+def word_parity(words: jax.Array) -> jax.Array:
+    """Per-word 1-bit parity (popcount mod 2) of packed uint32 words.
+
+    The primitive of the reliability subsystem's ECC word codecs
+    (repro.reliability.ecc): a parity-check bit over a masked word is
+    ``word_parity(word & mask)``."""
+    return lax_popcount(words).astype(jnp.uint32) & jnp.uint32(1)
+
+
+def random_flip_mask(key: jax.Array, shape: tuple[int, ...], p,
+                     bits: int = WORD) -> jax.Array:
+    """Bernoulli(p) bit-flip masks in the packed domain: (*shape,) uint32
+    words whose low ``bits`` bits are each independently set with
+    probability ``p`` (high bits zero).
+
+    ``p`` may be a traced scalar, so one jitted program serves a whole
+    BER sweep.  XORing the mask into packed HV words / counter values is
+    the reliability subsystem's fault injection (repro.reliability.faults);
+    ``p == 0`` yields an all-zero mask, keeping the faulted datapath
+    bit-exact with the fault-free one.
+    """
+    if not 1 <= bits <= WORD:
+        raise ValueError(f"bits={bits} must be in [1, {WORD}]")
+    u = jax.random.uniform(key, (*shape, bits), jnp.float32)
+    flips = (u < p).astype(jnp.uint32)
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    return jnp.sum(flips << shifts, axis=-1, dtype=jnp.uint32)
+
+
 def or_(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.bitwise_or(a, b)
 

@@ -70,6 +70,30 @@ class HWConstants:
 C16 = HWConstants()
 
 
+def gate_energy_fj(ops: dict[str, float], c: HWConstants = C16) -> float:
+    """Energy (fJ) of a bag of gate evaluations, by gate kind.
+
+    The op-count hook the reliability subsystem's ECC cost model maps
+    through (reliability.ecc.read_energy_nj): callers count XOR/AND/adder/
+    FF/compare evaluations and this prices them with the same 16nm
+    constants the variant reports use, so ECC overheads land on the same
+    energy axis.  An XOR2 is priced as two gate-equivalents (its standard
+    ~2x gate cost over NAND/NOR at iso-drive)."""
+    per_op = {
+        "xor2": 2.0 * c.e_gate_op,
+        "and2": c.e_gate_op,
+        "or2": c.e_gate_op,
+        "fa": c.e_fa_op,
+        "ff": c.e_ff_toggle,
+        "cmp_bit": c.e_cmp_bit,
+    }
+    unknown = set(ops) - set(per_op)
+    if unknown:
+        raise ValueError(f"unknown gate kinds {sorted(unknown)}; "
+                         f"pick from {sorted(per_op)}")
+    return float(sum(n * per_op[k] for k, n in ops.items()))
+
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------

@@ -45,7 +45,8 @@ def fleet_counts(words: jax.Array, filled: jax.Array, lengths: jax.Array,
 
 def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
                        codes: jax.Array, filled: jax.Array,
-                       lengths: jax.Array, cfg: HDCConfig) -> jax.Array:
+                       lengths: jax.Array, cfg: HDCConfig,
+                       tables_xor: jax.Array | None = None) -> jax.Array:
     """(S, T, C) raw uint8 codes -> (S, K+1, D) counts, one fused pass.
 
     ``tables`` is the stacked (P, C, K, W) pre-bound codebook bank and
@@ -53,8 +54,18 @@ def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
     table BlockSpec).  Pads the cycle axis to a 32 multiple (padded cycles
     gather row 0 but are masked off by the emission schedule) and runs the
     fused kernel; interpret mode off-TPU.
+
+    ``tables_xor`` (same shape as ``tables``) is the reliability
+    subsystem's fault-injection hook (repro.reliability.faults): an
+    effective bit-flip mask XORed into the codebook bank HERE, adjacent to
+    the kernel launch, so the VMEM-resident table BlockSpec prefetches the
+    FAULTED bank — the corruption rides the same operand path as the clean
+    bank and the kernel body is untouched.  ``None`` (the default) skips
+    the XOR entirely.
     """
     s, t, c = codes.shape
+    if tables_xor is not None:
+        tables = tables ^ tables_xor
     t32 = -(-t // 32) * 32
     if t32 != t:
         codes = jnp.pad(codes, ((0, 0), (0, t32 - t), (0, 0)))

@@ -1,0 +1,30 @@
+"""Reliability subsystem: packed-domain fault injection, ECC word codecs
+and fleet-scale degradation sweeps.
+
+The implant case for sparse HDC rests on ultra-low-energy SRAM holding the
+CompIM tables and the associative memory — exactly the memories that flip
+bits at low voltage — and HDC's headline robustness claim is graceful
+degradation under such faults (Karunaratne et al., arXiv:2106.11654).  This
+package asks the implant-critical question the accuracy/energy benchmarks
+cannot: how much detection accuracy / delay does each design variant lose
+per unit bit-error rate, and when is ECC worth its read energy?
+
+* ``faults``  — BER-parameterized fault injectors operating entirely in the
+  packed uint32 domain (XOR with Bernoulli masks sampled from per-component
+  PRNG keys INSIDE the jitted fleet step), targeting the CompIM/IM codebook
+  bank, the packed AM class rows and the in-flight temporal accumulator
+  counters independently, in transient or stuck-at mode.
+* ``ecc``     — Hamming SECDED (and parity-detect) per packed 32-bit word,
+  with corrected / detected / uncorrectable accounting and an op-count hook
+  that maps through ``core.hwmodel`` constants to energy-per-read.
+* ``sweep``   — fleet-scale degradation sweeps: synthetic-patient streams
+  replayed through ``StreamingFleet`` across a BER grid x variant x density,
+  reporting episode-level detection metrics (Pale et al., arXiv:2105.00934)
+  plus the ECC energy overhead per point.
+"""
+
+from repro.reliability.ecc import SCHEMES, decode, encode, n_check_bits
+from repro.reliability.faults import FaultConfig, FaultPlan
+
+__all__ = ["FaultConfig", "FaultPlan", "SCHEMES", "decode", "encode",
+           "n_check_bits"]

@@ -1,0 +1,177 @@
+"""ECC word codecs for packed-domain associative memories.
+
+The AM stores one packed uint32 word per 32 HV bits.  This module protects
+each stored word independently with one of three schemes:
+
+* ``none``   — raw storage, no check bits (the paper's design).
+* ``parity`` — one even-parity bit per word: detects any odd number of
+  flips, corrects nothing.
+* ``secded`` — Hamming SECDED over the 32-bit word: a (39, 32) code with 6
+  Hamming check bits plus one overall parity bit.  Any single flipped bit
+  of the 39-bit codeword is corrected; any double flip is detected as
+  uncorrectable.  (Triple flips may miscorrect, as in real SECDED SRAM.)
+
+All codecs are pure jnp, vectorized over arbitrary leading axes and
+jit-compatible, so the fleet step decodes every session's AM rows in one
+shot.  ``decode`` classifies each word as clean (0) / corrected (1) /
+uncorrectable (2) — ``serve.fleet`` accumulates these into the per-session
+corrected/detected/uncorrectable counters the degradation sweeps report.
+
+The cost side: ``ops_per_word`` counts the XOR/AND gate evaluations of one
+word's read-path decode (syndrome trees, compare, correction), and
+``read_energy_nj`` maps one full AM read (``n_classes * cfg.words`` words)
+through the ``core.hwmodel`` 16nm gate-energy constants — so raw and
+ECC-protected AMs land on a single energy axis in the sweeps.
+
+Codeword layout (SECDED): the standard Hamming positions 1..38 hold the 6
+check bits at the power-of-two positions and the 32 data bits at the rest;
+a flipped data bit at position p yields syndrome p, a flipped check bit i
+yields syndrome 2**i.  The check word packs [c0..c5, overall] into the low
+7 bits of a uint32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hv, hwmodel
+
+SCHEMES = ("none", "parity", "secded")
+
+# word-level decode status codes
+CLEAN, CORRECTED, UNCORRECTABLE = 0, 1, 2
+
+
+def _secded_tables() -> tuple[np.ndarray, np.ndarray]:
+    """(parity_masks (6,) uint32, synd_flip (64,) uint32) for SECDED(39,32).
+
+    ``parity_masks[i]`` selects the data bits covered by Hamming check bit
+    ``i`` (data bit j lives at the j-th non-power-of-two codeword position);
+    ``synd_flip[s]`` is the data-word XOR mask that corrects syndrome ``s``
+    (0 when s points at a check bit, the overall bit, or no position).
+    """
+    data_pos = [p for p in range(1, 39) if p & (p - 1)]  # 32 of them
+    assert len(data_pos) == hv.WORD
+    masks = np.zeros(6, np.uint32)
+    flip = np.zeros(64, np.uint32)
+    for j, p in enumerate(data_pos):
+        flip[p] = np.uint32(1) << j
+        for i in range(6):
+            if (p >> i) & 1:
+                masks[i] |= np.uint32(1) << j
+    return masks, flip
+
+
+_PARITY_MASKS, _SYND_FLIP = _secded_tables()
+
+_CHECK_BITS = {"none": 0, "parity": 1, "secded": 7}
+
+
+def n_check_bits(scheme: str) -> int:
+    """Stored check bits per protected 32-bit word."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown ECC scheme {scheme!r}; pick from {SCHEMES}")
+    return _CHECK_BITS[scheme]
+
+
+def encode(words: jax.Array, scheme: str = "secded") -> jax.Array:
+    """Check bits for packed uint32 ``words`` (same shape, low-bit packed).
+
+    This is what the AM write path stores alongside each data word; the
+    fleet recomputes it from the clean stored rows inside the jitted step,
+    which is bit-identical to carrying stored check bits (storage is never
+    mutated by the read-fault model)."""
+    n_check_bits(scheme)  # validate
+    if scheme == "none":
+        return jnp.zeros_like(words)
+    if scheme == "parity":
+        return hv.word_parity(words)
+    check = jnp.zeros_like(words)
+    for i, m in enumerate(_PARITY_MASKS):
+        check = check | (hv.word_parity(words & jnp.uint32(m)) << i)
+    overall = hv.word_parity(words) ^ hv.word_parity(check)
+    return check | (overall << 6)
+
+
+def decode(words: jax.Array, check: jax.Array, scheme: str = "secded"
+           ) -> tuple[jax.Array, jax.Array]:
+    """Decode possibly-corrupted (word, check) pairs.
+
+    Returns ``(corrected_words, status)`` with status int32 per word:
+    ``CLEAN`` (0), ``CORRECTED`` (1, data repaired — or the fault was in a
+    check/parity bit and the data was already clean), ``UNCORRECTABLE``
+    (2, detected but not repairable: SECDED double flips, or any odd-count
+    parity mismatch, which corrects nothing)."""
+    n_check_bits(scheme)  # validate
+    if scheme == "none":
+        return words, jnp.zeros(words.shape, jnp.int32)
+    if scheme == "parity":
+        mismatch = hv.word_parity(words) ^ (check & jnp.uint32(1))
+        return words, (mismatch * UNCORRECTABLE).astype(jnp.int32)
+    syn = jnp.zeros_like(words)
+    for i, m in enumerate(_PARITY_MASKS):
+        rx = (check >> i) & jnp.uint32(1)
+        syn = syn | ((hv.word_parity(words & jnp.uint32(m)) ^ rx) << i)
+    # parity over all 39 received bits: odd -> an odd number of flips
+    overall = hv.word_parity(words) ^ hv.word_parity(check & jnp.uint32(0x7F))
+    single = overall == 1
+    flip = jnp.asarray(_SYND_FLIP)[syn.astype(jnp.int32)]
+    corrected = jnp.where(single, words ^ flip, words)
+    status = jnp.where(single, CORRECTED,
+                       jnp.where(syn != 0, UNCORRECTABLE, CLEAN))
+    return corrected, status.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# cost model: gate ops per read -> energy through core.hwmodel constants
+# ---------------------------------------------------------------------------
+
+def ops_per_word(scheme: str) -> dict[str, int]:
+    """Gate evaluations of one word's read-path decode, by gate kind.
+
+    ``parity``: one 33-input XOR tree (data + stored parity bit).
+    ``secded``: six syndrome parity trees over the covered data bits, six
+    check-bit compares, the 39-input overall-parity tree, the 6->38
+    syndrome one-hot decode (two AND2 levels per line), the 32 correction
+    XORs and their single-error gating ANDs.  Keys map 1:1 onto
+    ``hwmodel.gate_energy_fj``."""
+    n_check_bits(scheme)  # validate
+    if scheme == "none":
+        return {"xor2": 0, "and2": 0}
+    if scheme == "parity":
+        return {"xor2": 32, "and2": 0}
+    tree_xor = int(sum(int(m).bit_count() - 1 for m in _PARITY_MASKS))
+    return {
+        "xor2": tree_xor + 6 + 38 + 32,  # trees + compare + overall + fix
+        "and2": 2 * 38 + 32,             # syndrome decode + correction gate
+    }
+
+
+def read_ops(scheme: str, n_classes: int, words: int) -> dict[str, int]:
+    """Gate evaluations of one full AM read (all class rows decoded)."""
+    per = ops_per_word(scheme)
+    n = n_classes * words
+    return {k: v * n for k, v in per.items()}
+
+
+def raw_am_read_ops(n_classes: int, words: int) -> dict[str, int]:
+    """Baseline ops of the UNPROTECTED AM similarity read, for the overhead
+    ratio: per word one 32-bit AND plus its share of the popcount adder tree
+    (D-1 full adders over the whole row)."""
+    return {"and2": n_classes * words * hv.WORD,
+            "fa": n_classes * (words * hv.WORD - 1)}
+
+
+def read_energy_nj(scheme: str, n_classes: int, words: int,
+                   c: hwmodel.HWConstants = hwmodel.C16) -> float:
+    """Energy (nJ) of one AM read's ECC decode, via hwmodel gate constants."""
+    return hwmodel.gate_energy_fj(read_ops(scheme, n_classes, words), c) * 1e-6
+
+
+def read_overhead(scheme: str, n_classes: int, words: int,
+                  c: hwmodel.HWConstants = hwmodel.C16) -> float:
+    """ECC decode energy as a fraction of the raw AM similarity read."""
+    base = hwmodel.gate_energy_fj(raw_am_read_ops(n_classes, words), c)
+    return hwmodel.gate_energy_fj(read_ops(scheme, n_classes, words), c) / base

@@ -1,0 +1,169 @@
+"""BER-parameterized packed-domain fault injection for the fleet datapath.
+
+The three memory classes the implant's accuracy lives in — the CompIM/IM
+codebook bank, the packed AM class rows, and the in-flight temporal
+accumulator counters — are faulted INDEPENDENTLY, entirely in the packed
+uint32 domain, and entirely INSIDE the jitted fleet step: each step derives
+per-component PRNG keys from one scalar seed operand, samples Bernoulli
+bit-flip masks (``core.hv.random_flip_mask``) and XORs them into the memory
+READS.  No host work, no storage mutation, and the BER values ride as a
+traced ``(3,)`` operand — one compiled executable serves a whole BER grid,
+and BER = 0 is numerically bit-exact with the fault-free step.
+
+Two fault modes:
+
+* ``transient`` — a fresh mask per step (SEU-style upsets): the host folds
+  the round counter into the seed, so every step sees independent flips.
+* ``stuck``     — persistent cell faults: a FIXED per-tile seed selects a
+  Bernoulli(ber) set of stuck cells once, each holding a fixed random
+  value; every read of a stuck cell returns that value (textbook
+  stuck-at-0/1, so the expected read-flip rate is ber/2).
+
+The static/traced split: ``FaultPlan`` (which targets are compiled in, the
+mode, base seed, ECC scheme) is hashable and rides as a jit static —
+changing it recompiles; ``FaultConfig`` additionally carries the BER
+VALUES, which ride as traced operands — ``StreamingFleet.set_ber`` moves
+along the BER grid without recompiling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hv
+from repro.reliability import ecc
+
+MODES = ("transient", "stuck")
+TARGETS = ("tables", "am", "counts")  # index order of the traced BER vector
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Static structure of a fault campaign (hashable; a jit static).
+
+    ``tables`` / ``am`` / ``counts`` say which targets are compiled into
+    the step at all — a disabled target costs literally nothing.  ``ecc``
+    selects the AM word protection (``reliability.ecc.SCHEMES``)."""
+
+    tables: bool = False
+    am: bool = False
+    counts: bool = False
+    mode: str = "transient"
+    seed: int = 0
+    ecc: str = "none"
+
+    @property
+    def any_target(self) -> bool:
+        return self.tables or self.am or self.counts
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """A fault campaign: per-target BERs (None = target untouched and
+    compiled out), fault mode, base PRNG seed and AM ECC scheme.
+
+    ``ecc`` may be enabled with ``am=None`` (or BER 0) — protection is a
+    hardware design choice, and its energy overhead is paid on every read
+    whether or not faults land."""
+
+    tables: float | None = None
+    am: float | None = None
+    counts: float | None = None
+    mode: str = "transient"
+    seed: int = 0
+    ecc: str = "none"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode={self.mode!r} must be one of {MODES}")
+        ecc.n_check_bits(self.ecc)  # validates the scheme name
+        for name in TARGETS:
+            ber = getattr(self, name)
+            if ber is not None and not 0.0 <= float(ber) <= 1.0:
+                raise ValueError(
+                    f"{name} BER must be in [0, 1] or None, got {ber!r}")
+
+    def plan(self) -> FaultPlan:
+        return FaultPlan(tables=self.tables is not None,
+                         am=self.am is not None,
+                         counts=self.counts is not None,
+                         mode=self.mode, seed=self.seed, ecc=self.ecc)
+
+    def ber_vector(self) -> np.ndarray:
+        """(3,) float32 [tables, am, counts] BERs (0.0 for disabled targets)
+        — the step's traced operand."""
+        return np.asarray([float(getattr(self, t) or 0.0) for t in TARGETS],
+                          np.float32)
+
+    def with_ber(self, ber: float) -> "FaultConfig":
+        """Every ENABLED target moved to one BER (grid sweeps); disabled
+        targets stay compiled out."""
+        if not 0.0 <= float(ber) <= 1.0:
+            raise ValueError(f"ber={ber!r} must be in [0, 1]")
+        return replace(self, **{
+            t: (float(ber) if getattr(self, t) is not None else None)
+            for t in TARGETS})
+
+
+# ---------------------------------------------------------------------------
+# host-side seed schedule
+# ---------------------------------------------------------------------------
+
+def step_seed(plan: FaultPlan, *, tile: int, n_tiles: int, phase: int) -> int:
+    """Scalar seed operand for one (tile, round): stuck faults reuse a fixed
+    per-tile seed (the same masks every step = persistent cells); transient
+    faults fold the round counter in (fresh masks every step).  The ranges
+    never collide."""
+    if plan.mode == "stuck":
+        return plan.seed + tile
+    return plan.seed + n_tiles * (1 + phase) + tile
+
+
+def component_keys(seed) -> jax.Array:
+    """(3, key) per-target PRNG keys (TARGETS order) from one scalar seed.
+
+    ``seed`` may be traced — the whole derivation runs inside the jitted
+    step, so the host ships one int32 and no mask bytes."""
+    return jax.random.split(jax.random.PRNGKey(seed), len(TARGETS))
+
+
+# ---------------------------------------------------------------------------
+# read-fault transforms (pure jnp, traced ber)
+# ---------------------------------------------------------------------------
+
+def xor_mask(words: jax.Array, key: jax.Array, ber, *,
+             bits: int = hv.WORD, mode: str = "transient") -> jax.Array:
+    """Effective XOR mask such that ``words ^ mask`` is the faulty read.
+
+    Transient: a fresh Bernoulli(ber) flip mask.  Stuck: a persistent
+    Bernoulli(ber) cell-select mask with fixed random stuck values ``v`` —
+    the read returns ``(w & ~sel) | (v & sel)``, i.e. the XOR mask is
+    ``(w ^ v) & sel`` (depends on the stored data, as stuck-at does).
+    ``ber == 0`` yields an all-zero mask either way."""
+    if mode == "transient":
+        return hv.random_flip_mask(key, words.shape, ber, bits)
+    if mode != "stuck":
+        raise ValueError(f"mode={mode!r} must be one of {MODES}")
+    k_sel, k_val = jax.random.split(key)
+    sel = hv.random_flip_mask(k_sel, words.shape, ber, bits)
+    val = hv.random_flip_mask(k_val, words.shape, 0.5, bits)
+    return (words ^ val) & sel
+
+
+def flip_words(words: jax.Array, key: jax.Array, ber, *,
+               bits: int = hv.WORD, mode: str = "transient") -> jax.Array:
+    """Faulty read of packed uint32 words at bit-error-rate ``ber``."""
+    return words ^ xor_mask(words, key, ber, bits=bits, mode=mode)
+
+
+def flip_counts(counts: jax.Array, key: jax.Array, ber, *,
+                bits: int, mode: str = "transient") -> jax.Array:
+    """Faulty read of the int32 temporal accumulators: only the low ``bits``
+    bits exist in hardware (the D x ceil(log2(window+1))-bit counter bank of
+    core.hwmodel), so flips land there and the value stays in range."""
+    u = counts.astype(jnp.uint32)
+    return flip_words(u, key, ber, bits=bits, mode=mode).astype(jnp.int32)

@@ -1,0 +1,212 @@
+"""Fleet-scale bit-error degradation sweeps (BER x variant x density).
+
+The reliability question the subsystem answers: how fast does end-to-end
+seizure-detection quality (accuracy, detection delay, false alarms) decay as
+raw bit-error rate rises in each of the accelerator's memory classes, and
+how much of that decay does word-level ECC on the associative memory buy
+back, at what energy cost per read?
+
+The sweep replays the SAME synthetic-patient test streams through a
+``StreamingFleet`` for every grid point:
+
+* one fleet per (variant, density, scheme) — the fault structure
+  (``FaultPlan``) is a jit static, so the step compiles once;
+* BER points ride the traced ``(3,)`` operand — ``set_ber`` + ``reset``
+  walks the whole grid with zero recompiles;
+* the BER = 0 point is checked BIT-EXACT (full per-frame score streams)
+  against a fault-free fleet built from the identical pipelines — the
+  degradation curves are anchored to the unmodified datapath, not to a
+  parallel implementation.
+
+Variant names follow ``core.hwmodel`` (dense / sparse_naive / sparse_compim
+/ sparse_opt); ``HW_VARIANTS`` maps them onto ``HDCConfig`` fields.
+
+Everything returns plain dicts so ``benchmarks/bench_reliability.py`` can
+serialize points straight into ``BENCH_reliability.json``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.classifier import HDCConfig
+from repro.core.pipeline import HDCPipeline
+from repro.data import ieeg
+from repro.reliability import ecc
+from repro.reliability.faults import TARGETS, FaultConfig
+from repro.serve.fleet import StreamingFleet
+
+# hwmodel variant name -> HDCConfig overrides (mirrors hwmodel's mapping:
+# "sparse_opt" is CompIM + OR-tree spatial bundling, "sparse_compim" the
+# thinned CompIM design point, "sparse_naive" always thins).
+HW_VARIANTS: dict[str, dict] = {
+    "dense": {"variant": "dense", "spatial_thinning": False},
+    "sparse_naive": {"variant": "sparse_naive", "spatial_thinning": True},
+    "sparse_compim": {"variant": "sparse_compim", "spatial_thinning": True},
+    "sparse_opt": {"variant": "sparse_compim", "spatial_thinning": False},
+}
+
+
+def variant_config(hw_variant: str, base: HDCConfig) -> HDCConfig:
+    """Map a ``core.hwmodel`` variant name onto the pipeline config."""
+    if hw_variant not in HW_VARIANTS:
+        raise ValueError(f"variant {hw_variant!r} must be one of "
+                         f"{sorted(HW_VARIANTS)}")
+    return replace(base, **HW_VARIANTS[hw_variant])
+
+
+# ---------------------------------------------------------------------------
+# synthetic-patient session bank
+# ---------------------------------------------------------------------------
+
+def make_sessions(*, n_patients: int, n_test: int, channels: int,
+                  record_kw: dict | None = None, seed: int = 0) -> dict:
+    """Build the patient streams the whole sweep replays.
+
+    Per patient: record 0 trains the one-shot AM, records 1..n_test are
+    test streams.  Every (patient, test record) pair becomes one fleet
+    session, so the batch stacks to (S, T, channels) with equal T by
+    construction (fixed pre/ictal/post durations)."""
+    record_kw = dict(record_kw or {})
+    record_kw["channels"] = channels
+    train, tests, owners, onsets = {}, [], [], []
+    for pid in range(n_patients):
+        rng = np.random.default_rng(7000 + seed + pid)
+        recs = [ieeg.make_record(rng, **record_kw) for _ in range(1 + n_test)]
+        train[f"p{pid}"] = recs[0]
+        for rec in recs[1:]:
+            tests.append(rec)
+            owners.append(f"p{pid}")
+            onsets.append(rec)
+    batch = np.stack([r.codes for r in tests])  # (S, T, channels)
+    return {"train": train, "tests": tests, "owners": owners, "batch": batch}
+
+
+def train_pipelines(hw_variant: str, density: float, sessions: dict,
+                    base_cfg: HDCConfig, *, seed: int = 0
+                    ) -> tuple[dict[str, HDCPipeline], HDCConfig]:
+    """One-shot pipelines per patient at this (variant, density) point.
+
+    ``calibrate_density`` programs the temporal threshold BEFORE training
+    (no-op for dense, which has no thinning stage)."""
+    cfg = variant_config(hw_variant, base_cfg)
+    pipes: dict[str, HDCPipeline] = {}
+    for i, (name, rec) in enumerate(sessions["train"].items()):
+        codes = jnp.asarray(rec.codes[None])
+        labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
+        pipe = HDCPipeline.init(jax.random.PRNGKey(seed + i), cfg)
+        pipe = pipe.calibrate_density(codes, target=density)
+        pipes[name] = pipe.train_one_shot(codes, labels)
+    return pipes, cfg
+
+
+# ---------------------------------------------------------------------------
+# fleet replay
+# ---------------------------------------------------------------------------
+
+def replay(fleet: StreamingFleet, batch: np.ndarray
+           ) -> tuple[np.ndarray, np.ndarray]:
+    """Reset + stream the stacked test batch; returns per-session
+    ``(preds (S, F) int32, scores (S, F, C) f32)``.  Records are
+    equal-length, so every session emits the same frame count."""
+    fleet.reset()
+    decs = fleet.push_codes(batch)
+    preds = np.asarray([[d.prediction for d in ds] for ds in decs], np.int32)
+    scores = np.asarray([[d.scores for d in ds] for ds in decs], np.float32)
+    return preds, scores
+
+
+def detection_summary(preds: np.ndarray, sessions: dict, cfg: HDCConfig
+                      ) -> dict:
+    """k-of-m post-processed detection metrics over all fleet sessions."""
+    res = [
+        metrics.detection_metrics(
+            preds[s], ieeg.onset_frame(rec, cfg.window),
+            frame_seconds=cfg.window / ieeg.FS)
+        for s, rec in enumerate(sessions["tests"])
+    ]
+    return metrics.aggregate(res)
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def _fault_config(targets, mode: str, scheme: str, seed: int) -> FaultConfig:
+    bad = set(targets) - set(TARGETS)
+    if bad:
+        raise ValueError(f"unknown fault targets {sorted(bad)}; "
+                         f"pick from {TARGETS}")
+    kw = {t: (0.0 if t in targets else None) for t in TARGETS}
+    return FaultConfig(mode=mode, seed=seed, ecc=scheme, **kw)
+
+
+def run_sweep(*, variants=("sparse_opt",), densities=(0.25,),
+              bers=(0.0, 1e-3, 1e-2), schemes=("none",),
+              targets=("tables", "am", "counts"), mode: str = "transient",
+              base_cfg: HDCConfig, n_patients: int = 2, n_test: int = 2,
+              record_kw: dict | None = None, seed: int = 0) -> list[dict]:
+    """Degradation grid: variant x density x ECC scheme x BER.
+
+    One fleet per (variant, density, scheme); BER moves via ``set_ber``
+    (no recompiles).  Each point dict carries the detection metrics, the
+    frame-level disagreement rate vs the clean run, cumulative ECC event
+    counters, and the per-frame ECC read energy/overhead priced through
+    ``core.hwmodel`` constants.  BER = 0 points additionally carry
+    ``zero_ber_bitexact`` — full score-stream equality against a
+    fault-free fleet (the acceptance gate; callers should treat False as
+    an error)."""
+    sessions = make_sessions(n_patients=n_patients, n_test=n_test,
+                             channels=base_cfg.channels,
+                             record_kw=record_kw, seed=seed)
+    batch, owners = sessions["batch"], sessions["owners"]
+    points: list[dict] = []
+    for hw in variants:
+        for density in densities:
+            pipes, cfg = train_pipelines(hw, density, sessions, base_cfg,
+                                         seed=seed)
+            buckets = (cfg.window,)
+            clean = StreamingFleet(pipes, owners, buckets=buckets)
+            clean_preds, clean_scores = replay(clean, batch)
+            clean_agg = detection_summary(clean_preds, sessions, cfg)
+            for scheme in schemes:
+                fc = _fault_config(targets, mode, scheme, seed)
+                fleet = StreamingFleet(pipes, owners, buckets=buckets,
+                                       faults=fc)
+                n_frames = clean_preds.size
+                for ber in bers:
+                    fleet.set_ber(float(ber))
+                    preds, scores = replay(fleet, batch)
+                    agg = detection_summary(preds, sessions, cfg)
+                    st = fleet.ecc_stats.sum(axis=0)
+                    point = {
+                        "variant": hw, "density": float(density),
+                        "scheme": scheme, "ber": float(ber), "mode": mode,
+                        "targets": list(targets),
+                        "sessions": len(owners), "frames": int(n_frames),
+                        "detection_accuracy": agg["detection_accuracy"],
+                        "mean_delay_s": agg["mean_delay_s"],
+                        "false_alarm_rate": agg["false_alarm_rate"],
+                        "clean_detection_accuracy":
+                            clean_agg["detection_accuracy"],
+                        "frame_disagreement":
+                            float(np.mean(preds != clean_preds)),
+                        "ecc_corrected": int(st[0]),
+                        "ecc_detected": int(st[1]),
+                        "ecc_uncorrectable": int(st[2]),
+                        "ecc_read_energy_nj": ecc.read_energy_nj(
+                            scheme, cfg.n_classes, cfg.words),
+                        "ecc_read_overhead": ecc.read_overhead(
+                            scheme, cfg.n_classes, cfg.words),
+                    }
+                    if ber == 0.0:
+                        point["zero_ber_bitexact"] = bool(
+                            np.array_equal(preds, clean_preds)
+                            and np.array_equal(scores, clean_scores))
+                    points.append(point)
+    return points

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import binding, bundling, hv
 from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.reliability import ecc
 
 
 def datapath_key(cfg: HDCConfig) -> HDCConfig:
@@ -268,3 +269,29 @@ def owner_am_scores(
     if cfg.variant == "dense":
         return cfg.dim - hv.hamming(q, class_rows)
     return hv.overlap(q, class_rows)
+
+
+def owner_am_scores_protected(
+    frames: jax.Array, rows: jax.Array, check: jax.Array, cfg: HDCConfig,
+    scheme: str
+) -> tuple[jax.Array, jax.Array]:
+    """AM scoring through the ECC word codec (reliability.ecc).
+
+    ``rows`` (S, C, W) are the possibly-corrupted stored class rows and
+    ``check`` their (possibly-corrupted) per-word check bits; every word is
+    decoded once per step — the storage-read model: the fleet's fault
+    injection corrupts READS, never the stored rows — and the CORRECTED
+    rows score the (S, K, W) frames.  Returns ``(scores (S, K, C),
+    counters (S, 3))`` with counters = per-session word counts of
+    [corrected, detected, uncorrectable] this read (detected = corrected +
+    uncorrectable for SECDED; parity only detects).
+    """
+    corrected, status = ecc.decode(rows, check, scheme)
+    scores = owner_am_scores(frames, corrected[:, None], cfg)
+    red = tuple(range(1, status.ndim))
+    counters = jnp.stack([
+        jnp.sum((status == ecc.CORRECTED).astype(jnp.int32), axis=red),
+        jnp.sum((status != ecc.CLEAN).astype(jnp.int32), axis=red),
+        jnp.sum((status == ecc.UNCORRECTABLE).astype(jnp.int32), axis=red),
+    ], axis=-1)
+    return scores, counters

@@ -92,6 +92,9 @@ from repro.ckpt import checkpoint as ckpt
 from repro.core import hv, online
 from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.kernels.hdc_fleet import ops as fleet_ops
+from repro.reliability import ecc as rel_ecc
+from repro.reliability import faults as rel_faults
+from repro.reliability.faults import FaultConfig, FaultPlan
 from repro.runtime import sharding as shd
 from repro.serve import dispatch
 from repro.serve.engine import FrameDecision
@@ -133,9 +136,17 @@ def derive_tile(cfg: HDCConfig, *, max_bucket: int = DEFAULT_BUCKETS[-1],
     """
     env = os.environ.get("REPRO_FLEET_TILE", "")
     if env:
-        tile = int(env)
-        if tile <= 0:
-            raise ValueError(f"REPRO_FLEET_TILE={env!r} must be positive")
+        try:
+            tile = int(env)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_FLEET_TILE={env!r} is not an integer; expected a "
+                "power of two in [64, 4096]") from None
+        if not (64 <= tile <= 4096 and tile & (tile - 1) == 0):
+            raise ValueError(
+                f"REPRO_FLEET_TILE={env!r} must be a power of two in "
+                "[64, 4096] (the range derive_tile itself produces); use "
+                "StreamingFleet(tile=...) for out-of-range experiments")
         return tile
     if device is None:
         device = jax.local_devices()[0]
@@ -231,11 +242,14 @@ def _fleet_step(
     thresholds: jax.Array,
     chunk: jax.Array,
     lengths: jax.Array,
+    fault_ber: jax.Array | None = None,
+    fault_seed: jax.Array | None = None,
     *,
     cfg: HDCConfig,
     ctx: shd.ShardCtx,
     use_kernel: bool,
-) -> tuple[FleetState, FleetOut]:
+    faults: FaultPlan | None = None,
+) -> tuple:
     """Advance all S sessions by one padded chunk batch.
 
     chunk: (S, t_pad, channels) uint8 RAW LBP codes — the only per-cycle
@@ -251,14 +265,43 @@ def _fleet_step(
     (refreshed by ``adapt``), and the step records each emitting session's
     last frame HV + scores — the operands a later ``adapt`` call consumes,
     captured inside the same jitted program.
+
+    Fault injection (repro.reliability): with a static ``faults`` plan the
+    step additionally takes the traced ``fault_ber`` (3,) BER vector and
+    scalar ``fault_seed``, derives per-component PRNG keys INSIDE the jit,
+    and corrupts the memory READS of the enabled targets — the codebook
+    bank (before the gather / via the fused kernel's ``tables_xor`` hook),
+    the AM class rows (optionally through the ECC word codec, whose
+    corrected rows then score), and the carried temporal accumulators (low
+    counter bits only).  Storage is never mutated.  The step then returns
+    a third output: the (S, 3) [corrected, detected, uncorrectable] ECC
+    word counts of this read (zeros when no ECC scheme is configured).
+    With ``faults=None`` (the default) none of this is traced and the step
+    is the unmodified two-output program; with faults enabled but BER 0
+    every mask is all-zero and the outputs are bit-exact with it.
     """
     s, t_pad, _ = chunk.shape
+    counts_in = state.counts
+    tables_xor = None
+    if faults is not None:
+        k_tab, k_am, k_cnt = rel_faults.component_keys(fault_seed)
+        if faults.tables:
+            tables_xor = rel_faults.xor_mask(tables, k_tab, fault_ber[0],
+                                             mode=faults.mode)
+        if faults.counts:
+            cbits = int(np.ceil(np.log2(cfg.window + 1)))
+            counts_in = rel_faults.flip_counts(
+                counts_in, k_cnt, fault_ber[2], bits=max(1, cbits),
+                mode=faults.mode)
     if use_kernel:
         # fused kernel: codes in, slot counts out — the table gather,
         # spatial bundle, bit transpose and masked popcount stay in VMEM
         seg = fleet_ops.fleet_counts_fused(tables, owner, chunk,
-                                           state.filled, lengths, cfg)
+                                           state.filled, lengths, cfg,
+                                           tables_xor=tables_xor)
     else:
+        if tables_xor is not None:
+            tables = tables ^ tables_xor
         words = dispatch.owner_spatial_codes(tables, owner, chunk, cfg)
         seg = fleet_ops.fleet_counts(words, state.filled, lengths, cfg)
     seg = shd.constrain(seg, ("batch", None, None), ctx)  # (S, K+1, D) int32
@@ -268,14 +311,37 @@ def _fleet_step(
     # session emits, and to the tail otherwise
     emits = n_emit > 0
     frame_counts = seg[:, :-1].at[:, 0].add(
-        jnp.where(emits[:, None], state.counts, 0)
+        jnp.where(emits[:, None], counts_in, 0)
     )
     if cfg.variant == "dense":
         frames = hv.majority_pack(frame_counts, cfg.window, cfg.dim)
     else:
         frames = hv.threshold_pack(frame_counts, thresholds[:, None, None])
-    scores = dispatch.owner_am_scores(frames, state.class_rows[:, None], cfg)
-    new_counts = seg[:, -1] + jnp.where(emits[:, None], 0, state.counts)
+    ecc_counts = None
+    if faults is None:
+        scores = dispatch.owner_am_scores(frames, state.class_rows[:, None],
+                                          cfg)
+    else:
+        rows = state.class_rows
+        check = (rel_ecc.encode(rows, faults.ecc)
+                 if faults.ecc != "none" else None)
+        if faults.am:
+            k_am_d, k_am_c = jax.random.split(k_am)
+            rows = rel_faults.flip_words(rows, k_am_d, fault_ber[1],
+                                         mode=faults.mode)
+            if check is not None:
+                check = rel_faults.flip_words(
+                    check, k_am_c, fault_ber[1],
+                    bits=rel_ecc.n_check_bits(faults.ecc), mode=faults.mode)
+        if check is not None:
+            scores, ecc_counts = dispatch.owner_am_scores_protected(
+                frames, rows, check, cfg, faults.ecc)
+        else:
+            scores = dispatch.owner_am_scores(frames, rows[:, None], cfg)
+        if ecc_counts is None:
+            ecc_counts = jnp.zeros((s, 3), jnp.int32)
+        ecc_counts = shd.constrain(ecc_counts, ("batch", None), ctx)
+    new_counts = seg[:, -1] + jnp.where(emits[:, None], 0, counts_in)
     # capture each emitting session's LAST completed frame for adapt
     sidx = jnp.arange(s)
     last_slot = jnp.maximum(n_emit - 1, 0)
@@ -307,7 +373,10 @@ def _fleet_step(
             _STATE_AXES["has_frame"], ctx,
         ),
     )
-    return new_state, FleetOut(frames=frames, scores=scores)
+    out = FleetOut(frames=frames, scores=scores)
+    if faults is None:
+        return new_state, out
+    return new_state, out, ecc_counts
 
 
 def _fleet_adapt(
@@ -373,6 +442,15 @@ class StreamingFleet:
     mask out sessions without feedback), bit-exact with per-session
     ``SeizureSession.adapt`` calls.  ``save``/``restore`` checkpoint the
     full fleet state (streaming + online AM banks) for mid-stream resume.
+
+    ``faults`` (repro.reliability.faults.FaultConfig) turns the fleet into
+    a degradation testbench: the jitted step corrupts the configured
+    memory reads (codebook bank / AM rows / temporal counters) at the
+    configured bit-error rates, optionally decoding AM reads through an
+    ECC word codec (``ecc_stats`` accumulates per-session corrected /
+    detected / uncorrectable counts).  BER values are traced operands —
+    ``set_ber`` sweeps a grid with no recompiles — and ``faults=None``
+    (the default) compiles the exact fault-free step, zero overhead.
     """
 
     def __init__(
@@ -384,8 +462,11 @@ class StreamingFleet:
         mesh=None,
         backend: str | None = None,
         tile: int | None = None,
+        faults: FaultConfig | None = None,
     ):
         self._cfg = dispatch.validate_bank(pipelines)
+        self._faults = faults
+        self._plan = None if faults is None else faults.plan()
         if backend is None:
             backend = next(iter(pipelines.values())).cfg.backend
         if backend not in ("jnp", "pallas"):
@@ -497,15 +578,27 @@ class StreamingFleet:
         else:  # bank mixes in externally built pipelines: adapt unavailable
             self._am_counts0 = self._am_n0 = None
         self._state_t = self._zero_states()
+        # fault-injection operands: the (3,) BER vector rides as a TRACED
+        # per-tile operand (set_ber moves along a BER grid with no
+        # recompile) and the per-tile (tile_s, 3) ECC word counters
+        # accumulate device-side, OUTSIDE FleetState (checkpoints stay
+        # compatible with fault-free fleets)
+        if self._plan is not None:
+            self._ber_t = [self._put_tile(faults.ber_vector(), (None,), d)
+                           for d in self._tile_devs]
+            self._ecc_t = self._zero_ecc()
         # host mirrors of filled/frame_index: the emission schedule runs on
         # device, but the host needs O(S) mirrors to route raw results
         # (which (session, slot) pairs really emitted) without a round-trip
         self._filled_h = np.zeros((self._np,), np.int64)
         self._fidx_h = np.zeros((self._np,), np.int64)
         self._shapes_seen: set[int] = set()  # buckets pushed so far
+        # faults=None keeps the partial's jaxpr IDENTICAL to the fault-free
+        # step — the fault path costs nothing unless a plan is configured
         self._step = jax.jit(
             functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx,
-                              use_kernel=self._backend == "pallas"),
+                              use_kernel=self._backend == "pallas",
+                              faults=self._plan),
             donate_argnums=(0,),
         )
         # NOT donated: several state leaves pass through adapt untouched and
@@ -573,12 +666,20 @@ class StreamingFleet:
             for sl, d in zip(self._tile_slices, self._tile_devs)
         ]
 
+    def _zero_ecc(self) -> list[jax.Array]:
+        return [self._put_tile(np.zeros((sl.stop - sl.start, 3), np.int32),
+                               ("batch", None), d)
+                for sl, d in zip(self._tile_slices, self._tile_devs)]
+
     def reset(self) -> None:
-        """Zero all accumulators, fill levels and frame indices, and restore
-        every session's AM to its patient's trained (pre-adaptation) state."""
+        """Zero all accumulators, fill levels, frame indices and ECC
+        counters, and restore every session's AM to its patient's trained
+        (pre-adaptation) state."""
         self._state_t = self._zero_states()
         self._filled_h[:] = 0
         self._fidx_h[:] = 0
+        if self._plan is not None:
+            self._ecc_t = self._zero_ecc()
 
     @property
     def n_sessions(self) -> int:
@@ -609,6 +710,40 @@ class StreamingFleet:
     def frame_indices(self) -> np.ndarray:
         """(S,) frames emitted so far per session."""
         return self._fidx_h[:self._n].copy()
+
+    @property
+    def fault_config(self) -> FaultConfig | None:
+        """The active fault campaign (None = fault-free fleet)."""
+        return self._faults
+
+    def set_ber(self, ber: float) -> None:
+        """Move every ENABLED fault target to one bit-error rate.
+
+        BER rides as a traced operand of the jitted step, so sweeping a BER
+        grid through one fleet never recompiles; which targets / mode / ECC
+        scheme are enabled is static (build a new fleet to change those).
+        """
+        if self._faults is None:
+            raise ValueError(
+                "fleet was built without faults; pass "
+                "StreamingFleet(..., faults=FaultConfig(...)) to enable "
+                "fault injection")
+        self._faults = self._faults.with_ber(ber)
+        vec = self._faults.ber_vector()
+        self._ber_t = [self._put_tile(vec, (None,), d)
+                       for d in self._tile_devs]
+
+    @property
+    def ecc_stats(self) -> np.ndarray:
+        """(S, 3) cumulative per-session ECC word counts since the last
+        ``reset``: [corrected, detected, uncorrectable] — ``detected``
+        counts every faulty word observed (= corrected + uncorrectable for
+        SECDED; parity only detects).  All zeros when no ECC scheme is
+        configured (or no faults landed)."""
+        if self._plan is None:
+            return np.zeros((self._n, 3), np.int64)
+        return np.concatenate(
+            [np.asarray(x) for x in self._ecc_t]).astype(np.int64)[:self._n]
 
     @property
     def compile_count(self) -> int:
@@ -713,7 +848,8 @@ class StreamingFleet:
             width = min(t_pad, total - pos)
             round_len32 = round_len.astype(np.int32)
             n_emit = (self._filled_h + round_len) // self._cfg.window
-            slot = self._stage_phase & 1
+            phase = self._stage_phase
+            slot = phase & 1
             self._stage_phase += 1
             fos = []
             # per-tile steps dispatch asynchronously: tiles on different
@@ -726,7 +862,7 @@ class StreamingFleet:
                 if hi > sl.start:
                     stage[:hi - sl.start, :width] = big[sl.start:hi,
                                                         pos:pos + width]
-                self._state_t[k], fo = self._step(
+                args = (
                     self._state_t[k],
                     self._tables_t[k],
                     self._param_owner_t[k],
@@ -734,6 +870,16 @@ class StreamingFleet:
                     self._put_tile(stage, ("batch", None, None), d),
                     self._put_tile(round_len32[sl], ("batch",), d),
                 )
+                if self._plan is None:
+                    self._state_t[k], fo = self._step(*args)
+                else:
+                    seed = rel_faults.step_seed(
+                        self._plan, tile=k, n_tiles=len(self._tile_slices),
+                        phase=phase)
+                    self._state_t[k], fo, ecc_c = self._step(
+                        *args, self._ber_t[k],
+                        self._put_tile(np.int32(seed), (), d))
+                    self._ecc_t[k] = self._ecc_t[k] + ecc_c
                 # fo depends on the staged codes: once it is ready the
                 # step has consumed the slot and it is safe to rewrite
                 self._stage_busy[k][(slot, t_pad)] = fo

@@ -1,0 +1,109 @@
+"""The fleet perf-regression gate (benchmarks/check_fleet_regression.py).
+
+The gate's contract after the unknown-row fix: row families the committed
+reference does not know yet are WARNINGS (new benchmarks land ahead of
+their reference refresh), while known rows fail the gate when they
+regress past tolerance, go missing, or stop parsing.  The reference file
+itself stays strictly parsed — it is curated, so a malformed row there is
+a repo bug.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import check_fleet_regression as gate
+
+STAGE_ROWS = [
+    {"name": "fleet.S8.stage_spatial", "derived": "share=20.0% of push"},
+    {"name": "fleet.S8.stage_temporal", "derived": "share=30.0% of push"},
+]
+
+
+def _write(tmp_path, fname, rows, status="ok"):
+    path = tmp_path / fname
+    path.write_text(json.dumps(
+        {"module": "fleet", "status": status, "rows": rows, "error": None}))
+    return str(path)
+
+
+def _speedup(name, x):
+    return {"name": name, "derived": f"{x:.2f}x vs baseline"}
+
+
+@pytest.fixture
+def reference(tmp_path):
+    return _write(tmp_path, "ref.json",
+                  [_speedup("fleet.S8.speedup", 4.0)])
+
+
+def test_gate_passes_within_tolerance(tmp_path, reference):
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.S8.speedup", 3.5)] + STAGE_ROWS)
+    assert gate.main([fresh, reference, "--tolerance", "0.25"]) == 0
+
+
+def test_gate_fails_on_regression(tmp_path, reference):
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.S8.speedup", 1.0)] + STAGE_ROWS)
+    assert gate.main([fresh, reference, "--tolerance", "0.25"]) == 1
+
+
+def test_unknown_row_family_warns_not_crashes(tmp_path, reference, capsys):
+    """A fresh run with NEW speedup families (parseable or not) must not
+    crash or fail the gate — the reference simply doesn't know them yet."""
+    fresh = _write(tmp_path, "fresh.json", [
+        _speedup("fleet.S8.speedup", 4.0),
+        _speedup("fleet.newfamily.speedup", 9.0),
+        {"name": "fleet.weird.speedup", "derived": "not a ratio at all"},
+    ] + STAGE_ROWS)
+    assert gate.main([fresh, reference]) == 0
+    err = capsys.readouterr().err
+    assert "fleet.newfamily.speedup" in err and "skipping" in err
+    assert "fleet.weird.speedup" in err
+
+
+def test_known_row_missing_fails(tmp_path, reference):
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.other.speedup", 4.0)] + STAGE_ROWS)
+    assert gate.main([fresh, reference]) == 1
+
+
+def test_known_row_unparseable_fails(tmp_path, reference):
+    fresh = _write(tmp_path, "fresh.json", [
+        {"name": "fleet.S8.speedup", "derived": "garbage"},
+    ] + STAGE_ROWS)
+    assert gate.main([fresh, reference]) == 1
+
+
+def test_empty_reference_fails(tmp_path):
+    ref = _write(tmp_path, "ref.json", [])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.S8.speedup", 4.0)] + STAGE_ROWS)
+    assert gate.main([fresh, ref]) == 1
+
+
+def test_reference_stays_strict(tmp_path):
+    ref = _write(tmp_path, "ref.json",
+                 [{"name": "fleet.S8.speedup", "derived": "corrupt"}])
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.S8.speedup", 4.0)] + STAGE_ROWS)
+    with pytest.raises(SystemExit):
+        gate.main([fresh, ref])
+
+
+def test_spatial_share_cap_still_gates(tmp_path, reference, capsys):
+    fresh = _write(tmp_path, "fresh.json", [
+        _speedup("fleet.S8.speedup", 4.0),
+        {"name": "fleet.S8.stage_spatial", "derived": "share=80.0% of push"},
+        {"name": "fleet.S8.stage_ingest", "derived": "mangled"},
+    ])
+    assert gate.main([fresh, reference, "--max-spatial-share", "0.5"]) == 1
+    err = capsys.readouterr().err
+    assert "fleet.S8.stage_ingest" in err  # mangled stage row only warns
+
+
+def test_missing_spatial_breakdown_fails(tmp_path, reference):
+    fresh = _write(tmp_path, "fresh.json",
+                   [_speedup("fleet.S8.speedup", 4.0)])
+    assert gate.main([fresh, reference]) == 1

@@ -163,9 +163,15 @@ class _FakeDevice:
 def test_derive_tile_env_override(monkeypatch):
     monkeypatch.setenv("REPRO_FLEET_TILE", "128")
     assert fleet_mod.derive_tile(HDCConfig()) == 128
-    monkeypatch.setenv("REPRO_FLEET_TILE", "-1")
-    with pytest.raises(ValueError, match="REPRO_FLEET_TILE"):
-        fleet_mod.derive_tile(HDCConfig())
+    # rejects: garbage, non-integers, non-powers-of-two, out-of-range
+    for bad in ("-1", "abc", "12.5", "100", "32", "8192", "0"):
+        monkeypatch.setenv("REPRO_FLEET_TILE", bad)
+        with pytest.raises(ValueError, match="REPRO_FLEET_TILE"):
+            fleet_mod.derive_tile(HDCConfig())
+    # boundary powers of two pass
+    for ok in ("64", "4096"):
+        monkeypatch.setenv("REPRO_FLEET_TILE", ok)
+        assert fleet_mod.derive_tile(HDCConfig()) == int(ok)
 
 
 def test_derive_tile_cpu_fallback(monkeypatch):
@@ -228,13 +234,16 @@ def test_fleet_tile_constructor_and_env(monkeypatch):
     labels = jnp.asarray([[0, 1, 0, 1], [1, 0, 1, 0]])
     pipe = HDCPipeline.init(jax.random.PRNGKey(0), cfg).train_one_shot(
         codes, labels)
-    monkeypatch.setenv("REPRO_FLEET_TILE", "4")
+    # env tile must be a valid power of two in [64, 4096]; the constructor
+    # tile= is the unvalidated escape hatch for out-of-range experiments
+    monkeypatch.setenv("REPRO_FLEET_TILE", "64")
     f = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 9, buckets=(32,))
-    assert f.n_tiles == 3  # 9 sessions pad to 12 = 3 tiles of env tile 4
+    assert f.n_tiles == 1  # 9 sessions fit one env-sized tile
     monkeypatch.delenv("REPRO_FLEET_TILE")
     g = fleet_mod.StreamingFleet({"p": pipe}, ["p"] * 9, buckets=(32,),
                                  tile=4)
-    assert g.n_tiles == 3
+    assert g.n_tiles == 3  # 9 sessions pad to 12 = 3 tiles of 4
+    # tiling is a layout choice: decisions are bit-exact across tilings
     chunk = rng.integers(0, 64, (32, 8), np.uint8)
     for a, b in zip(f.push([chunk] * 9), g.push([chunk] * 9)):
         assert len(a) == len(b) == 1
