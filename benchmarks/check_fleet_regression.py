@@ -1,4 +1,4 @@
-"""CI perf-regression gate for the fleet benchmark.
+"""CI perf-regression gate for the fleet and cold-start benchmarks.
 
 Compares the ``fleet.*.speedup`` rows of a freshly produced BENCH_fleet.json
 against a committed reference and fails (exit 1) when any matching row's
@@ -20,10 +20,21 @@ datapath's whole point is that the spatial gather+bundle stops dominating
 the step, so a fresh ``stage_spatial`` share above ``--max-spatial-share``
 (default 50% of steady-state push time) fails the gate.
 
+With ``--coldstart-fresh``/``--coldstart-reference`` the same known-row
+speedup machinery additionally gates BENCH_coldstart.json's
+``coldstart.*.speedup`` ratio rows (warm-cache / serialized-executable vs
+process-fresh trace+compile, see bench_coldstart.py), and the run's
+``coldstart.bitexact`` and ``coldstart.fallback`` status rows must start
+with ``ok`` — a fast cold start that changed decisions, or a stale
+artifact that did not fall back to JIT, is a correctness bug, not a perf
+win.
+
 Usage::
 
     python -m benchmarks.check_fleet_regression FRESH.json REFERENCE.json \
-        [--tolerance 0.25] [--max-spatial-share 0.5]
+        [--tolerance 0.25] [--max-spatial-share 0.5] \
+        [--coldstart-fresh BENCH_coldstart.json \
+         --coldstart-reference benchmarks/BENCH_coldstart_tiny.json]
 """
 
 from __future__ import annotations
@@ -36,25 +47,33 @@ import sys
 _SPEEDUP = re.compile(r"^([0-9.]+)x ")
 _SHARE = re.compile(r"^share=([0-9.]+)% ")
 
+# coldstart rows whose derived string must start with "ok"
+COLDSTART_STATUS_ROWS = ("coldstart.bitexact", "coldstart.fallback")
 
-def speedups(path: str, *, strict: bool = True
-             ) -> tuple[dict[str, float], dict[str, dict]]:
-    """``fleet.*.speedup`` rows -> ``({name: speedup}, {name: bad_row})``.
 
-    ``strict`` (the committed reference) raises on an unparseable row;
-    the fresh run parses leniently and returns bad rows separately —
-    whether one fails the gate depends on whether the reference knows it.
-    """
+def _load(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     if payload.get("status") != "ok":
         raise SystemExit(f"{path}: benchmark status is not ok: "
                          f"{payload.get('error')}")
+    return payload
+
+
+def speedups(path: str, *, prefix: str = "fleet.", strict: bool = True
+             ) -> tuple[dict[str, float], dict[str, dict]]:
+    """``<prefix>*.speedup`` rows -> ``({name: speedup}, {name: bad_row})``.
+
+    ``strict`` (the committed reference) raises on an unparseable row;
+    the fresh run parses leniently and returns bad rows separately —
+    whether one fails the gate depends on whether the reference knows it.
+    """
+    payload = _load(path)
     out: dict[str, float] = {}
     bad: dict[str, dict] = {}
     for row in payload.get("rows", []):
         name = row.get("name", "")
-        if not (name.startswith("fleet.") and name.endswith(".speedup")):
+        if not (name.startswith(prefix) and name.endswith(".speedup")):
             continue
         m = _SPEEDUP.match(row.get("derived", ""))
         if not m:
@@ -69,8 +88,7 @@ def speedups(path: str, *, strict: bool = True
 def stage_shares(path: str) -> tuple[dict[str, float], dict[str, dict]]:
     """``fleet.*.stage_*`` rows -> fractional share of steady-state push
     (plus the rows whose derived string did not parse)."""
-    with open(path) as f:
-        payload = json.load(f)
+    payload = _load(path)
     out: dict[str, float] = {}
     bad: dict[str, dict] = {}
     for row in payload.get("rows", []):
@@ -85,26 +103,26 @@ def stage_shares(path: str) -> tuple[dict[str, float], dict[str, dict]]:
     return out, bad
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("fresh", help="BENCH_fleet.json from this run")
-    ap.add_argument("reference", help="committed reference BENCH_fleet.json")
-    ap.add_argument("--tolerance", type=float, default=0.25,
-                    help="allowed fractional regression (default 0.25)")
-    ap.add_argument("--max-spatial-share", type=float, default=0.5,
-                    help="fail when the fresh stage_spatial share of the "
-                         "steady-state push exceeds this (default 0.5)")
-    args = ap.parse_args(argv)
+def status_rows(path: str, names: tuple[str, ...]) -> dict[str, str]:
+    """The derived strings of the named status rows (missing rows absent)."""
+    payload = _load(path)
+    want = set(names)
+    return {row["name"]: row.get("derived", "")
+            for row in payload.get("rows", []) if row.get("name") in want}
 
-    fresh, fresh_bad = speedups(args.fresh, strict=False)
-    ref, _ = speedups(args.reference)
+
+def gate_speedups(fresh_path: str, ref_path: str, *, prefix: str,
+                  tolerance: float) -> list[str]:
+    """Known-row speedup comparison; returns the failed row names."""
+    fresh, fresh_bad = speedups(fresh_path, prefix=prefix, strict=False)
+    ref, _ = speedups(ref_path, prefix=prefix)
     if not ref:
-        print(f"{args.reference}: no fleet.*.speedup rows — the committed "
+        print(f"{ref_path}: no {prefix}*.speedup rows — the committed "
               "reference is empty, the gate would pass vacuously",
               file=sys.stderr)
-        return 1
+        return [f"{prefix}<empty reference>"]
     for name in sorted((set(fresh) | set(fresh_bad)) - set(ref)):
-        print(f"warning: {name}: not in reference {args.reference}; "
+        print(f"warning: {name}: not in reference {ref_path}; "
               "skipping (refresh the committed reference to gate it)",
               file=sys.stderr)
 
@@ -120,12 +138,53 @@ def main(argv: list[str] | None = None) -> int:
                   "-> FAILED")
             failed.append(name)
             continue
-        floor = ref[name] * (1.0 - args.tolerance)
+        floor = ref[name] * (1.0 - tolerance)
         status = "OK" if fresh[name] >= floor else "REGRESSED"
         print(f"{name}: fresh {fresh[name]:.2f}x vs reference "
               f"{ref[name]:.2f}x (floor {floor:.2f}x) -> {status}")
         if fresh[name] < floor:
             failed.append(name)
+    return failed
+
+
+def gate_coldstart_status(fresh_path: str) -> list[str]:
+    """The bitexact/fallback rows must exist and start with "ok"."""
+    failed = []
+    rows = status_rows(fresh_path, COLDSTART_STATUS_ROWS)
+    for name in COLDSTART_STATUS_ROWS:
+        derived = rows.get(name)
+        if derived is None:
+            print(f"{name}: missing from {fresh_path} -> FAILED")
+            failed.append(name)
+            continue
+        ok = derived.startswith("ok")
+        print(f"{name}: {derived} -> {'OK' if ok else 'FAILED'}")
+        if not ok:
+            failed.append(name)
+    return failed
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="BENCH_fleet.json from this run")
+    ap.add_argument("reference", help="committed reference BENCH_fleet.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--max-spatial-share", type=float, default=0.5,
+                    help="fail when the fresh stage_spatial share of the "
+                         "steady-state push exceeds this (default 0.5)")
+    ap.add_argument("--coldstart-fresh", default=None,
+                    help="BENCH_coldstart.json from this run (enables the "
+                         "cold-start ratio + correctness gate)")
+    ap.add_argument("--coldstart-reference", default=None,
+                    help="committed cold-start reference "
+                         "(benchmarks/BENCH_coldstart_tiny.json)")
+    args = ap.parse_args(argv)
+    if (args.coldstart_fresh is None) != (args.coldstart_reference is None):
+        ap.error("--coldstart-fresh and --coldstart-reference go together")
+
+    failed = gate_speedups(args.fresh, args.reference,
+                           prefix="fleet.", tolerance=args.tolerance)
 
     shares, shares_bad = stage_shares(args.fresh)
     for name in sorted(shares_bad):
@@ -145,6 +204,13 @@ def main(argv: list[str] | None = None) -> int:
             if not ok:
                 failed.append(name)
         print(f"{name}: {share:.1%} of steady-state push{note}")
+
+    if args.coldstart_fresh:
+        failed += gate_speedups(args.coldstart_fresh,
+                                args.coldstart_reference,
+                                prefix="coldstart.",
+                                tolerance=args.tolerance)
+        failed += gate_coldstart_status(args.coldstart_fresh)
 
     if failed:
         print(f"fleet perf gate failed: {', '.join(failed)}",

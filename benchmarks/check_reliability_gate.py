@@ -1,0 +1,58 @@
+"""CI correctness gate: fault machinery at BER=0 must be a no-op.
+
+Reads BENCH_reliability.json (bench_reliability.py) and checks every
+degradation-sweep point with ``ber == 0.0``: injecting zero bit errors —
+with or without ECC — must leave fleet decisions bit-exact with the
+unmodified step (the sweep records this as ``zero_ber_bitexact``).  A
+BER=0 point that changes decisions means the fault-injection datapath
+itself perturbs the computation, which would poison every nonzero-BER
+curve built on it.
+
+Fails (exit 1) when any BER=0 point is not bit-exact, and also when NO
+BER=0 points exist — a sweep that silently dropped its control points
+would otherwise pass vacuously.
+
+Usage::
+
+    python -m benchmarks.check_reliability_gate bench-artifacts/BENCH_reliability.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def zero_ber_points(path: str) -> list[dict]:
+    """The ``point`` dicts of all BER=0 sweep rows in the bench JSON."""
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    return [r["point"] for r in rows
+            if r.get("point", {}).get("ber") == 0.0]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json",
+                    help="BENCH_reliability.json from this run")
+    args = ap.parse_args(argv)
+
+    zero = zero_ber_points(args.bench_json)
+    if not zero:
+        print(f"no BER=0 points in {args.bench_json} — the sweep lost its "
+              "control points, gate would pass vacuously", file=sys.stderr)
+        return 1
+
+    bad = [p for p in zero if not p.get("zero_ber_bitexact")]
+    for p in zero:
+        print(f"{p['variant']}/d{p['density']}/{p['scheme']}: "
+              f"bitexact={p['zero_ber_bitexact']}")
+    if bad:
+        print(f"{len(bad)} BER=0 point(s) not bit-exact", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,7 @@ uploads these as artifacts, so the perf trajectory accumulates).
   fleet       StreamingFleet vs looped-session serving  (framework)
   online      one-shot vs iterative/online retraining   (framework)
   reliability BER degradation curves + AM ECC tradeoff  (framework)
+  coldstart   fresh-JIT vs warm-cache vs serialized AOT (framework)
   roofline    aggregated dry-run roofline terms          (framework)
 
 A module that raises still prints a ``<mod>.ERROR`` CSV row (so partial runs
@@ -29,7 +30,7 @@ import traceback
 from benchmarks.common import emit, write_bench_json
 
 DEFAULT_MODULES = ["fig1c", "fig4", "fig5", "table1", "throughput", "fleet",
-                   "online", "reliability", "roofline"]
+                   "online", "reliability", "coldstart", "roofline"]
 
 
 def main(argv: list[str] | None = None) -> int:

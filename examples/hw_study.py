@@ -6,7 +6,13 @@ paper-style breakdowns and ratios, plus the density-hyperparameter trade-off
 on one patient.  Functional datapaths come from the unified `HDCPipeline`.
 
     PYTHONPATH=src python examples/hw_study.py
+
+REPRO_EXAMPLES_TINY=1 (CI smoke) shortens the calibration traces and the
+density sweep so the study finishes in seconds; the printed ratios are then
+smoke-test output, not study results.
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +22,8 @@ from repro.core import hwmodel, metrics
 from repro.core.pipeline import HDCConfig, HDCPipeline
 from repro.data import ieeg
 
+TINY = os.environ.get("REPRO_EXAMPLES_TINY", "") == "1"
+
 
 def main():
     # variant="sparse_naive" precomputes the packed IM tables, which the
@@ -24,7 +32,8 @@ def main():
     cfg = HDCConfig(variant="sparse_naive", spatial_threshold=1)
     pipe = HDCPipeline.init(jax.random.PRNGKey(42), cfg)
     dense_pipe = HDCPipeline.init(jax.random.PRNGKey(7), HDCConfig(variant="dense"))
-    codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:2048])
+    n_codes = 512 if TINY else 2048
+    codes = jnp.asarray(ieeg.make_patient(11, n_seizures=1).records[0].codes[:n_codes])
 
     es, asc = hwmodel.calibration_factors(pipe.params, codes, cfg)
     print("== energy/area across design points (16nm model, calibrated to "
@@ -49,13 +58,13 @@ def main():
           f"A {dn['area_total_mm2'] / so['area_total_mm2']:.2f}x  (paper 7.50x/3.24x)")
 
     print("\n== max-density hyperparameter (patient 11) ==")
-    pat = ieeg.make_patient(11, n_seizures=3)
+    pat = ieeg.make_patient(11, n_seizures=2 if TINY else 3)
     rec = pat.records[0]
     c = jnp.asarray(rec.codes[None])
     labels = jnp.asarray(ieeg.frame_labels(rec, cfg.window)[None])
     # the detection sweep runs the (fast) CompIM datapath — same params
     sweep_pipe = pipe.with_cfg(variant="sparse_compim")
-    for target in (0.1, 0.2, 0.3, 0.5):
+    for target in ((0.2,) if TINY else (0.1, 0.2, 0.3, 0.5)):
         ppipe = sweep_pipe.calibrate_density(c, target).train_one_shot(c, labels)
         rs = []
         for rec2 in pat.records[1:]:

@@ -13,16 +13,25 @@ walked via the traced operand — no recompiles along a curve):
      faulty cells persist instead of resampling every read.
 
     PYTHONPATH=src python examples/reliability_study.py
+
+REPRO_EXAMPLES_TINY=1 (CI smoke) shrinks the sweep grid so the study
+finishes in seconds; the printed numbers are then smoke-test output, not
+study results.
 """
 
-import numpy as np
+import os
 
 from repro.core.classifier import HDCConfig
 from repro.reliability import ecc, sweep
 
-CFG = HDCConfig(dim=256, segments=8, window=128)
-REC = dict(pre_s=12.0, ictal_s=16.0, post_s=6.0)
-BERS = (0.0, 1e-3, 3e-3, 1e-2, 3e-2)
+TINY = os.environ.get("REPRO_EXAMPLES_TINY", "") == "1"
+
+CFG = HDCConfig(dim=256, segments=8, window=64 if TINY else 128)
+REC = (dict(pre_s=6.0, ictal_s=8.0, post_s=3.0) if TINY
+       else dict(pre_s=12.0, ictal_s=16.0, post_s=6.0))
+BERS = (0.0, 1e-2) if TINY else (0.0, 1e-3, 3e-3, 1e-2, 3e-2)
+N_PATIENTS = 1 if TINY else 3
+N_TEST = 1 if TINY else 2
 
 
 def _curve(points, keys):
@@ -36,7 +45,7 @@ def main():
     print("== 1. degradation curves (sparse_opt, all targets faulted) ==")
     pts = sweep.run_sweep(
         variants=("sparse_opt",), densities=(0.25,), bers=BERS,
-        schemes=("none",), base_cfg=CFG, n_patients=3, n_test=2,
+        schemes=("none",), base_cfg=CFG, n_patients=N_PATIENTS, n_test=N_TEST,
         record_kw=REC, seed=0)
     assert all(p["zero_ber_bitexact"] for p in pts if p["ber"] == 0.0)
     print("  (BER=0 verified bit-exact against the fault-free fleet)")
@@ -48,7 +57,7 @@ def main():
         pts = sweep.run_sweep(
             variants=("sparse_opt",), densities=(0.25,), bers=BERS[:4],
             schemes=(scheme,), targets=("am",), base_cfg=CFG,
-            n_patients=3, n_test=2, record_kw=REC, seed=1)
+            n_patients=N_PATIENTS, n_test=N_TEST, record_kw=REC, seed=1)
         nj = ecc.read_energy_nj(scheme, CFG.n_classes, CFG.words)
         ovh = ecc.read_overhead(scheme, CFG.n_classes, CFG.words)
         print(f" {scheme}: decode {nj * 1e3:.3f} pJ/AM-read "
@@ -61,7 +70,7 @@ def main():
         pts = sweep.run_sweep(
             variants=("sparse_opt",), densities=(0.25,), bers=(1e-2,),
             schemes=("none",), targets=("am",), mode=mode, base_cfg=CFG,
-            n_patients=3, n_test=2, record_kw=REC, seed=2)
+            n_patients=N_PATIENTS, n_test=N_TEST, record_kw=REC, seed=2)
         p = pts[0]
         print(f"  {mode:<9s} acc={p['detection_accuracy']:.2f} "
               f"delay_s={p['mean_delay_s']:.2f} "

@@ -55,14 +55,23 @@ def _flatten(tree: Any):
     return out
 
 
-def save(root: str, step: int, tree: Any, meta: dict | None = None) -> str:
-    """Synchronous atomic save. Returns the final directory."""
+def save(root: str, step: int, tree: Any, meta: dict | None = None,
+         aot: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the final directory.
+
+    ``aot`` (optional): ``{"path": <artifact dir>, "key": runtime/aot.py's
+    ``artifact_key()``}`` — a validity pointer from this checkpoint to the
+    serialized-executable deploy artifact its producer compiled against.
+    Consumers (``StreamingFleet.from_artifact``) compare the key with the
+    running environment and fall back to JIT warmup when it is stale."""
     final = os.path.join(root, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": [], "meta": meta or {}}
+    if aot is not None:
+        manifest["aot"] = aot
     for i, (key, leaf) in enumerate(_flatten(tree)):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"arr_{i:05d}.npy"
@@ -90,12 +99,13 @@ class AsyncCheckpointer:
             self._thread.join()
             self._thread = None
 
-    def save_async(self, step: int, tree: Any, meta: dict | None = None):
+    def save_async(self, step: int, tree: Any, meta: dict | None = None,
+                   aot: dict | None = None):
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _write():
-            save(self.root, step, host_tree, meta)
+            save(self.root, step, host_tree, meta, aot=aot)
             _gc(self.root, self.keep)
 
         self._thread = threading.Thread(target=_write, daemon=True)

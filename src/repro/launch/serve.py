@@ -8,6 +8,17 @@ HDC streaming fleet (population-scale seizure detection):
   PYTHONPATH=src python -m repro.launch.serve --hdc-fleet \
       --sessions 256 --patients 8 --rounds 4
 
+Deploy flow — compile once, serve many (runtime/aot.py): `compile` writes a
+versioned artifact of serialized pre-compiled step executables; every later
+`serve --aot-dir` warms the fleet from it and the first decision costs
+milliseconds of deserialization instead of seconds of trace+compile (a
+stale artifact — different jax version / device kind / kernel sources —
+falls back to JIT with a warning):
+  PYTHONPATH=src python -m repro.launch.serve compile --aot-dir /tmp/aot \
+      --sessions 256 --patients 8
+  PYTHONPATH=src python -m repro.launch.serve --hdc-fleet --aot-dir /tmp/aot \
+      --sessions 256 --patients 8 --rounds 4
+
 Durable adaptive fleet: --adapt-every N personalizes every session's AM via
 one jitted fleet-wide online update each N rounds; --ckpt-dir saves the full
 fleet state (streaming accumulators + online AM banks) after the run and
@@ -34,8 +45,8 @@ import jax.numpy as jnp
 from repro.launch.train import parse_mesh
 
 
-def run_hdc_fleet(args) -> None:
-    """Train a small per-patient bank, then stream a sharded fleet."""
+def _build_hdc_fleet(args):
+    """Train a small synthetic per-patient bank and assemble the fleet."""
     import numpy as np
 
     from repro.core.pipeline import HDCConfig, HDCPipeline
@@ -62,11 +73,51 @@ def run_hdc_fleet(args) -> None:
     print(f"fleet: {args.sessions} sessions over {args.patients} patients "
           f"({'mesh ' + 'x'.join(map(str, mesh.devices.shape)) if mesh else 'single device'}), "
           f"built in {time.perf_counter() - t0:.1f} s")
+    return fleet, cfg, rng, mesh
+
+
+def run_hdc_compile(args) -> None:
+    """``compile`` subcommand: serialize + pre-compile the fleet's whole
+    executable set into the --aot-dir deploy artifact (runtime/aot.py), so
+    ``serve --aot-dir <dir>`` workers start without paying trace+compile."""
+    if not args.aot_dir:
+        raise SystemExit("compile mode needs --aot-dir <artifact directory>")
+    fleet, _, _, mesh = _build_hdc_fleet(args)
+    if mesh is not None:
+        raise SystemExit("compile mode serializes single-device executables; "
+                         "drop --mesh")
+    t0 = time.perf_counter()
+    manifest = fleet.save_aot(args.aot_dir)
+    dt = time.perf_counter() - t0
+    print(f"AOT artifact -> {args.aot_dir}: {len(manifest['entries'])} "
+          f"executables in {dt:.1f} s (key: {manifest['key']})")
+    for e in manifest["entries"]:
+        print(f"  {e['name']}  exported={e['exported']} "
+              f"compile={e['compile_s']:.2f}s")
+
+
+def run_hdc_fleet(args) -> None:
+    """Stream a (possibly sharded) fleet; --aot-dir warms it from a deploy
+    artifact first."""
+    import numpy as np
+
+    fleet, cfg, rng, _ = _build_hdc_fleet(args)
+
+    t0 = time.perf_counter()
+    if args.aot_dir:
+        from repro.runtime import aot as aot_mod
+
+        art = aot_mod.load_artifact(args.aot_dir)  # None (+warning) if stale
+        stats = fleet.warmup(aot=art)
+        print(f"warmup from {args.aot_dir}: {stats['loaded']} loaded, "
+              f"{stats['compiled']} compiled in "
+              f"{time.perf_counter() - t0:.2f} s"
+              + ("" if art is not None else "  [stale artifact: JIT]"))
 
     chunk_len = args.chunk or cfg.window
     chunks = [rng.integers(0, cfg.codes, (chunk_len, cfg.channels), np.uint8)
               for _ in range(args.sessions)]
-    fleet.push(chunks)  # warmup / compile
+    fleet.push(chunks)  # warmup / compile (no-op compile when AOT-warmed)
 
     # restore AFTER the warmup push: restore overwrites the fleet state, so
     # the warmup round never leaks into the resumed stream (which would
@@ -164,6 +215,10 @@ def run_lm(args) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("command", nargs="?", default="serve",
+                    choices=["serve", "compile"],
+                    help="serve (default) or compile: build the --aot-dir "
+                         "deploy artifact for the HDC fleet and exit")
     ap.add_argument("--arch", default=None, help="LM zoo architecture to serve")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
@@ -188,7 +243,14 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint from --ckpt-dir "
                          "before streaming")
+    ap.add_argument("--aot-dir", default=None,
+                    help="deploy-artifact directory of serialized executables"
+                         " (runtime/aot.py): `compile` writes it, `serve` "
+                         "warms the fleet from it")
     args = ap.parse_args()
+    if args.command == "compile":
+        run_hdc_compile(args)
+        return
     if args.hdc_fleet:
         run_hdc_fleet(args)
         return

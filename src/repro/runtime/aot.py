@@ -1,0 +1,526 @@
+"""Ahead-of-time compilation: serialized fleet/engine executables + cache.
+
+Every bucket shape of the serving step pays ~0.8-1.9 s of trace+compile on
+its first push (the ``fleet.S*.fleet_compile`` rows in BENCH_fleet.json), so
+a restarted or autoscaled worker stalls its whole tile set before emitting
+its first decision.  This module kills that cold-start tax with two stacked
+mechanisms, both exercised by ``benchmarks/bench_coldstart.py``:
+
+* **Serialized XLA executables** (``jax.experimental.serialize_executable``
+  over the donation-free export-wrapped program).  ``save_artifact``
+  enumerates the executable set of a fleet/engine (every variant x backend
+  x bucket x tile shape, including the faulted and adapt steps — the
+  producers declare their own set via ``StreamingFleet.aot_entries()`` /
+  ``ServingEngine.aot_entries()``), compiles each and ships the PjRt
+  executable itself (``entries/*.xlaexec``).  A worker that loads the
+  artifact skips BOTH Python tracing and XLA compilation:
+  ``AOTArtifact.compile`` unpickles and loads the binary — milliseconds.
+* **Serialized StableHLO** (``jax.export``, ``entries/*.jaxexport``).  The
+  portable middle tier: when the executable is absent, signature-mismatched
+  or unloadable on this backend, the exported program is deserialized and
+  recompiled — tracing is still skipped, XLA compile is paid once.
+* **Persistent compilation cache.**  ``save_artifact`` also pre-COMPILES
+  every entry with JAX's persistent compilation cache pointed into the
+  artifact (``<dir>/xla_cache``), so the XLA executables themselves ship
+  with it.  The cache serves plain-JIT restarts: point
+  ``compilation_cache(<dir>/xla_cache)`` (or ``load_artifact(...,
+  enable_cache=True)``) at it and a re-trace's compile becomes a disk hit
+  instead of an XLA compile.  CI persists the same directory across
+  Cache use is opt-in and must stay scoped: jaxlib 0.4.3x's persistent
+  cache corrupts the heap (glibc abort / segfault) when enabled around the
+  donated fleet-step program — on cache WRITES as well as hits — so
+  nothing in this module leaves the cache enabled implicitly, and CI jobs
+  set no ``JAX_COMPILATION_CACHE_DIR`` (the executable tiers above are
+  unaffected: they never touch the cache).
+
+Artifacts are **versioned**: the manifest records ``artifact_key()`` — the
+jax version, the device kind, and a hash of the kernel/serving sources
+(``kernel_fingerprint``).  ``load_artifact`` compares that key against the
+running environment and returns ``None`` on any mismatch (with a warning),
+so consumers fall back to plain JIT instead of running stale executables;
+``ckpt/checkpoint.py`` records the same key in its manifest ``aot`` entry,
+giving checkpoints a validity pointer to their executables
+(``StreamingFleet.from_artifact`` threads it back through here).
+
+Layout of one artifact directory::
+
+    <dir>/manifest.json         {"version", "key", "entries": [...]}
+    <dir>/entries/e_00000.xlaexec   pickled PjRt executable + arg/out trees
+    <dir>/entries/e_00000.jaxexport serialized StableHLO (jax.export)
+    <dir>/xla_cache/...         persistent-compilation-cache files
+
+Everything degrades gracefully: a missing directory, an unreadable blob, a
+stale key, or a jax build without ``jax.export`` serialization all fall back
+to JIT — AOT is an optimization, never a correctness dependency (the AOT and
+JIT paths are bit-exact; tests/test_aot.py pins this per variant/backend).
+"""
+
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+import pickle
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+try:  # jax.export with pytree serialization (>= 0.4.36); degrade without it
+    from jax import export as _jax_export
+
+    _HAVE_EXPORT = hasattr(_jax_export, "register_pytree_node_serialization")
+except Exception:  # pragma: no cover - import-level environment guard
+    _jax_export = None
+    _HAVE_EXPORT = False
+
+try:  # PjRt compiled-executable pickling; degrade to StableHLO + recompile
+    from jax.experimental import serialize_executable as _jax_se
+
+    _HAVE_EXEC = hasattr(_jax_se, "deserialize_and_load")
+except Exception:  # pragma: no cover - import-level environment guard
+    _jax_se = None
+    _HAVE_EXEC = False
+
+MANIFEST = "manifest.json"
+ENTRY_DIR = "entries"
+XLA_CACHE_DIR = "xla_cache"
+ARTIFACT_VERSION = 1
+
+# the sources whose edits change the serving programs: the kernels, the
+# serving layers that assemble them into the jitted step, and the core
+# primitives they call.  Anything else (benchmarks, launchers, models/)
+# cannot change an executable, so it does not invalidate artifacts.
+_FINGERPRINT_SUBDIRS = ("kernels", "serve", "core", "reliability", "runtime")
+
+
+def _repro_root() -> str:
+    import repro
+
+    if getattr(repro, "__file__", None):  # regular package
+        return os.path.dirname(os.path.abspath(repro.__file__))
+    return os.path.abspath(list(repro.__path__)[0])  # namespace package
+
+
+def kernel_fingerprint(root: str | None = None) -> str:
+    """Digest of the kernel/serving sources that determine the compiled
+    programs (sorted relpath + bytes of every ``.py`` under
+    ``_FINGERPRINT_SUBDIRS``).  Part of ``artifact_key``: an edited kernel
+    invalidates every serialized executable."""
+    root = root or _repro_root()
+    h = hashlib.sha256()
+    for sub in _FINGERPRINT_SUBDIRS:
+        pat = os.path.join(root, sub, "**", "*.py")
+        for path in sorted(glob.glob(pat, recursive=True)):
+            h.update(os.path.relpath(path, root).encode())
+            with open(path, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def device_kind(device=None) -> str:
+    d = device if device is not None else jax.local_devices()[0]
+    return f"{d.platform}:{d.device_kind}"
+
+
+def artifact_key(*, device=None, root: str | None = None) -> dict:
+    """The validity key an artifact is pinned to: serialized executables are
+    only safe to reuse under the same jax version, on the same device kind,
+    with unchanged kernel sources."""
+    return {
+        "jax": jax.__version__,
+        "device": device_kind(device),
+        "kernels": kernel_fingerprint(root),
+    }
+
+
+def register_pytree_serialization(cls: type, name: str) -> bool:
+    """Register a (meta-field-free) dataclass pytree for ``jax.export``
+    serialization; idempotent, False when export serialization is
+    unavailable.  Producers call this next to their
+    ``register_dataclass`` so their state types can cross the export
+    boundary."""
+    if not _HAVE_EXPORT:
+        return False
+    try:
+        _jax_export.register_pytree_node_serialization(
+            cls,
+            serialized_name=name,
+            serialize_auxdata=lambda aux: b"",
+            deserialize_auxdata=lambda b: (),
+        )
+    except ValueError:  # already registered (idempotent re-import)
+        pass
+    return True
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache plumbing
+# ---------------------------------------------------------------------------
+
+
+def _reset_cache_state() -> None:
+    # jax initializes the persistent cache AT MOST ONCE per process, at the
+    # first compile — a dir configured after that (the usual case here:
+    # training compiles run long before an artifact is saved/loaded) would
+    # silently never take effect.  reset_cache() returns the module to its
+    # uninitialized state so the next compile picks up the new dir.
+    try:
+        from jax.experimental.compilation_cache import compilation_cache as cc
+
+        cc.reset_cache()
+    except Exception:  # pragma: no cover - private-ish API moved/absent
+        pass
+
+
+def enable_compilation_cache(path: str) -> None:
+    """Point JAX's persistent compilation cache at ``path`` (created if
+    missing) with thresholds at zero, so every serving executable persists.
+    Process-global, like the cache itself."""
+    os.makedirs(path, exist_ok=True)
+    _reset_cache_state()
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    try:
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:  # older jax: size threshold flag absent
+        pass
+
+
+def disable_compilation_cache() -> None:
+    _reset_cache_state()
+    jax.config.update("jax_compilation_cache_dir", None)
+
+
+def compilation_cache_dir() -> str | None:
+    return jax.config.jax_compilation_cache_dir
+
+
+class compilation_cache:
+    """Context manager: run a block under (or explicitly without) the
+    persistent compilation cache, restoring the previous setting after —
+    the cold-start benchmark uses this to measure a genuinely cache-free
+    fresh JIT inside a process whose CI environment has the cache on."""
+
+    def __init__(self, path: str | None):
+        self._path = path
+        self._prev: str | None = None
+
+    def __enter__(self):
+        self._prev = compilation_cache_dir()
+        if self._path is None:
+            disable_compilation_cache()
+        else:
+            enable_compilation_cache(self._path)
+        return self
+
+    def __exit__(self, *exc):
+        if self._prev is None:
+            disable_compilation_cache()
+        else:
+            enable_compilation_cache(self._prev)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# artifact build / load
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AOTEntry:
+    """One executable to ahead-of-time compile: a jitted callable plus the
+    abstract (ShapeDtypeStruct pytree) arguments of ONE input signature.
+    ``static`` holds trailing ``static_argnames``-style concrete values the
+    jit needs at trace time; they are baked into the exported program, so
+    loaders call the compiled entry with ``args`` only.
+
+    ``cache_args``, when set, is a second signature to pre-compile into the
+    persistent cache ONLY (not exported): device-PINNED avals hash to a
+    different cache key than the portable ``args`` form, and a plain-JIT
+    restart that merely shares the cache directory compiles the pinned form
+    (its operands are committed to their tile device)."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    static: tuple = ()
+    cache_args: tuple | None = None
+
+
+def _aval_tree(x: Any) -> Any:
+    return jax.tree.map(
+        lambda a: a
+        if isinstance(a, jax.ShapeDtypeStruct) or not hasattr(a, "shape")
+        else jax.ShapeDtypeStruct(a.shape, a.dtype),
+        x,
+    )
+
+
+def save_artifact(
+    path: str,
+    entries: Sequence[AOTEntry],
+    *,
+    key: dict | None = None,
+) -> dict:
+    """Compile + serialize ``entries`` into a deploy artifact at ``path``.
+
+    For every entry this (1) exports + serializes the lowered StableHLO to
+    ``entries/e_<i>.jaxexport``, (2) pickles the compiled PjRt executable of
+    the donation-free export-wrapped program to ``entries/e_<i>.xlaexec``
+    (the tier the load path prefers: no tracing, no XLA compile), and
+    (3) compiles BOTH the export-wrapped and the plain-jit form of the
+    program with the persistent compilation cache pointed into the
+    artifact, for plain-JIT restarts that merely share the cache directory.
+    Returns the manifest dict.
+
+    Entries whose export fails (e.g. a jax build without export
+    serialization) are still cache-compiled and recorded with
+    ``"exported": false`` — the load path then JIT-compiles them against
+    the shipped cache, which is the graceful middle tier.
+    """
+    os.makedirs(os.path.join(path, ENTRY_DIR), exist_ok=True)
+    manifest: dict = {
+        "version": ARTIFACT_VERSION,
+        "key": key or artifact_key(),
+        "entries": [],
+    }
+    names = set()
+    with compilation_cache(os.path.join(path, XLA_CACHE_DIR)):
+        for i, e in enumerate(entries):
+            if e.name in names:
+                raise ValueError(f"duplicate AOT entry name {e.name!r}")
+            names.add(e.name)
+            rec = {"name": e.name, "file": None, "exported": False}
+            t0 = time.perf_counter()
+            # plain-jit compile: populates the cache for workers that JIT
+            # with the shared cache dir but never load the blobs
+            e.fn.lower(*e.args, *e.static).compile()
+            if e.cache_args is not None:
+                e.fn.lower(*e.cache_args, *e.static).compile()
+            blob = None
+            if _HAVE_EXPORT:
+                try:
+                    blob = _jax_export.export(e.fn)(
+                        *e.args, *e.static).serialize()
+                except Exception as ex:  # unexportable program: cache-only
+                    warnings.warn(
+                        f"AOT entry {e.name!r}: export failed "
+                        f"({type(ex).__name__}: {ex}); shipping "
+                        "compilation-cache entry only",
+                        stacklevel=2,
+                    )
+            if blob is not None:
+                fname = f"e_{i:05d}.jaxexport"
+                with open(os.path.join(path, ENTRY_DIR, fname), "wb") as f:
+                    f.write(blob)
+                rec["file"] = fname
+                rec["exported"] = True
+                # the load path compiles the DESERIALIZED program, whose
+                # cache key differs from the plain jit's — pre-compile that
+                # form too so loads are pure cache hits
+                compiled = _compile_exported(
+                    _jax_export.deserialize(blob), e.args)
+                # ship the XLA executable itself (the load path then skips
+                # XLA entirely).  This is the donation-free export-wrapped
+                # form — exactly what the load path would have compiled
+                exec_blob = _serialize_executable(e.name, compiled)
+                if exec_blob is not None:
+                    xname = f"e_{i:05d}.xlaexec"
+                    with open(os.path.join(path, ENTRY_DIR, xname),
+                              "wb") as f:
+                        f.write(exec_blob)
+                    rec["executable"] = xname
+            rec["compile_s"] = round(time.perf_counter() - t0, 4)
+            manifest["entries"].append(rec)
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+def _compile_exported(exported, args: tuple):
+    """Lower+compile a deserialized export under the active cache config."""
+    return jax.jit(exported.call).lower(*_aval_tree(args)).compile()
+
+
+def _serialize_executable(name: str, compiled) -> bytes | None:
+    """Pickle a ``jax.stages.Compiled`` (PjRt executable + arg/out trees);
+    None when this jax/backend cannot serialize executables."""
+    if not _HAVE_EXEC:
+        return None
+    try:
+        blob, in_tree, out_tree = _jax_se.serialize(compiled)
+        return pickle.dumps((blob, in_tree, out_tree))
+    except Exception as ex:
+        warnings.warn(
+            f"AOT entry {name!r}: executable serialization failed "
+            f"({type(ex).__name__}: {ex}); shipping StableHLO only",
+            stacklevel=2,
+        )
+        return None
+
+
+def _signature_matches(compiled, args: tuple) -> bool:
+    """Shape/dtype agreement between a loaded executable's baked input
+    signature and the avals a caller wants it for."""
+    try:
+        have = jax.tree_util.tree_leaves(compiled.args_info)
+        want = jax.tree_util.tree_leaves(_aval_tree(args))
+        return len(have) == len(want) and all(
+            tuple(h.shape) == tuple(w.shape)
+            and np.dtype(h.dtype) == np.dtype(w.dtype)
+            for h, w in zip(have, want)
+        )
+    except Exception:  # malformed args_info: treat as a miss, not an error
+        return False
+
+
+class AOTArtifact:
+    """A loaded (key-validated) deploy artifact.
+
+    ``compile(name, *args)`` returns the ready-to-call compiled executable
+    for one entry — the shipped PjRt executable when one matches (no
+    tracing, no XLA compile), else a recompile of the serialized StableHLO
+    (no tracing) — or ``None`` when the entry is missing or unloadable
+    (callers fall back to JIT).
+    """
+
+    def __init__(self, path: str, manifest: dict):
+        self.path = path
+        self.manifest = manifest
+        self._by_name = {e["name"]: e for e in manifest["entries"]}
+
+    @property
+    def key(self) -> dict:
+        return self.manifest["key"]
+
+    @property
+    def names(self) -> list[str]:
+        return [e["name"] for e in self.manifest["entries"]]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def load_exported(self, name: str):
+        """The deserialized ``jax.export.Exported`` for one entry (None when
+        absent/unavailable)."""
+        rec = self._by_name.get(name)
+        if rec is None or not rec.get("exported") or not _HAVE_EXPORT:
+            return None
+        try:
+            with open(os.path.join(self.path, ENTRY_DIR, rec["file"]),
+                      "rb") as f:
+                return _jax_export.deserialize(f.read())
+        except Exception as ex:
+            warnings.warn(
+                f"AOT entry {name!r}: failed to deserialize "
+                f"({type(ex).__name__}: {ex}); falling back to JIT",
+                stacklevel=2,
+            )
+            return None
+
+    def load_executable(self, name: str, args: tuple | None = None):
+        """The shipped XLA executable for one entry as a ready-to-call
+        ``jax.stages.Compiled`` — no tracing, no XLA compile.  None when the
+        entry ships no executable, this backend cannot load one, or ``args``
+        disagree with the baked input signature (the caller then takes the
+        StableHLO-recompile tier)."""
+        rec = self._by_name.get(name)
+        if rec is None or not rec.get("executable") or not _HAVE_EXEC:
+            return None
+        try:
+            with open(os.path.join(self.path, ENTRY_DIR,
+                                   rec["executable"]), "rb") as f:
+                blob, in_tree, out_tree = pickle.load(f)
+            loaded = _jax_se.deserialize_and_load(blob, in_tree, out_tree)
+        except Exception as ex:
+            warnings.warn(
+                f"AOT entry {name!r}: executable load failed "
+                f"({type(ex).__name__}: {ex}); recompiling from StableHLO",
+                stacklevel=2,
+            )
+            return None
+        if args is not None and not _signature_matches(loaded, args):
+            return None
+        return loaded
+
+    def compile(self, name: str, *args):
+        """Compiled executable for entry ``name`` at the given abstract
+        args, or None (caller JIT-compiles instead).  Prefers the shipped
+        XLA executable; recompiles the serialized StableHLO when the
+        executable is absent or signature-mismatched."""
+        loaded = self.load_executable(name, args)
+        if loaded is not None:
+            return loaded
+        exported = self.load_exported(name)
+        if exported is None:
+            return None
+        try:
+            return _compile_exported(exported, args)
+        except Exception as ex:
+            warnings.warn(
+                f"AOT entry {name!r}: compile of deserialized executable "
+                f"failed ({type(ex).__name__}: {ex}); falling back to JIT",
+                stacklevel=2,
+            )
+            return None
+
+
+def stale_fields(saved: dict, current: dict) -> dict:
+    """``{field: (saved, current)}`` for every artifact-key field that
+    disagrees — empty means the artifact is valid here."""
+    return {
+        k: (saved.get(k), current[k])
+        for k in current
+        if saved.get(k) != current[k]
+    }
+
+
+def load_artifact(
+    path: str,
+    *,
+    expected_key: dict | None = None,
+    enable_cache: bool = False,
+) -> AOTArtifact | None:
+    """Load + key-validate a deploy artifact; ``None`` (with a warning) on
+    any mismatch or unreadable manifest — the graceful-JIT-fallback
+    contract.
+
+    ``enable_cache=True`` additionally turns on the artifact's persistent
+    XLA compilation cache *globally* for the rest of the process, so that
+    re-traces of covered programs become cache hits.  It is off by
+    default: warmed workers deserialize their executables from the
+    ``jax.export`` blobs and never need the cache, and cache-HIT
+    recompiles of the large fleet-step program segfault jaxlib 0.4.3x on
+    CPU.  Prefer scoping cache use explicitly with the
+    ``compilation_cache(...)`` context manager."""
+    manifest_path = os.path.join(path, MANIFEST)
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as ex:
+        warnings.warn(
+            f"AOT artifact {path!r}: unreadable manifest "
+            f"({type(ex).__name__}: {ex}); falling back to JIT",
+            stacklevel=2,
+        )
+        return None
+    current = expected_key or artifact_key()
+    bad = stale_fields(manifest.get("key", {}), current)
+    if bad:
+        warnings.warn(
+            f"AOT artifact {path!r} is stale: "
+            + ", ".join(f"{k}: saved {s!r} != current {c!r}"
+                        for k, (s, c) in sorted(bad.items()))
+            + "; falling back to JIT",
+            stacklevel=2,
+        )
+        return None
+    if enable_cache:
+        enable_compilation_cache(os.path.join(path, XLA_CACHE_DIR))
+    return AOTArtifact(path, manifest)

@@ -36,6 +36,7 @@ changes the encoder datapath may not.
 from __future__ import annotations
 
 import functools
+import hashlib
 from dataclasses import dataclass
 from typing import Hashable, Mapping, Sequence
 
@@ -45,6 +46,7 @@ import numpy as np
 
 from repro.core import am, hv, online
 from repro.core.pipeline import HDCConfig, HDCPipeline, _scores, spatial_encode
+from repro.runtime import aot as aot_mod
 from repro.serve import dispatch
 
 
@@ -123,10 +125,90 @@ class ServingEngine:
         self._bank = jnp.stack([p.class_hvs for p in pipes])      # (P, C, W)
         self._thresholds = np.asarray(
             [p.cfg.temporal_threshold for p in pipes], np.int32)
+        # AOT executables (runtime/aot.py): ``prewarm`` fills these with
+        # pre-compiled dispatches keyed by (padded batch, T); ``serve``
+        # prefers them and falls back to the jitted dispatch
+        self._exec: dict[tuple[int, int], jax.stages.Compiled] = {}
 
     @property
     def patient_ids(self) -> list:
         return list(self._pids)
+
+    @property
+    def aot_count(self) -> int:
+        """Dispatch executables installed by ``prewarm`` (the jit cache
+        stays cold when these serve)."""
+        return len(self._exec)
+
+    # -- ahead-of-time compilation (runtime/aot.py) ---------------------------
+
+    def _aot_sig(self) -> str:
+        h = hashlib.sha256()
+        h.update(repr(self._cfg).encode())
+        h.update(str(tuple(jnp.shape(self._tables))).encode())
+        h.update(str(tuple(jnp.shape(self._bank))).encode())
+        h.update(str(bool(jax.config.jax_enable_x64)).encode())
+        return h.hexdigest()[:10]
+
+    def _aot_name(self, b_pad: int, t: int) -> str:
+        return f"engine.{self._cfg.variant}.b{b_pad}.t{t}.{self._aot_sig()}"
+
+    def _dispatch_avals(self, b_pad: int, t: int) -> tuple:
+        def sds(x):
+            return jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype)
+
+        return (
+            sds(self._tables),
+            sds(self._bank),
+            jax.ShapeDtypeStruct((b_pad,), self._param_rows.dtype),
+            jax.ShapeDtypeStruct((b_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad,), self._thresholds.dtype),
+            jax.ShapeDtypeStruct((b_pad, t, self._cfg.channels), jnp.uint8),
+        )
+
+    @staticmethod
+    def _pow2_buckets(max_batch: int) -> list[int]:
+        top = 1 << (max(1, int(max_batch)) - 1).bit_length()
+        return [1 << i for i in range(top.bit_length())]
+
+    def aot_entries(self, batch_sizes: Sequence[int], t: int
+                    ) -> list[aot_mod.AOTEntry]:
+        """AOT entries for this engine's dispatch at the power-of-two batch
+        buckets covering ``batch_sizes`` and request length ``t`` (cfg rides
+        along as the jit's static argument)."""
+        buckets = sorted({1 << (max(1, int(b)) - 1).bit_length()
+                          for b in batch_sizes})
+        return [aot_mod.AOTEntry(
+                    name=self._aot_name(b, t),
+                    fn=_serve_dispatch,
+                    args=self._dispatch_avals(b, t),
+                    static=(self._cfg,))
+                for b in buckets]
+
+    def prewarm(self, max_batch: int, t: int,
+                *, aot: aot_mod.AOTArtifact | None = None) -> dict[str, int]:
+        """Build the dispatch executable for every power-of-two batch bucket
+        up to ``max_batch`` (request length ``t``) before traffic arrives —
+        loaded from a deploy artifact when one is given, pre-lowered and
+        compiled otherwise.  Returns {"loaded", "compiled", "skipped"}."""
+        stats = {"loaded": 0, "compiled": 0, "skipped": 0}
+        for b_pad in self._pow2_buckets(max_batch):
+            key = (b_pad, t)
+            if key in self._exec:
+                stats["skipped"] += 1
+                continue
+            compiled = None
+            if aot is not None:
+                compiled = aot.compile(self._aot_name(b_pad, t),
+                                       *self._dispatch_avals(b_pad, t))
+                if compiled is not None:
+                    stats["loaded"] += 1
+            if compiled is None:
+                compiled = _serve_dispatch.lower(
+                    *self._dispatch_avals(b_pad, t), self._cfg).compile()
+                stats["compiled"] += 1
+            self._exec[key] = compiled
+        return stats
 
     def serve(self, requests: Sequence[tuple[Hashable, jax.Array]]) -> list[Decision]:
         """Serve one batch of ``(patient_id, codes)`` requests.
@@ -166,11 +248,19 @@ class ServingEngine:
         for i, c in enumerate(codes):
             batch[i] = np.asarray(c)
 
-        frames, scores, preds = _serve_dispatch(
-            self._tables, self._bank,
-            jnp.asarray(self._param_rows[owner]), jnp.asarray(owner),
-            jnp.asarray(self._thresholds[owner]), jnp.asarray(batch),
-            self._cfg)
+        args = (self._tables, self._bank,
+                jnp.asarray(self._param_rows[owner]), jnp.asarray(owner),
+                jnp.asarray(self._thresholds[owner]), jnp.asarray(batch))
+        out = None
+        fn = self._exec.get((b_pad, t))
+        if fn is not None:  # prewarmed executable; JIT is the safety net
+            try:
+                out = fn(*args)
+            except Exception:
+                self._exec.pop((b_pad, t), None)
+        if out is None:
+            out = _serve_dispatch(*args, self._cfg)
+        frames, scores, preds = out
 
         frames_np, scores_np, preds_np = (np.asarray(x) for x in
                                           (frames, scores, preds))

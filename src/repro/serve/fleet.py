@@ -81,6 +81,7 @@ import functools
 import hashlib
 import json
 import os
+import warnings
 from dataclasses import dataclass, replace
 from typing import Hashable, Mapping, Sequence
 
@@ -95,6 +96,7 @@ from repro.kernels.hdc_fleet import ops as fleet_ops
 from repro.reliability import ecc as rel_ecc
 from repro.reliability import faults as rel_faults
 from repro.reliability.faults import FaultConfig, FaultPlan
+from repro.runtime import aot as aot_mod
 from repro.runtime import sharding as shd
 from repro.serve import dispatch
 from repro.serve.engine import FrameDecision
@@ -218,6 +220,10 @@ for _cls, _fields in (
     (FleetOut, ["frames", "scores"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
+    # the same pytrees cross the jax.export boundary in the AOT deploy
+    # artifacts (runtime/aot.py); no-op when export serialization is absent
+    aot_mod.register_pytree_serialization(
+        _cls, f"repro.serve.fleet.{_cls.__name__}")
 
 # logical sharding axes per FleetState leaf: session state splits along the
 # batch axis, everything trailing replicates (used by the step's constraints
@@ -592,7 +598,14 @@ class StreamingFleet:
         # (which (session, slot) pairs really emitted) without a round-trip
         self._filled_h = np.zeros((self._np,), np.int64)
         self._fidx_h = np.zeros((self._np,), np.int64)
-        self._shapes_seen: set[int] = set()  # buckets pushed so far
+        self._shapes_seen: set[int] = set()  # buckets JIT-dispatched so far
+        # AOT executables (runtime/aot.py): ``warmup`` fills these with
+        # pre-compiled step/adapt executables — loaded from a serialized
+        # deploy artifact or lowered+compiled here ahead of traffic — keyed
+        # by (device, tile sessions, bucket); the hot loops prefer them and
+        # fall back to the jitted callables on any signature mismatch
+        self._exec: dict[tuple, jax.stages.Compiled] = {}
+        self._adapt_exec: dict[tuple, jax.stages.Compiled] = {}
         # faults=None keeps the partial's jaxpr IDENTICAL to the fault-free
         # step — the fault path costs nothing unless a plan is configured
         self._step = jax.jit(
@@ -747,16 +760,249 @@ class StreamingFleet:
 
     @property
     def compile_count(self) -> int:
-        """Jitted-step executables built so far (<= number of buckets used).
+        """Step executables built or loaded so far (<= buckets x tiles).
 
-        Prefers jit's real cache size (catches accidental recompiles); falls
-        back to the count of distinct bucket shapes pushed if the private
-        jax API ever disappears.
-        """
+        Counts BOTH the jit cache (preferring jit's real cache size, which
+        catches accidental recompiles; falling back to the count of distinct
+        JIT-dispatched bucket shapes if the private jax API ever disappears)
+        AND the AOT executables installed by ``warmup`` — a warmed fleet
+        whose pushes never touch the jit cache still reports its real
+        executable count, so bucketed compile-count guards hold on the AOT
+        path instead of passing vacuously at 0."""
         cache_size = getattr(self._step, "_cache_size", None)
-        if cache_size is not None:
-            return cache_size()
-        return len(self._shapes_seen)
+        jit_n = (cache_size() if cache_size is not None
+                 else len(self._shapes_seen))
+        return jit_n + len(self._exec)
+
+    @property
+    def aot_count(self) -> int:
+        """Step executables that came from ``warmup`` (artifact-loaded or
+        pre-compiled) rather than first-push JIT."""
+        return len(self._exec)
+
+    # -- ahead-of-time compilation (runtime/aot.py) ---------------------------
+
+    def _aot_sig(self) -> str:
+        """Digest of everything that selects this fleet's step program
+        beyond the argument shapes: datapath config, fault plan, backend,
+        the stacked table-bank geometry and the x64 regime.  Rides in the
+        artifact entry names so a lookup can never hand back an executable
+        compiled for a different program."""
+        h = hashlib.sha256()
+        h.update(repr(self._cfg).encode())
+        h.update(repr(self._plan).encode())
+        h.update(self._backend.encode())
+        h.update(str(tuple(jnp.shape(self._tables_t[0]))).encode())
+        h.update(str(bool(jax.config.jax_enable_x64)).encode())
+        return h.hexdigest()[:10]
+
+    def _aot_name(self, kind: str, tile_s: int, t_pad: int | None = None) -> str:
+        base = (f"fleet.{self._cfg.variant}.{self._backend}"
+                f"{'.faulted' if self._plan is not None else ''}.s{tile_s}")
+        mid = f".t{t_pad}" if kind == "step" else ""
+        return f"{base}{mid}.{kind}.{self._aot_sig()}"
+
+    def _sds(self, x, dev) -> jax.ShapeDtypeStruct:
+        sharding = (None if dev is None
+                    else jax.sharding.SingleDeviceSharding(dev))
+        return jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype,
+                                    sharding=sharding)
+
+    def _step_avals(self, k: int, t_pad: int, dev) -> tuple:
+        """Abstract args of tile ``k``'s step at bucket ``t_pad`` (pinned to
+        ``dev``; dev=None = portable, for export blobs)."""
+        sl = self._tile_slices[k]
+        tile_s = sl.stop - sl.start
+        avals = (
+            jax.tree.map(lambda x: self._sds(x, dev), self._state_t[k]),
+            self._sds(self._tables_t[k], dev),
+            self._sds(self._param_owner_t[k], dev),
+            self._sds(self._thresholds_t[k], dev),
+            jax.ShapeDtypeStruct((tile_s, t_pad, self._cfg.channels),
+                                 jnp.uint8,
+                                 sharding=None if dev is None else
+                                 jax.sharding.SingleDeviceSharding(dev)),
+            self._sds(np.zeros((tile_s,), np.int32), dev),
+        )
+        if self._plan is not None:
+            avals += (self._sds(np.zeros((3,), np.float32), dev),
+                      self._sds(np.int32(0), dev))
+        return avals
+
+    def _adapt_avals(self, k: int, dev) -> tuple:
+        sl = self._tile_slices[k]
+        tile_s = sl.stop - sl.start
+        return (
+            jax.tree.map(lambda x: self._sds(x, dev), self._state_t[k]),
+            self._sds(np.zeros((tile_s,), np.int32), dev),
+            self._sds(np.float32(0), dev),
+            self._sds(np.zeros((tile_s,), np.float32), dev),
+        )
+
+    def aot_entries(self, buckets: Sequence[int] | None = None
+                    ) -> list[aot_mod.AOTEntry]:
+        """The executable set of this fleet, as portable AOT entries: one
+        step per (distinct tile shape) x (chunk bucket) — the faulted step
+        when a fault plan is configured — plus the adapt step per tile
+        shape.  ``aot_mod.save_artifact`` turns these into a serialized
+        deploy artifact; ``warmup(aot=...)`` loads them back."""
+        out: list[aot_mod.AOTEntry] = []
+        seen: set[tuple] = set()
+        # the pinned (cache_args) form is what a plain-JIT restart actually
+        # compiles — its operands are committed to their tile device, which
+        # hashes to a different persistent-cache key than the portable form
+        dev = None if self._ctx.mesh is not None else jax.local_devices()[0]
+        for k, sl in enumerate(self._tile_slices):
+            tile_s = sl.stop - sl.start
+            for b in buckets or self._buckets:
+                if ("step", tile_s, b) in seen:
+                    continue
+                seen.add(("step", tile_s, b))
+                out.append(aot_mod.AOTEntry(
+                    name=self._aot_name("step", tile_s, b),
+                    fn=self._step,
+                    args=self._step_avals(k, b, dev=None),
+                    cache_args=(self._step_avals(k, b, dev=dev)
+                                if dev is not None else None)))
+            if self._am_counts0 is not None and ("adapt", tile_s) not in seen:
+                seen.add(("adapt", tile_s))
+                out.append(aot_mod.AOTEntry(
+                    name=self._aot_name("adapt", tile_s),
+                    fn=self._adapt_step,
+                    args=self._adapt_avals(k, dev=None),
+                    cache_args=(self._adapt_avals(k, dev=dev)
+                                if dev is not None else None)))
+        return out
+
+    def save_aot(self, path: str) -> dict:
+        """Serialize + pre-compile this fleet's whole executable set into a
+        versioned deploy artifact at ``path`` (see runtime/aot.py); returns
+        the artifact manifest.  Run at deploy time — e.g. the
+        ``launch/serve.py compile`` subcommand — so restarted workers load
+        executables instead of compiling them."""
+        return aot_mod.save_artifact(path, self.aot_entries())
+
+    def warmup(self, *, aot: aot_mod.AOTArtifact | None = None,
+               buckets: Sequence[int] | None = None) -> dict[str, int]:
+        """Build every step (and adapt) executable BEFORE traffic arrives.
+
+        With ``aot`` (a loaded deploy artifact), executables deserialize
+        from it — no tracing, and no XLA compile when the entry ships its
+        PjRt executable; entries the artifact lacks (or whose load fails)
+        are pre-lowered and compiled here, which still beats paying the
+        compile under the first push.  Installed executables serve the hot loops
+        directly (the jit cache stays cold — ``compile_count`` counts them,
+        see above).  Returns ``{"loaded", "compiled", "skipped"}`` counts.
+        Under a mesh the step is a sharded SPMD program the artifact format
+        does not carry; warmup is a no-op there (plain JIT, one warning).
+        """
+        stats = {"loaded": 0, "compiled": 0, "skipped": 0}
+        if self._ctx.mesh is not None:
+            warnings.warn("StreamingFleet.warmup: mesh-sharded fleets "
+                          "fall back to JIT (no AOT path)", stacklevel=2)
+            return stats
+        default_dev = jax.local_devices()[0]
+        for k, (sl, dev) in enumerate(zip(self._tile_slices,
+                                          self._tile_devs)):
+            tile_s = sl.stop - sl.start
+            for b in buckets or self._buckets:
+                key = (dev, tile_s, b)
+                if key in self._exec:
+                    stats["skipped"] += 1
+                    continue
+                compiled = None
+                if aot is not None and dev == default_dev:
+                    compiled = aot.compile(
+                        self._aot_name("step", tile_s, b),
+                        *self._step_avals(k, b, dev=None))
+                    if compiled is not None:
+                        stats["loaded"] += 1
+                if compiled is None:
+                    compiled = self._step.lower(
+                        *self._step_avals(k, b, dev=dev)).compile()
+                    stats["compiled"] += 1
+                self._exec[key] = compiled
+            akey = (dev, tile_s)
+            if self._am_counts0 is not None and akey not in self._adapt_exec:
+                compiled = None
+                if aot is not None and dev == default_dev:
+                    compiled = aot.compile(self._aot_name("adapt", tile_s),
+                                           *self._adapt_avals(k, dev=None))
+                if compiled is None:
+                    compiled = self._adapt_step.lower(
+                        *self._adapt_avals(k, dev=dev)).compile()
+                self._adapt_exec[akey] = compiled
+        return stats
+
+    @classmethod
+    def from_artifact(
+        cls,
+        pipelines: Mapping[Hashable, HDCPipeline],
+        owners: Sequence[Hashable],
+        root: str,
+        *,
+        step: int | None = None,
+        aot_dir: str | None = None,
+        warm: bool = True,
+        **fleet_kwargs,
+    ) -> "StreamingFleet":
+        """Deploy-restore: build a fleet, warm its executables from the
+        checkpoint's recorded AOT artifact, and restore the checkpointed
+        state — the worker-restart path, first decision without a compile.
+
+        The checkpoint manifest's ``aot`` entry (written by
+        ``save(..., aot_dir=...)``) names the artifact directory and its
+        validity key; ``aot_dir`` overrides the recorded path.  A stale or
+        missing artifact (different jax version / device kind / kernel
+        sources) degrades to plain-JIT warmup with a warning — decisions
+        are identical either way, only the cold-start latency differs.
+        """
+        fleet = cls(pipelines, owners, **fleet_kwargs)
+        if step is None:
+            step = ckpt.latest_step(root)
+            if step is None:
+                raise FileNotFoundError(f"no fleet checkpoint under {root!r}")
+        with open(os.path.join(root, f"step_{step:08d}",
+                               "manifest.json")) as f:
+            manifest = json.load(f)
+        art = None
+        path = aot_dir
+        if path is None:
+            entry = manifest.get("aot")
+            if entry is not None:
+                saved_key = entry.get("key")
+                bad = (aot_mod.stale_fields(saved_key, aot_mod.artifact_key())
+                       if saved_key is not None else {})
+                if bad:
+                    warnings.warn(
+                        "checkpoint AOT entry is stale ("
+                        + ", ".join(f"{k}: saved {s!r} != current {c!r}"
+                                    for k, (s, c) in sorted(bad.items()))
+                        + "); warming up via JIT", stacklevel=2)
+                else:
+                    path = entry.get("path")
+                    if path is not None and not os.path.isabs(path):
+                        path = os.path.join(root, path)
+        if path is not None:
+            art = aot_mod.load_artifact(path)  # None (+warning) when stale
+        if warm:
+            fleet.warmup(aot=art)
+        fleet.restore(root, step)
+        return fleet
+
+    def _call_step(self, t_pad: int, sl: slice, dev, args: tuple):
+        """One tile step through the warmed executable when one matches,
+        else the jitted callable (also the safety net: an executable whose
+        placement/signature no longer matches is dropped, not fatal)."""
+        key = (dev, sl.stop - sl.start, t_pad)
+        fn = self._exec.get(key)
+        if fn is not None:
+            try:
+                return fn(*args)
+            except Exception:
+                self._exec.pop(key, None)
+        self._shapes_seen.add(t_pad)
+        return self._step(*args)
 
     # -- streaming ----------------------------------------------------------
 
@@ -844,7 +1090,6 @@ class StreamingFleet:
         while pos < total:
             round_len = np.clip(lengths - pos, 0, max_bucket)
             t_pad = self._bucket_for(int(round_len.max()))
-            self._shapes_seen.add(t_pad)
             width = min(t_pad, total - pos)
             round_len32 = round_len.astype(np.int32)
             n_emit = (self._filled_h + round_len) // self._cfg.window
@@ -870,15 +1115,17 @@ class StreamingFleet:
                     self._put_tile(stage, ("batch", None, None), d),
                     self._put_tile(round_len32[sl], ("batch",), d),
                 )
-                if self._plan is None:
-                    self._state_t[k], fo = self._step(*args)
-                else:
+                if self._plan is not None:
                     seed = rel_faults.step_seed(
                         self._plan, tile=k, n_tiles=len(self._tile_slices),
                         phase=phase)
-                    self._state_t[k], fo, ecc_c = self._step(
-                        *args, self._ber_t[k],
-                        self._put_tile(np.int32(seed), (), d))
+                    args += (self._ber_t[k],
+                             self._put_tile(np.int32(seed), (), d))
+                res = self._call_step(t_pad, sl, d, args)
+                if self._plan is None:
+                    self._state_t[k], fo = res
+                else:
+                    self._state_t[k], fo, ecc_c = res
                     self._ecc_t[k] = self._ecc_t[k] + ecc_c
                 # fo depends on the staged codes: once it is ready the
                 # step has consumed the slot and it is safe to rewrite
@@ -1120,15 +1367,26 @@ class StreamingFleet:
                 "(-1 = no feedback)")
         lab32 = np.full((self._np,), -1, np.int32)  # phantoms: no feedback
         lab32[:self._n] = lab
-        margin32 = jnp.asarray(margin, jnp.float32)
         applied = []
         for k, (sl, d) in enumerate(zip(self._tile_slices, self._tile_devs)):
-            self._state_t[k], app = self._adapt_step(
+            args = (
                 self._state_t[k],
                 self._put_tile(lab32[sl], ("batch",), d),
-                margin32,
+                # committed per tile so the warmed (device-pinned) adapt
+                # executables accept it directly
+                self._put_tile(np.float32(margin), (), d),
                 self._density_t[k],
             )
+            akey = (d, sl.stop - sl.start)
+            fn = self._adapt_exec.get(akey)
+            if fn is not None:
+                try:
+                    self._state_t[k], app = fn(*args)
+                    applied.append(app)
+                    continue
+                except Exception:
+                    self._adapt_exec.pop(akey, None)
+            self._state_t[k], app = self._adapt_step(*args)
             applied.append(app)
         return np.concatenate([np.asarray(a) for a in applied])[:self._n]
 
@@ -1178,15 +1436,27 @@ class StreamingFleet:
             for f, axes in _STATE_AXES.items()
         })
 
-    def save(self, root: str, step: int | None = None) -> str:
+    def save(self, root: str, step: int | None = None,
+             aot_dir: str | None = None) -> str:
         """Checkpoint the full fleet state (streaming accumulators + online
         AM banks) under ``root`` via ckpt.checkpoint's atomic-rename
         contract; ``step`` defaults to one past the latest.  Returns the
-        checkpoint directory."""
+        checkpoint directory.
+
+        ``aot_dir`` additionally serializes this fleet's executable set
+        there (``save_aot``) and records the artifact path + validity key in
+        the checkpoint manifest, which is what lets ``from_artifact``
+        restore a worker without recompiling.  Relative paths are resolved
+        against ``root`` at restore time."""
         if step is None:
             latest = ckpt.latest_step(root)
             step = 0 if latest is None else latest + 1
-        return ckpt.save(root, step, self.state, meta=self._meta())
+        aot_entry = None
+        if aot_dir is not None:
+            self.save_aot(aot_dir)
+            aot_entry = {"path": aot_dir, "key": aot_mod.artifact_key()}
+        return ckpt.save(root, step, self.state, meta=self._meta(),
+                         aot=aot_entry)
 
     def restore(self, root: str, step: int | None = None) -> int:
         """Restore a ``save``d fleet state into THIS fleet (same bank
