@@ -1,0 +1,33 @@
+"""Repo-specific static analysis + jit-hygiene auditing.
+
+Three layers, all runnable via ``python -m repro.analysis``:
+
+* :mod:`repro.analysis.lint` -- AST linter with RPR0xx rule codes and
+  inline ``# repro-lint: disable=...`` waivers.  Encodes the invariants
+  generic tools cannot know: packed-domain dtype pinning, host-sync
+  freedom of the traced datapath, determinism of library code, jit-static
+  hashability, and Pallas kernel-body purity.
+* :mod:`repro.analysis.hlo_audit` -- lowers/compiles the *real* fleet and
+  engine step programs (via their ``aot_entries()``) and audits the
+  StableHLO/executable text: donation aliasing, host-escape custom calls,
+  and a per-op dtype-width histogram that fails on 64-bit leakage.
+* :mod:`repro.analysis.guards` -- runtime sanitizer contexts
+  (``no_recompiles()``, ``no_transfers()``) used as pytest fixtures around
+  steady-state serving loops.
+"""
+
+from repro.analysis.lint import Finding, RULES, lint_paths  # noqa: F401
+from repro.analysis.guards import (  # noqa: F401
+    GuardViolation,
+    no_recompiles,
+    no_transfers,
+)
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "lint_paths",
+    "GuardViolation",
+    "no_recompiles",
+    "no_transfers",
+]

@@ -1,0 +1,96 @@
+"""CLI: ``python -m repro.analysis [paths...] [--audit] [--json OUT]``.
+
+Runs the RPR0xx linter over *paths* (default: ``src``), optionally runs
+the HLO jit-hygiene audit of the real fleet/engine programs, and exits
+non-zero on any unwaived finding or failed audit.  ``--json`` writes a
+machine-readable report (CI uploads it as an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.lint import RULES, lint_paths
+
+
+def _print_rules() -> None:
+    for code, desc in sorted(RULES.items()):
+        print(f"{code}  {desc}")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific lint + jit-hygiene audit")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/directories to lint (default: src)")
+    parser.add_argument("--audit", action="store_true",
+                        help="also lower/compile the fleet + engine step "
+                             "programs and audit donation, host escapes "
+                             "and dtype widths")
+    parser.add_argument("--x64", action="store_true",
+                        help="run the audit under jax_enable_x64 (the "
+                             "strict regime for dtype-width leaks)")
+    parser.add_argument("--backend", default="jnp",
+                        choices=("jnp", "pallas"),
+                        help="fleet backend for the audited programs")
+    parser.add_argument("--no-compile", action="store_true",
+                        help="audit lowerings only (skip XLA compile)")
+    parser.add_argument("--json", metavar="OUT", default=None,
+                        help="write a machine-readable JSON report")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the RPR0xx rule table and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        _print_rules()
+        return 0
+
+    report: dict = {}
+    findings = lint_paths(args.paths or ["src"])
+    unwaived = [f for f in findings if not f.waived]
+    waived = [f for f in findings if f.waived]
+    for f in unwaived:
+        print(f, file=sys.stderr)
+    report["lint"] = {
+        "findings": [f.to_dict() for f in findings],
+        "unwaived": len(unwaived),
+        "waived": len(waived),
+    }
+    print(f"lint: {len(unwaived)} unwaived finding(s), "
+          f"{len(waived)} waived")
+
+    failed = bool(unwaived)
+    if args.audit:
+        if args.x64:
+            import jax
+            jax.config.update("jax_enable_x64", True)
+        from repro.analysis.hlo_audit import run_audit
+        audit = run_audit(backend=args.backend,
+                          compile=not args.no_compile)
+        report["audit"] = audit.to_dict()
+        for entry in audit.entries:
+            status = "ok" if entry.ok else "FAIL"
+            hist = " ".join(f"{t}x{n}" for t, n in
+                            sorted(entry.dtype_histogram.items()))
+            print(f"audit: [{status}] {entry.name}  "
+                  f"aliased={entry.aliased}"
+                  f"/{entry.expected_donated if entry.expected_donated is not None else '-'}"
+                  f"  dtypes: {hist}")
+            for problem in entry.problems:
+                print(f"  - {problem}", file=sys.stderr)
+        failed = failed or not audit.ok
+
+    if args.json:
+        report["ok"] = not failed
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report written to {args.json}")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

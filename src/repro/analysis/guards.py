@@ -1,0 +1,152 @@
+"""Runtime jit-hygiene sanitizers for steady-state serving loops.
+
+``no_recompiles()`` asserts that a code region triggers zero XLA
+compilations -- the steady-state property the fleet's bucketed padding is
+designed to guarantee.  It listens to :func:`jax.log_compiles` output
+instead of poking jit-internal cache sizes, so it sees *every* compile
+(jit cache hits, AOT misses, nested jits) regardless of which executable
+tier served the call.
+
+``no_transfers()`` asserts that a region performs no implicit
+device-to-host synchronisation.  ``jax.transfer_guard("disallow")`` covers
+real accelerators, but on the CPU backend committed arrays are zero-copy
+host views and produce **no transfer event** for ``.item()`` /
+``np.asarray`` -- exactly the syncs that stall a TPU pipeline.  So the
+context additionally instruments the concrete Array type's host-sync
+surface (``__array__``, ``item``, ``tolist``, ``__float__``, ...) to raise
+inside the region, keeping the check meaningful in CI.
+
+Both are exposed as pytest fixtures from ``tests/conftest.py``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+
+import jax
+
+
+class GuardViolation(AssertionError):
+    """A sanitized region broke a jit-hygiene invariant."""
+
+
+_COMPILE_RE = re.compile(r"^Compiling (\S+)")
+# loggers that announce XLA compilation under jax.log_compiles()
+_COMPILE_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class _CompileRecorder(logging.Handler):
+    def __init__(self) -> None:
+        super().__init__(level=logging.DEBUG)
+        self.compiled: list[str] = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.match(record.getMessage())
+        if m:
+            self.compiled.append(m.group(1))
+
+
+@contextlib.contextmanager
+def no_recompiles(allow: int = 0):
+    """Fail with :class:`GuardViolation` if the region compiles more than
+    *allow* XLA programs.  Yields the recorder; ``recorder.compiled`` lists
+    the names of programs compiled so far (useful for warmup accounting).
+    """
+    recorder = _CompileRecorder()
+    loggers = [logging.getLogger(name) for name in _COMPILE_LOGGERS]
+    levels = [lg.level for lg in loggers]
+    for lg in loggers:
+        lg.addHandler(recorder)
+        if lg.level > logging.WARNING or lg.level == logging.NOTSET:
+            lg.setLevel(logging.WARNING)
+    try:
+        with jax.log_compiles(True):
+            yield recorder
+        if len(recorder.compiled) > allow:
+            names = ", ".join(recorder.compiled)
+            raise GuardViolation(
+                f"region compiled {len(recorder.compiled)} XLA program(s) "
+                f"(allowed {allow}): {names}")
+    finally:
+        for lg, level in zip(loggers, levels):
+            lg.removeHandler(recorder)
+            lg.setLevel(level)
+
+
+# --- host-sync instrumentation (CPU-backend complement to transfer_guard) --
+
+_SYNC_METHODS = ("__array__", "item", "tolist", "__float__", "__int__",
+                 "__bool__", "__index__", "__complex__")
+
+
+def _array_impl_type():
+    # the concrete jax Array class whose methods perform host syncs
+    import jax.numpy as jnp
+    return type(jnp.zeros((), jnp.int32))
+
+
+@contextlib.contextmanager
+def no_transfers():
+    """Fail with :class:`GuardViolation` on any implicit device->host sync
+    inside the region.
+
+    Combines ``jax.transfer_guard_device_to_host("disallow")``
+    (authoritative on accelerator backends; the device->host direction is
+    the one that stalls a pipeline, and guarding host->device too would
+    reject the weak scalar literals every jnp op uploads) with
+    method-level instrumentation of the concrete Array type so that
+    zero-copy CPU "transfers" -- invisible to the transfer guard -- are
+    caught too.  Explicit ``jax.device_put`` / ``jax.device_get`` escapes
+    are intentionally NOT patched: steady-state code that wants to sync
+    must say so.
+    """
+    import numpy as np
+
+    cls = _array_impl_type()
+    saved: dict[str, object] = {}
+
+    def _blocked(name):
+        def method(self, *args, **kwargs):
+            raise GuardViolation(
+                f"implicit host sync via Array.{name} inside a "
+                f"no_transfers() region")
+        return method
+
+    for name in _SYNC_METHODS:
+        if hasattr(cls, name):
+            saved[name] = cls.__dict__.get(name)
+            try:
+                setattr(cls, name, _blocked(name))
+            except TypeError:  # pragma: no cover - immutable type
+                saved.pop(name, None)
+
+    # numpy >= 2 reads jax arrays through the C buffer protocol, never
+    # calling __array__ -- so the conversion entry points themselves must
+    # be guarded for np.asarray(device_array) to be caught on CPU
+    def _np_guard(orig, name):
+        def wrapper(*args, **kwargs):
+            if args and isinstance(args[0], cls):
+                raise GuardViolation(
+                    f"implicit host sync via np.{name}(device array) "
+                    f"inside a no_transfers() region")
+            return orig(*args, **kwargs)
+        return wrapper
+
+    np_saved = {name: getattr(np, name)
+                for name in ("asarray", "array", "ascontiguousarray")}
+    try:
+        for name, orig in np_saved.items():
+            setattr(np, name, _np_guard(orig, name))
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    finally:
+        for name, orig in np_saved.items():
+            setattr(np, name, orig)
+        for name, orig in saved.items():
+            if orig is None:
+                with contextlib.suppress(AttributeError):
+                    delattr(cls, name)
+            else:
+                setattr(cls, name, orig)

@@ -1,0 +1,265 @@
+"""Lower + compile the real fleet/engine programs and audit the HLO.
+
+Static lint (``analysis/lint.py``) checks what the *source* says; this
+module checks what XLA actually *got*.  It reuses the serving stack's own
+AOT entry enumeration (``StreamingFleet.aot_entries()`` /
+``ServingEngine.aot_entries()``) so the audited programs are byte-for-byte
+the ones a deploy artifact would ship, then asserts three invariants per
+entry:
+
+1. **Donation aliasing** -- the donated fleet step must show every
+   ``FleetState`` leaf aliased input->output (``tf.aliasing_output`` in the
+   StableHLO, ``input_output_alias`` in the compiled executable).  PR 7
+   found jaxlib corrupting the heap *around* this aliasing; this audit
+   pins that the aliasing itself exists and covers the state.
+2. **No host escapes** -- the steady-state step must contain no
+   host-callback/infeed/outfeed ``custom_call`` ops; any custom call
+   outside an explicit allowlist fails the audit.
+3. **Dtype-width histogram** -- every ``tensor<...>`` element type in the
+   lowering is counted; 64-bit types (``i64``/``ui64``/``f64``) in the
+   packed path fail the audit.  Run under ``JAX_ENABLE_X64=1`` this is the
+   machine-checked version of the PR 2 bug class.  Single-element 64-bit
+   tensors are reported in the histogram but do not fail: they are jax's
+   weak-typed lowering of Python scalar literals (``x // 32``,
+   ``jnp.where(m, x, 0)``), are converted in place, and cannot widen any
+   buffer -- a real promotion always shows up as a multi-element 64-bit
+   tensor.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# custom-call targets that are pure device code, not host escapes
+DEFAULT_CUSTOM_CALL_ALLOWLIST = ("Sharding", "tpu_custom_call")
+
+# custom-call targets / op names that reach back to the host
+_HOST_ESCAPE_RE = re.compile(
+    r"callback|infeed|outfeed|xla_python|host_compute", re.IGNORECASE)
+
+_WIDE_TYPES = ("i64", "ui64", "si64", "f64", "c128")
+
+_TENSOR_RE = re.compile(r"tensor<([^>]*)>")
+_ELEM_RE = re.compile(r"^[su]?[iuf]\d+$|^i1$|^bf16$|^c\d+$")
+_ALIAS_RE = re.compile(r"tf\.aliasing_output")
+_STABLEHLO_CC_RE = re.compile(r"stablehlo\.custom_call\s+@(\w+)")
+_COMPILED_CC_RE = re.compile(r'custom_call_target="([^"]+)"')
+# one "{out_idx}: (param_idx, {...}, kind)" per aliased buffer; the nested
+# braces rule out a single [^}]* capture of the whole map
+# the output tuple index is empty ("{}") for single-output programs
+_IO_ALIAS_PAIR_RE = re.compile(
+    r"\{\d*(?:,\s*\d+)*\}:\s*\(\d+,\s*\{[^}]*\},\s*(?:may|must)-alias\)")
+
+
+@dataclass
+class EntryAudit:
+    """Audit result for one AOT entry's program."""
+
+    name: str
+    expected_donated: int | None    # state leaves that must alias, or None
+    aliased: int = 0                # tf.aliasing_output count (StableHLO)
+    alias_pairs: int = 0            # pairs in compiled input_output_alias
+    custom_calls: list = field(default_factory=list)
+    host_escapes: list = field(default_factory=list)
+    dtype_histogram: dict = field(default_factory=dict)
+    compiled: bool = False
+    errors: list = field(default_factory=list)
+
+    wide_buffers: dict = field(default_factory=dict)
+
+    @property
+    def wide_types(self) -> dict:
+        """64-bit element types seen on multi-element tensors (scalar
+        weak-literal constants excluded -- see module docstring)."""
+        return self.wide_buffers
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+    @property
+    def problems(self) -> list:
+        out = list(self.errors)
+        if self.expected_donated is not None:
+            if self.aliased < self.expected_donated:
+                out.append(
+                    f"donation not reflected in lowering: "
+                    f"{self.aliased}/{self.expected_donated} state leaves "
+                    f"carry tf.aliasing_output")
+            if self.compiled and self.alias_pairs < self.expected_donated:
+                out.append(
+                    f"executable aliased only {self.alias_pairs}/"
+                    f"{self.expected_donated} donated buffers")
+        if self.host_escapes:
+            out.append("host escapes in steady-state program: "
+                       + ", ".join(sorted(set(self.host_escapes))))
+        if self.custom_calls:
+            out.append("unexpected custom_call targets: "
+                       + ", ".join(sorted(set(self.custom_calls))))
+        if self.wide_types:
+            hist = ", ".join(f"{t}x{n}"
+                             for t, n in sorted(self.wide_types.items()))
+            out.append(f"64-bit types leaked into the packed path: {hist}")
+        return out
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "ok": self.ok,
+            "expected_donated": self.expected_donated,
+            "aliased": self.aliased,
+            "alias_pairs": self.alias_pairs,
+            "custom_calls": sorted(set(self.custom_calls)),
+            "host_escapes": sorted(set(self.host_escapes)),
+            "dtype_histogram": dict(sorted(self.dtype_histogram.items())),
+            "wide_types": dict(sorted(self.wide_types.items())),
+            "compiled": self.compiled,
+            "problems": self.problems,
+        }
+
+
+@dataclass
+class AuditReport:
+    entries: list
+    x64: bool
+
+    @property
+    def ok(self) -> bool:
+        return all(e.ok for e in self.entries)
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok, "x64": self.x64,
+                "entries": [e.to_dict() for e in self.entries]}
+
+
+def dtype_histogram(stablehlo_text: str) -> dict:
+    """Count element dtypes over every ``tensor<...>`` in a StableHLO
+    module (shape dims stripped)."""
+    hist: dict[str, int] = {}
+    for m in _TENSOR_RE.finditer(stablehlo_text):
+        elem = m.group(1).split(",")[0].strip().split("x")[-1]
+        if _ELEM_RE.match(elem):
+            hist[elem] = hist.get(elem, 0) + 1
+    return hist
+
+
+def wide_buffer_histogram(stablehlo_text: str) -> dict:
+    """Count 64-bit element types over *multi-element* tensors only --
+    the shape of a real dtype-width leak (weak scalar literals lower as
+    single-element 64-bit constants and are excluded)."""
+    hist: dict[str, int] = {}
+    for m in _TENSOR_RE.finditer(stablehlo_text):
+        spec = m.group(1).split(",")[0].strip()
+        dims, elem = spec.split("x")[:-1], spec.split("x")[-1]
+        if elem not in _WIDE_TYPES or not _ELEM_RE.match(elem):
+            continue
+        try:
+            numel = 1
+            for d in dims:
+                numel *= int(d)
+        except ValueError:  # dynamic dim: treat as wide
+            numel = 2
+        if numel > 1:
+            hist[elem] = hist.get(elem, 0) + 1
+    return hist
+
+
+def audit_entry(entry, *, expected_donated: int | None = None,
+                allow_custom_calls=DEFAULT_CUSTOM_CALL_ALLOWLIST,
+                compile: bool = True) -> EntryAudit:
+    """Audit one ``runtime.aot.AOTEntry``'s lowering (and, when *compile*
+    is true, its executable text)."""
+    audit = EntryAudit(name=entry.name, expected_donated=expected_donated)
+    try:
+        lowered = entry.fn.lower(*entry.args, *entry.static)
+        text = lowered.as_text()
+    except Exception as exc:  # pragma: no cover - lowering must not fail
+        audit.errors.append(f"lowering failed: {exc!r}")
+        return audit
+
+    audit.aliased = len(_ALIAS_RE.findall(text))
+    audit.dtype_histogram = dtype_histogram(text)
+    audit.wide_buffers = wide_buffer_histogram(text)
+    for target in _STABLEHLO_CC_RE.findall(text):
+        if _HOST_ESCAPE_RE.search(target):
+            audit.host_escapes.append(target)
+        elif target not in allow_custom_calls:
+            audit.custom_calls.append(target)
+
+    if compile:
+        try:
+            ctext = lowered.compile().as_text() or ""
+        except Exception as exc:  # pragma: no cover
+            audit.errors.append(f"compile failed: {exc!r}")
+            return audit
+        audit.compiled = True
+        audit.alias_pairs = len(_IO_ALIAS_PAIR_RE.findall(ctext))
+        for target in _COMPILED_CC_RE.findall(ctext):
+            if _HOST_ESCAPE_RE.search(target):
+                audit.host_escapes.append(target)
+            elif target not in allow_custom_calls:
+                audit.custom_calls.append(target)
+    return audit
+
+
+# ---------------------------------------------------------------------------
+# default program set: a tiny-but-real fleet + engine
+# ---------------------------------------------------------------------------
+
+def _tiny_programs(backend: str = "jnp"):
+    """Build a small trained pipeline and return ``(entry,
+    expected_donated)`` pairs covering the fleet step, fleet adapt, and the
+    engine dispatch.  Geometry is tiny -- dtype discipline, donation and
+    host-escape structure do not depend on array sizes."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.pipeline import HDCConfig, HDCPipeline
+    from repro.serve.engine import ServingEngine
+    from repro.serve.fleet import StreamingFleet
+
+    dim, segments, channels, window = 256, 8, 8, 32
+    cfg = HDCConfig(dim=dim, segments=segments, channels=channels,
+                    window=window, variant="sparse_compim",
+                    spatial_threshold=1, temporal_threshold=4)
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 64, (2, 4 * window, channels),
+                                     np.uint8))
+    labels = np.asarray(rng.integers(0, 2, (2, 4), np.int32))
+    labels[0, :2] = (0, 1)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(0), cfg)
+    pipe = pipe.train_one_shot(codes, jnp.asarray(labels))
+
+    fleet = StreamingFleet({"p": pipe}, ["p"] * 2, buckets=(window,),
+                           backend=backend)
+    pairs = []
+    for entry in fleet.aot_entries():
+        if ".step." in entry.name:
+            # the step donates its whole FleetState (arg 0): every leaf
+            # must come back aliased
+            expected = len(jax.tree_util.tree_leaves(entry.args[0]))
+        else:
+            expected = None  # adapt is deliberately not donated
+        pairs.append((entry, expected))
+
+    engine = ServingEngine({"p": pipe})
+    for entry in engine.aot_entries([1, 2], window):
+        pairs.append((entry, None))
+    return pairs
+
+
+def run_audit(*, backend: str = "jnp", compile: bool = True,
+              allow_custom_calls=DEFAULT_CUSTOM_CALL_ALLOWLIST
+              ) -> AuditReport:
+    """Audit the default fleet + engine program set under the current
+    ``jax_enable_x64`` setting."""
+    import jax
+
+    entries = [audit_entry(entry, expected_donated=expected,
+                           allow_custom_calls=allow_custom_calls,
+                           compile=compile)
+               for entry, expected in _tiny_programs(backend=backend)]
+    return AuditReport(entries=entries,
+                       x64=bool(jax.config.jax_enable_x64))

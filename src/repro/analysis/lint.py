@@ -1,0 +1,521 @@
+"""AST linter for the repo's jit-hygiene invariants (rule codes RPR0xx).
+
+Generic linters cannot know that this codebase's packed uint32 domain must
+never pick up 64-bit accumulators under ``JAX_ENABLE_X64``, or that the
+functions reachable from the jitted fleet step must not synchronise with the
+host.  These rules encode exactly that:
+
+========  =============================================================
+RPR001    unpinned dtype on a width-sensitive ``jnp`` call in a
+          packed-domain module (``core``/``kernels``/``serve``/
+          ``reliability``): reductions need ``dtype=`` (an outer
+          ``.astype`` still materialises 64-bit intermediates under
+          X64), factories need an explicit dtype argument.
+RPR002    host-sync call (``.item()``/``.tolist()``/``np.asarray``/
+          ``jax.device_get``/``float(arg)`` on a traced operand) inside
+          a function reachable from a jit/pallas/scan entry point.
+RPR003    nondeterminism source in ``src/``: legacy ``np.random.*``
+          global-state API, seedless ``np.random.default_rng()``, or
+          the stdlib ``random`` module.
+RPR004    unhashable jit-static hazard: mutable default argument
+          (list/dict/set literal or constructor, array constructor).
+RPR005    Python side effect or host call inside a Pallas kernel body
+          (``print``/``open``/``global``/``nonlocal``/host-sync/
+          ``np.random``).
+========  =============================================================
+
+Waive an intentional finding with a trailing (or immediately preceding)
+comment::
+
+    x = jnp.arange(n)  # repro-lint: disable=RPR001  -- host-only index
+
+Findings carry the waiver state rather than being dropped, so tooling can
+report waived counts; ``lint_paths`` returns every finding and the CLI
+fails only on unwaived ones.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from dataclasses import asdict, dataclass, field
+
+RULES = {
+    "RPR001": "unpinned dtype on width-sensitive jnp call in packed-domain "
+              "module (X64 drift)",
+    "RPR002": "host-sync call inside jit-traced code",
+    "RPR003": "nondeterministic RNG source in library code",
+    "RPR004": "unhashable jit-static hazard (mutable default argument)",
+    "RPR005": "Python side effect or host call inside a Pallas kernel body",
+}
+
+# modules whose arrays live in the packed uint32 / int32 domain
+PACKED_DOMAIN = ("core", "kernels", "serve", "reliability")
+
+# jnp calls whose accumulation dtype promotes to 64-bit under X64 unless
+# pinned via the dtype= kwarg (.astype afterwards is NOT sufficient)
+_REDUCTIONS = {"sum", "prod", "cumsum", "cumprod", "count_nonzero"}
+# jnp factories whose default dtype follows the X64 flag
+_FACTORIES = {"arange", "zeros", "ones", "full", "empty", "linspace"}
+
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_NP_SYNC_FUNCS = {"asarray", "array", "ascontiguousarray"}
+_SCALAR_CASTS = {"float", "int", "bool", "complex"}
+
+# jax transforms whose first function-typed arguments are traced bodies
+_TRACED_WRAPPERS = {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.lax.map", "jax.lax.associative_scan",
+}
+
+_WAIVER_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*|all)")
+
+
+@dataclass
+class Finding:
+    """One lint hit, JSON-able via :meth:`to_dict`."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+    waived: bool = False
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def __str__(self) -> str:  # pragma: no cover - display only
+        tag = " (waived)" if self.waived else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.code}{tag} " \
+               f"{self.message}"
+
+
+@dataclass
+class _Module:
+    """Per-file facts gathered in pass 1 of the cross-module call graph."""
+
+    path: str
+    modname: str | None          # dotted repro.* name, None outside src/
+    tree: ast.Module
+    waivers: dict[int, set[str]] = field(default_factory=dict)
+    aliases: dict[str, str] = field(default_factory=dict)
+    functions: dict[str, ast.FunctionDef] = field(default_factory=dict)
+    jit_roots: set[str] = field(default_factory=set)
+    pallas_kernels: set[str] = field(default_factory=set)
+    # calls made from each module-level function: ("local", name) or
+    # ("ext", module, name)
+    calls: dict[str, set[tuple]] = field(default_factory=dict)
+
+    @property
+    def packed_domain(self) -> bool:
+        parts = self.modname.split(".") if self.modname else []
+        return len(parts) >= 2 and parts[0] == "repro" and \
+            parts[1] in PACKED_DOMAIN
+
+    @property
+    def is_src(self) -> bool:
+        return self.modname is not None
+
+
+def _module_name(path: str) -> str | None:
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" not in parts:
+        return None
+    i = parts.index("repro")
+    if i == 0 or parts[i - 1] != "src":
+        return None
+    dotted = parts[i:]
+    dotted[-1] = dotted[-1][:-3] if dotted[-1].endswith(".py") else dotted[-1]
+    if dotted[-1] == "__init__":
+        dotted = dotted[:-1]
+    return ".".join(dotted)
+
+
+def _collect_waivers(source: str) -> dict[int, set[str]]:
+    waivers: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _WAIVER_RE.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",")}
+            waivers.setdefault(tok.start[0], set()).update(codes)
+    except tokenize.TokenError:  # pragma: no cover - defensive
+        pass
+    return waivers
+
+
+def _dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Resolve ``np.random.rand`` -> ``numpy.random.rand`` through imports."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    head = aliases.get(node.id, node.id)
+    parts.append(head)
+    return ".".join(reversed(parts))
+
+
+def _fn_target(node: ast.AST, aliases: dict[str, str]):
+    """Resolve a function-valued expression to a bare Name node, unwrapping
+    ``functools.partial(fn, ...)``."""
+    if isinstance(node, ast.Call):
+        dotted = _dotted(node.func, aliases)
+        if dotted in ("functools.partial", "partial") and node.args:
+            return _fn_target(node.args[0], aliases)
+        return None
+    if isinstance(node, ast.Name):
+        return node
+    return None
+
+
+def _parse_module(path: str, source: str) -> _Module | None:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return None
+    mod = _Module(path=path, modname=_module_name(path), tree=tree,
+                  waivers=_collect_waivers(source))
+
+    # imports (module-level and nested -- aliases are file-scoped here)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            base = node.module
+            if node.level:  # relative import: resolve against the package
+                if not mod.modname:
+                    continue
+                pkg = mod.modname.split(".")[:-node.level]
+                base = ".".join(pkg + [node.module])
+            for a in node.names:
+                mod.aliases[a.asname or a.name] = f"{base}.{a.name}"
+
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            mod.functions[node.name] = node
+
+    _find_jit_roots(mod)
+    _collect_calls(mod)
+    return mod
+
+
+def _is_jit_expr(node: ast.AST, aliases: dict[str, str]) -> bool:
+    dotted = _dotted(node, aliases)
+    return dotted in ("jax.jit", "jit")
+
+
+def _find_jit_roots(mod: _Module) -> None:
+    aliases = mod.aliases
+    # decorators
+    for fn in mod.functions.values():
+        for dec in fn.decorator_list:
+            if _is_jit_expr(dec, aliases):
+                mod.jit_roots.add(fn.name)
+            elif isinstance(dec, ast.Call):
+                dotted = _dotted(dec.func, aliases)
+                if _is_jit_expr(dec.func, aliases):
+                    mod.jit_roots.add(fn.name)
+                elif dotted in ("functools.partial", "partial") and \
+                        dec.args and _is_jit_expr(dec.args[0], aliases):
+                    mod.jit_roots.add(fn.name)
+    # call sites: jax.jit(f, ...), lax.scan(f, ...), pallas_call(f, ...)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func, aliases)
+        if dotted is None:
+            continue
+        if _is_jit_expr(node.func, aliases) or dotted in _TRACED_WRAPPERS:
+            for arg in node.args:
+                target = _fn_target(arg, aliases)
+                if target is not None and target.id in mod.functions:
+                    mod.jit_roots.add(target.id)
+        if dotted.endswith("pallas_call") and node.args:
+            target = _fn_target(node.args[0], aliases)
+            if target is not None and target.id in mod.functions:
+                mod.jit_roots.add(target.id)
+                mod.pallas_kernels.add(target.id)
+
+
+def _collect_calls(mod: _Module) -> None:
+    for name, fn in mod.functions.items():
+        targets: set[tuple] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name):
+                nid = node.func.id
+                if nid in mod.functions:
+                    targets.add(("local", nid))
+                elif nid in mod.aliases:
+                    dotted = mod.aliases[nid]
+                    if dotted.startswith("repro."):
+                        module, _, func = dotted.rpartition(".")
+                        targets.add(("ext", module, func))
+            elif isinstance(node.func, ast.Attribute):
+                dotted = _dotted(node.func, mod.aliases)
+                if dotted and dotted.startswith("repro."):
+                    module, _, func = dotted.rpartition(".")
+                    targets.add(("ext", module, func))
+        mod.calls[name] = targets
+
+
+def _traced_fixpoint(modules: dict[str, _Module]) -> set[tuple]:
+    """Propagate "reachable from a jit root" across the module graph."""
+    by_name = {m.modname: m for m in modules.values() if m.modname}
+    traced: set[tuple] = set()
+    work = [(m.path, fn) for m in modules.values() for fn in m.jit_roots]
+    while work:
+        key = work.pop()
+        if key in traced:
+            continue
+        traced.add(key)
+        mod = modules[key[0]]
+        for target in mod.calls.get(key[1], ()):
+            if target[0] == "local":
+                nxt = (mod.path, target[1])
+            else:
+                callee = by_name.get(target[1])
+                if callee is None or target[2] not in callee.functions:
+                    continue
+                nxt = (callee.path, target[2])
+            if nxt not in traced:
+                work.append(nxt)
+    return traced
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def _looks_like_dtype(node: ast.AST, aliases: dict[str, str]) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    dotted = _dotted(node, aliases)
+    if dotted is None:
+        return False
+    head = dotted.split(".")[0]
+    return head in ("numpy", "jax") or dotted in ("int", "float", "bool")
+
+
+def _rule_rpr001(mod: _Module, out: list[Finding]) -> None:
+    if not mod.packed_domain:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func, mod.aliases)
+        if dotted is None or not dotted.startswith("jax.numpy."):
+            continue
+        name = dotted.rsplit(".", 1)[1]
+        kwargs = {k.arg for k in node.keywords}
+        if name in _REDUCTIONS:
+            if "dtype" not in kwargs:
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR001",
+                    f"jnp.{name} without dtype=: accumulation promotes to "
+                    f"64-bit under JAX_ENABLE_X64 (pin dtype inside the "
+                    f"reduction; .astype after is too late)"))
+        elif name in _FACTORIES:
+            has_dtype = "dtype" in kwargs or any(
+                _looks_like_dtype(a, mod.aliases) for a in node.args[1:])
+            if name == "arange":
+                has_dtype = "dtype" in kwargs or any(
+                    _looks_like_dtype(a, mod.aliases) for a in node.args)
+            if not has_dtype:
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR001",
+                    f"jnp.{name} without an explicit dtype: default dtype "
+                    f"follows JAX_ENABLE_X64 and widens the packed domain"))
+
+
+def _rule_rpr002(mod: _Module, traced: set[tuple],
+                 out: list[Finding]) -> None:
+    for fname, fn in mod.functions.items():
+        if (mod.path, fname) not in traced:
+            continue
+        params = {a.arg for a in fn.args.posonlyargs + fn.args.args} - \
+            {"self", "cls"}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _HOST_SYNC_METHODS:
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR002",
+                    f".{node.func.attr}() forces a host sync inside "
+                    f"jit-traced '{fname}'"))
+                continue
+            dotted = _dotted(node.func, mod.aliases)
+            if dotted == "jax.device_get" or (
+                    dotted and dotted.startswith("numpy.") and
+                    dotted.rsplit(".", 1)[1] in _NP_SYNC_FUNCS):
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR002",
+                    f"{dotted} materialises a host array inside jit-traced "
+                    f"'{fname}'"))
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in _SCALAR_CASTS and \
+                    len(node.args) == 1 and not node.keywords and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in params:
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR002",
+                    f"{node.func.id}({node.args[0].id}) on a traced operand "
+                    f"of '{fname}' forces a host sync"))
+
+
+def _rule_rpr003(mod: _Module, out: list[Finding]) -> None:
+    if not mod.is_src:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func, mod.aliases)
+        if dotted is None:
+            continue
+        if dotted.startswith("numpy.random."):
+            fn = dotted.split(".")[-1]
+            if fn == "default_rng" and (node.args or node.keywords):
+                continue  # explicitly seeded generator: deterministic
+            out.append(Finding(
+                mod.path, node.lineno, node.col_offset, "RPR003",
+                f"{dotted}: global-state / seedless RNG in library code "
+                f"(use a seeded np.random.default_rng or jax.random)"))
+        elif dotted.startswith("random.") and \
+                mod.aliases.get("random", None) in (None, "random") and \
+                "random" not in mod.functions:
+            out.append(Finding(
+                mod.path, node.lineno, node.col_offset, "RPR003",
+                f"stdlib {dotted}: process-global RNG in library code"))
+
+
+_MUTABLE_CTORS = {"dict", "list", "set", "bytearray"}
+_ARRAY_CTORS = {"zeros", "ones", "empty", "full", "array", "asarray",
+                "arange"}
+
+
+def _rule_rpr004(mod: _Module, out: list[Finding]) -> None:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        defaults = list(node.args.defaults) + \
+            [d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = None
+            if isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+                bad = "mutable literal"
+            elif isinstance(d, ast.Call):
+                dotted = _dotted(d.func, mod.aliases) or ""
+                tail = dotted.rsplit(".", 1)[-1]
+                if dotted in _MUTABLE_CTORS:
+                    bad = f"{dotted}() constructor"
+                elif dotted.split(".")[0] in ("numpy", "jax") and \
+                        tail in _ARRAY_CTORS:
+                    bad = f"{dotted}() array"
+            if bad is not None:
+                name = getattr(node, "name", "<lambda>")
+                out.append(Finding(
+                    mod.path, d.lineno, d.col_offset, "RPR004",
+                    f"{bad} as default of '{name}': shared mutable state, "
+                    f"and unhashable if passed as a jit static"))
+
+
+_KERNEL_BANNED_CALLS = {"print", "open", "input", "breakpoint"}
+
+
+def _rule_rpr005(mod: _Module, out: list[Finding]) -> None:
+    for kname in mod.pallas_kernels:
+        fn = mod.functions.get(kname)
+        if fn is None:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                out.append(Finding(
+                    mod.path, node.lineno, node.col_offset, "RPR005",
+                    f"{type(node).__name__.lower()} statement inside Pallas "
+                    f"kernel '{kname}': kernels must be pure"))
+            elif isinstance(node, ast.Call):
+                dotted = _dotted(node.func, mod.aliases)
+                banned = (
+                    (isinstance(node.func, ast.Name) and
+                     node.func.id in _KERNEL_BANNED_CALLS) or
+                    (isinstance(node.func, ast.Attribute) and
+                     node.func.attr in _HOST_SYNC_METHODS) or
+                    (dotted and dotted.startswith("numpy.random.")) or
+                    (dotted and dotted.startswith("numpy.") and
+                     dotted.rsplit(".", 1)[1] in _NP_SYNC_FUNCS))
+                if banned:
+                    what = dotted or ast.unparse(node.func)
+                    out.append(Finding(
+                        mod.path, node.lineno, node.col_offset, "RPR005",
+                        f"{what} inside Pallas kernel '{kname}': host call "
+                        f"in a device kernel body"))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def iter_py_files(paths: list[str]) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            files.append(p)
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(set(files))
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    """Lint every ``.py`` under *paths*; returns all findings (waived ones
+    are marked, not dropped)."""
+    modules: dict[str, _Module] = {}
+    for f in iter_py_files(paths):
+        try:
+            with open(f, encoding="utf-8") as fh:
+                source = fh.read()
+        except OSError:  # pragma: no cover - unreadable file
+            continue
+        mod = _parse_module(f, source)
+        if mod is not None:
+            modules[f] = mod
+
+    traced = _traced_fixpoint(modules)
+
+    findings: list[Finding] = []
+    for mod in modules.values():
+        out: list[Finding] = []
+        _rule_rpr001(mod, out)
+        _rule_rpr002(mod, traced, out)
+        _rule_rpr003(mod, out)
+        _rule_rpr004(mod, out)
+        _rule_rpr005(mod, out)
+        for f in out:
+            codes = mod.waivers.get(f.line, set()) | \
+                mod.waivers.get(f.line - 1, set())
+            f.waived = "all" in codes or f.code in codes
+        findings.extend(out)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings

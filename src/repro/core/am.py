@@ -27,4 +27,4 @@ def am_scores_dense(query: jax.Array, classes: jax.Array, dim: int) -> jax.Array
 def am_predict(scores: jax.Array) -> jax.Array:
     """argmax over classes; ties resolve to the lower class index
     (= interictal for the 2-class iEEG system, the safe default)."""
-    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    return hv.argmax32(scores, axis=-1)

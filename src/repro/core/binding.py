@@ -34,7 +34,7 @@ def roll_segments_bits(bits: jax.Array, shifts: jax.Array, segments: int) -> jax
     idx = jnp.arange(seg_len, dtype=jnp.int32)
     # out[j] = in[(j - shift) mod L]  == circular left-roll by `shift`
     src = (idx[None, :] - shifts[..., :, None].astype(jnp.int32)) % seg_len
-    out = jnp.take_along_axis(seg, src, axis=-1)
+    out = hv.take_along_axis32(seg, src, axis=-1)
     return out.reshape(*bits.shape[:-1], d)
 
 

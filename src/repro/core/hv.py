@@ -40,7 +40,7 @@ def pack_bits(bits: jax.Array) -> jax.Array:
     w = n_words(d)
     b = bits.reshape(*bits.shape[:-1], w, WORD).astype(jnp.uint32)
     shifts = jnp.arange(WORD, dtype=jnp.uint32)
-    return jnp.sum(b << shifts, axis=-1).astype(jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
 
 
 def unpack_bits(words: jax.Array, dim: int | None = None) -> jax.Array:
@@ -54,7 +54,44 @@ def unpack_bits(words: jax.Array, dim: int | None = None) -> jax.Array:
 
 def popcount(words: jax.Array, axis=-1) -> jax.Array:
     """Total number of set bits along `axis` of a packed uint32 array."""
-    return jnp.sum(lax_popcount(words).astype(jnp.int32), axis=axis)
+    return jnp.sum(lax_popcount(words), axis=axis, dtype=jnp.int32)
+
+
+def argmax32(x: jax.Array, axis: int = -1) -> jax.Array:
+    """``jnp.argmax`` with int32 result AND 32-bit index arithmetic.
+
+    ``jnp.argmax`` builds its index iota in the default int dtype, so under
+    ``JAX_ENABLE_X64`` the reduction runs over int64 buffers even when the
+    result is cast back; ``lax.argmax`` takes the index dtype explicitly.
+    Tie-breaking (lowest index wins) is identical.
+    """
+    return jax.lax.argmax(x, axis % x.ndim, jnp.int32)
+
+
+def take_along_axis32(a: jax.Array, idx: jax.Array, axis: int = -1
+                      ) -> jax.Array:
+    """``jnp.take_along_axis`` with int32 gather indices.
+
+    ``jnp.take_along_axis`` builds its index arithmetic in the default int
+    dtype, so under ``JAX_ENABLE_X64`` it plants multi-element int64 index
+    buffers in otherwise 32-bit programs (RPR001's runtime cousin; the HLO
+    audit fails on them).  Open-grid advanced indexing with explicit int32
+    iotas lowers to the same gather with 32-bit indices.  Broadcasting of
+    ``idx`` against ``a`` on non-``axis`` dims matches numpy semantics.
+    """
+    axis = axis % a.ndim
+    batch = jnp.broadcast_shapes(a.shape[:axis] + (1,) + a.shape[axis + 1:],
+                                 idx.shape[:axis] + (1,) + idx.shape[axis + 1:])
+    a_shape = batch[:axis] + (a.shape[axis],) + batch[axis + 1:]
+    out_shape = batch[:axis] + (idx.shape[axis],) + batch[axis + 1:]
+    a_b = jnp.broadcast_to(a, a_shape)
+    idx_b = jnp.broadcast_to(idx, out_shape).astype(jnp.int32)
+    grid = tuple(
+        idx_b if d == axis else
+        jnp.arange(n, dtype=jnp.int32).reshape(
+            (-1,) + (1,) * (len(out_shape) - d - 1))
+        for d, n in enumerate(out_shape))
+    return a_b[grid]
 
 
 def lax_popcount(words: jax.Array) -> jax.Array:
@@ -100,7 +137,8 @@ def packed_to_positions(words: jax.Array, dim: int, segments: int) -> jax.Array:
     seg_len = dim // segments
     seg = bits.reshape(*bits.shape[:-1], segments, seg_len)
     iota = jnp.arange(seg_len, dtype=jnp.int32)
-    return jnp.sum(seg.astype(jnp.int32) * iota, axis=-1).astype(jnp.uint8)
+    return jnp.sum(seg.astype(jnp.int32) * iota, axis=-1,
+                   dtype=jnp.int32).astype(jnp.uint8)
 
 
 # ---------------------------------------------------------------------------

@@ -101,14 +101,16 @@ def gate_energy_fj(ops: dict[str, float], c: HWConstants = C16) -> float:
 def _toggles_packed(sig: jax.Array) -> jax.Array:
     """sig: (T, ...) packed uint32 -> mean toggled bits per cycle."""
     x = jnp.bitwise_xor(sig[1:], sig[:-1])
-    return jnp.sum(jax.lax.population_count(x).astype(jnp.float32)) / (sig.shape[0] - 1)
+    return jnp.sum(jax.lax.population_count(x),
+                   dtype=jnp.float32) / (sig.shape[0] - 1)
 
 
 def _toggles_uint(sig: jax.Array, bits: int) -> jax.Array:
     """sig: (T, ...) small-int values -> mean toggled bits/cycle (low `bits`)."""
     a = sig.astype(jnp.uint32)
     x = jnp.bitwise_xor(a[1:], a[:-1]) & jnp.uint32((1 << bits) - 1)
-    return jnp.sum(jax.lax.population_count(x).astype(jnp.float32)) / (sig.shape[0] - 1)
+    return jnp.sum(jax.lax.population_count(x),
+                   dtype=jnp.float32) / (sig.shape[0] - 1)
 
 
 # ---------------------------------------------------------------------------
@@ -198,7 +200,8 @@ def _sparse_signals(params: im.IMParams, codes: jax.Array, cfg: HDCConfig,
     frames = t // cfg.window
     spat_f = sig["spat"][: frames * cfg.window].reshape(frames, cfg.window, -1)
     bits = hv.unpack_bits(spat_f, cfg.dim).astype(jnp.int32)
-    tcnt = jnp.cumsum(bits, axis=1).reshape(frames * cfg.window, cfg.dim)
+    tcnt = jnp.cumsum(bits, axis=1,
+                      dtype=jnp.int32).reshape(frames * cfg.window, cfg.dim)
     sig["tcnt"] = tcnt
     frame_hv = hv.threshold_pack(tcnt[cfg.window - 1 :: cfg.window], cfg.temporal_threshold)
     sig["frame_hv"] = frame_hv
@@ -208,7 +211,7 @@ def _sparse_signals(params: im.IMParams, codes: jax.Array, cfg: HDCConfig,
 def _dense_signals(params: DenseIMParams, codes: jax.Array,
                    cfg: HDCConfig) -> dict[str, jax.Array]:
     t = codes.shape[0]
-    ch = jnp.arange(cfg.channels)
+    ch = jnp.arange(cfg.channels, dtype=jnp.int32)
     im_out = params.item_packed[ch, codes.astype(jnp.int32)]          # (T, C, W)
     bound = jnp.bitwise_xor(im_out, params.elec_packed)
     counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)          # (T, D)
@@ -216,7 +219,8 @@ def _dense_signals(params: DenseIMParams, codes: jax.Array,
     frames = t // cfg.window
     spat_f = spat[: frames * cfg.window].reshape(frames, cfg.window, -1)
     bits = hv.unpack_bits(spat_f, cfg.dim).astype(jnp.int32)
-    tcnt = jnp.cumsum(bits, axis=1).reshape(frames * cfg.window, cfg.dim)
+    tcnt = jnp.cumsum(bits, axis=1,
+                      dtype=jnp.int32).reshape(frames * cfg.window, cfg.dim)
     frame_hv = hv.pack_bits(
         ((tcnt[cfg.window - 1 :: cfg.window]) * 2 > cfg.window).astype(jnp.uint8))
     return dict(im_out=im_out, dec=None, bound_pos=None, bound=bound,

@@ -111,11 +111,11 @@ def make_dense_im(key: jax.Array, *, channels: int, codes: int, dim: int) -> Den
 def im_lookup_packed(im: IMParams, codes: jax.Array) -> jax.Array:
     """Baseline IM: (..., channels) codes -> (..., channels, W) packed HVs."""
     table = im.item_packed  # (C, codes, W)
-    ch = jnp.arange(table.shape[0])
+    ch = jnp.arange(table.shape[0], dtype=jnp.int32)
     return table[ch, codes.astype(jnp.int32)]
 
 
 def im_lookup_positions(im: IMParams, codes: jax.Array) -> jax.Array:
     """CompIM: (..., channels) codes -> (..., channels, S) uint8 positions."""
-    ch = jnp.arange(im.item_pos.shape[0])
+    ch = jnp.arange(im.item_pos.shape[0], dtype=jnp.int32)
     return im.item_pos[ch, codes.astype(jnp.int32)]

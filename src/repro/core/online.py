@@ -79,8 +79,8 @@ def _density_threshold(counts: jax.Array, density) -> jax.Array:
     pos = jnp.broadcast_to((1.0 - density) * (d - 1), counts.shape[:-1])
     lo = jnp.floor(pos).astype(jnp.int32)
     hi = jnp.ceil(pos).astype(jnp.int32)
-    vlo = jnp.take_along_axis(srt, lo[..., None], axis=-1)[..., 0]
-    vhi = jnp.take_along_axis(srt, hi[..., None], axis=-1)[..., 0]
+    vlo = hv.take_along_axis32(srt, lo[..., None], axis=-1)[..., 0]
+    vhi = hv.take_along_axis32(srt, hi[..., None], axis=-1)[..., 0]
     q = vlo + (pos - lo.astype(jnp.float32)) * (vhi - vlo)
     return jnp.maximum(jnp.ceil(q) + 1.0, 1.0).astype(jnp.int32)
 
@@ -116,12 +116,12 @@ def _gated_delta(labels: jax.Array, scores: jax.Array, margin,
     """
     c = scores.shape[-1]
     lab = jnp.maximum(labels, 0)
-    pred = jnp.argmax(scores, axis=-1)  # ties -> low, matches am.am_predict
+    pred = hv.argmax32(scores, axis=-1)  # ties -> low, matches am.am_predict
     one_true = jax.nn.one_hot(lab, c, dtype=jnp.int32)
     s = scores.astype(jnp.float32)
-    s_true = jnp.take_along_axis(s, lab[..., None], axis=-1)[..., 0]
+    s_true = hv.take_along_axis32(s, lab[..., None], axis=-1)[..., 0]
     masked = jnp.where(one_true == 1, -jnp.inf, s)
-    rival = jnp.argmax(masked, axis=-1)
+    rival = hv.argmax32(masked, axis=-1)
     s_rival = jnp.max(masked, axis=-1)
     gate = (pred != lab) | (s_true - s_rival < jnp.asarray(margin, jnp.float32))
     gate = gate & (labels >= 0)

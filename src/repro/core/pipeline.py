@@ -72,7 +72,7 @@ def spatial_encode(params, codes: jax.Array, cfg: HDCConfig) -> jax.Array:
     Unlike ``classifier.spatial_encode`` this also routes ``dense``
     (XOR binding + per-element channel majority)."""
     if cfg.variant == "dense":
-        ch = jnp.arange(cfg.channels)
+        ch = jnp.arange(cfg.channels, dtype=jnp.int32)
         data = params.item_packed[ch, codes.astype(jnp.int32)]   # (..., C, W)
         bound = binding.bind_xor(data, params.elec_packed)
         counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
@@ -183,7 +183,7 @@ def _fit_iterative(params, codes: jax.Array, labels: jax.Array,
         scores = _am_scores(flat, chvs, cfg)
         state, gate = online.batch_update(state, bits, lab, scores,
                                           margin=margin)
-        return state, jnp.sum(gate)
+        return state, jnp.sum(gate, dtype=jnp.int32)
 
     state, n_upd = jax.lax.scan(epoch, state0, None, length=epochs)
     return online.class_hvs_from_state(state, cfg), state, n_upd

@@ -26,7 +26,7 @@ def pack_words_in_kernel(bits: jax.Array) -> jax.Array:
     w = d // 32
     b = bits.reshape(w, 32).astype(jnp.uint32)
     shifts = jax.lax.broadcasted_iota(jnp.uint32, (w, 32), 1)
-    return jnp.sum(b << shifts, axis=1).astype(jnp.uint32)
+    return jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
 
 
 def unpack_words_in_kernel(words: jax.Array, dim: int) -> jax.Array:

@@ -22,7 +22,7 @@ def dense_encode_frames_fused(params: DenseIMParams, codes: jax.Array,
     `dim` — i.e. the unified HDCConfig.
     codes: (B, T, C) uint8 -> (B, F, W) uint32."""
     codes = frame_view(codes, cfg.window)
-    ch = jnp.arange(cfg.channels)
+    ch = jnp.arange(cfg.channels, dtype=jnp.int32)
     item = params.item_packed[ch, codes.astype(jnp.int32)]   # (B,F,win,C,W)
     if use_kernel:
         return dense_encoder_pallas(item, params.elec_packed, window=cfg.window,

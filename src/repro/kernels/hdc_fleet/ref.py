@@ -78,10 +78,10 @@ def fleet_counts_ref(words: jax.Array, filled: jax.Array, lengths: jax.Array,
     # first (x mod 32) cycles ((1 << r) - 1 keeps exactly bits 0..r-1, the
     # LSB-first cycle order of time_pack)
     idx = jnp.minimum(xg, groups - 1)[..., None, None]
-    part = jnp.take_along_axis(tb, idx, axis=1)            # (S, K+2, 32, W)
+    part = hv.take_along_axis32(tb, idx, axis=1)           # (S, K+2, 32, W)
     edge = (jnp.uint32(1) << xr)[..., None, None] - jnp.uint32(1)
     pref = jnp.where((xg > 0)[..., None, None],
-                     jnp.take_along_axis(
+                     hv.take_along_axis32(
                          csum, jnp.maximum(xg - 1, 0)[..., None, None],
                          axis=1),
                      0)

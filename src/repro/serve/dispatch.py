@@ -130,7 +130,7 @@ def owner_spatial_encode(
     expansion); the serving paths run ``owner_spatial_codes``, which is
     bit-exact with it and never materializes the expansion.
     """
-    ch = jnp.arange(tables.shape[1])
+    ch = jnp.arange(tables.shape[1], dtype=jnp.int32)
     o = owner.reshape((-1,) + (1,) * (codes.ndim - 1))
     bound = tables[o, ch, codes.astype(jnp.int32)]  # (B, ..., C, W)
     if cfg.variant == "dense":
@@ -215,7 +215,7 @@ def owner_spatial_codes(
     nb = t // block
     blocks = codes.reshape(s, nb, block, c).transpose(1, 0, 2, 3)
     ob = owner[None, :, None].astype(jnp.int32) * (c * k)  # (1, S, 1)
-    cbase = (jnp.arange(c) * k)[:, None, None]             # (C, 1, 1)
+    cbase = (jnp.arange(c, dtype=jnp.int32) * k)[:, None, None]  # (C, 1, 1)
     c32 = -(-c // 32) * 32
 
     def body(_, cb):
@@ -290,8 +290,8 @@ def owner_am_scores_protected(
     scores = owner_am_scores(frames, corrected[:, None], cfg)
     red = tuple(range(1, status.ndim))
     counters = jnp.stack([
-        jnp.sum((status == ecc.CORRECTED).astype(jnp.int32), axis=red),
-        jnp.sum((status != ecc.CLEAN).astype(jnp.int32), axis=red),
-        jnp.sum((status == ecc.UNCORRECTABLE).astype(jnp.int32), axis=red),
+        jnp.sum(status == ecc.CORRECTED, axis=red, dtype=jnp.int32),
+        jnp.sum(status != ecc.CLEAN, axis=red, dtype=jnp.int32),
+        jnp.sum(status == ecc.UNCORRECTABLE, axis=red, dtype=jnp.int32),
     ], axis=-1)
     return scores, counters

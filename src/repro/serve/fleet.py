@@ -349,7 +349,7 @@ def _fleet_step(
         ecc_counts = shd.constrain(ecc_counts, ("batch", None), ctx)
     new_counts = seg[:, -1] + jnp.where(emits[:, None], 0, counts_in)
     # capture each emitting session's LAST completed frame for adapt
-    sidx = jnp.arange(s)
+    sidx = jnp.arange(s, dtype=jnp.int32)
     last_slot = jnp.maximum(n_emit - 1, 0)
     new_state = replace(
         state,

@@ -1,2 +1,21 @@
+import pytest
+
+from repro.analysis import guards
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+@pytest.fixture
+def no_recompiles():
+    """The repro.analysis.guards.no_recompiles context manager: wrap a
+    steady-state region to assert it triggers zero XLA compilations."""
+    return guards.no_recompiles
+
+
+@pytest.fixture
+def no_transfers():
+    """The repro.analysis.guards.no_transfers context manager: wrap a
+    device-side region to assert it performs no implicit host syncs."""
+    return guards.no_transfers

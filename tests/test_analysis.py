@@ -1,0 +1,343 @@
+"""repro.analysis: RPR0xx linter (per-rule positive/negative/waiver),
+HLO donation/dtype/host-escape audit, and the runtime sanitizer guards."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import guards
+from repro.analysis.hlo_audit import (audit_entry, dtype_histogram,
+                                      wide_buffer_histogram)
+from repro.analysis.lint import RULES, lint_paths
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# linter harness: snippets written under a fake src/repro tree so module
+# classification (packed-domain, src/) behaves as in the real repo
+# ---------------------------------------------------------------------------
+
+def _lint_snippet(tmp_path, source, rel="src/repro/core/mod.py"):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return lint_paths([str(tmp_path)])
+
+
+def _codes(findings, waived=False):
+    return [f.code for f in findings if f.waived == waived]
+
+
+def test_rule_table_is_published():
+    assert set(RULES) == {"RPR001", "RPR002", "RPR003", "RPR004", "RPR005"}
+
+
+# -- RPR001: unpinned dtype in packed-domain modules ------------------------
+
+def test_rpr001_flags_unpinned_reduction_and_factory(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    a = jnp.sum(x)\n"
+        "    b = jnp.cumsum(x, axis=0)\n"
+        "    c = jnp.arange(5)\n"
+        "    return a, b, c\n"))
+    assert _codes(found) == ["RPR001", "RPR001", "RPR001"]
+
+
+def test_rpr001_accepts_pinned_dtypes(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    a = jnp.sum(x, dtype=jnp.int32)\n"
+        "    b = jnp.arange(5, dtype=jnp.uint32)\n"
+        "    c = jnp.zeros((3,), jnp.uint32)\n"   # positional dtype
+        "    return a, b, c\n"))
+    assert _codes(found) == []
+
+
+def test_rpr001_only_packed_domain_modules(tmp_path):
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return jnp.sum(x)\n")
+    assert _codes(_lint_snippet(tmp_path, src,
+                                rel="src/repro/models/m.py")) == []
+    assert _codes(_lint_snippet(tmp_path, src,
+                                rel="src/repro/serve/s.py")) == ["RPR001"]
+
+
+def test_rpr001_waiver_same_line_and_preceding(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    a = jnp.sum(x)  # repro-lint: disable=RPR001\n"
+        "    # repro-lint: disable=all\n"
+        "    b = jnp.arange(5)\n"
+        "    return a, b\n"))
+    assert _codes(found) == []
+    assert _codes(found, waived=True) == ["RPR001", "RPR001"]
+
+
+# -- RPR002: host sync inside traced code -----------------------------------
+
+def test_rpr002_flags_item_in_jitted_fn(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(state):\n"
+        "    return state.item()\n"))
+    assert "RPR002" in _codes(found)
+
+
+def test_rpr002_traced_reachability_crosses_modules(tmp_path):
+    # helper.py: np.asarray in a plain function -- clean in isolation
+    (tmp_path / "src/repro/serve").mkdir(parents=True)
+    (tmp_path / "src/repro/serve/helper.py").write_text(
+        "import numpy as np\n"
+        "def hot(x):\n"
+        "    return np.asarray(x)\n"
+        "def cold(x):\n"
+        "    return np.asarray(x)\n")
+    # main.py: a jit root calls helper.hot -- hot becomes traced, cold not
+    (tmp_path / "src/repro/serve/main.py").write_text(
+        "import jax\n"
+        "import functools\n"
+        "from repro.serve import helper\n"
+        "def step(x):\n"
+        "    return helper.hot(x)\n"
+        "step_jit = jax.jit(functools.partial(step))\n")
+    found = lint_paths([str(tmp_path)])
+    rpr2 = [f for f in found if f.code == "RPR002"]
+    assert len(rpr2) == 1
+    assert "hot" in rpr2[0].message
+
+
+def test_rpr002_ignores_host_side_code(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import numpy as np\n"
+        "def build_tables(x):\n"          # never reaches a jit root
+        "    return np.asarray(x).item()\n"))
+    assert _codes(found) == []
+
+
+def test_rpr002_scalar_cast_on_traced_operand(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def step(x, n):\n"
+        "    k = int(np.ceil(3.0))\n"     # static host math: allowed
+        "    return float(x) + k\n"))     # sync on traced operand: flagged
+    assert _codes(found) == ["RPR002"]
+
+
+# -- RPR003: nondeterminism in src/ -----------------------------------------
+
+def test_rpr003_flags_global_rng_and_seedless_default_rng(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import random\n"
+        "import numpy as np\n"
+        "def f():\n"
+        "    a = np.random.rand(3)\n"
+        "    b = np.random.default_rng()\n"
+        "    c = random.random()\n"
+        "    return a, b, c\n"))
+    assert _codes(found) == ["RPR003", "RPR003", "RPR003"]
+
+
+def test_rpr003_accepts_seeded_rng_and_skips_tests_dir(tmp_path):
+    clean = ("import numpy as np\n"
+             "def f(seed):\n"
+             "    return np.random.default_rng(seed).integers(0, 4)\n")
+    assert _codes(_lint_snippet(tmp_path, clean)) == []
+    dirty = ("import numpy as np\n"
+             "def f():\n"
+             "    return np.random.rand(3)\n")
+    assert _codes(_lint_snippet(tmp_path, dirty,
+                                rel="tests/test_x.py")) == []
+
+
+# -- RPR004: mutable defaults -----------------------------------------------
+
+def test_rpr004_flags_mutable_defaults(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import numpy as np\n"
+        "def f(x, acc=[], cfg={}, buf=np.zeros(3)):\n"
+        "    return x\n"))
+    assert _codes(found) == ["RPR004", "RPR004", "RPR004"]
+
+
+def test_rpr004_accepts_immutable_defaults(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "def f(x, acc=None, cfg=(), name='a', n=3):\n"
+        "    return x\n"))
+    assert _codes(found) == []
+
+
+# -- RPR005: Pallas kernel purity -------------------------------------------
+
+_KERNEL_PRELUDE = (
+    "import functools\n"
+    "import jax\n"
+    "from jax.experimental import pallas as pl\n")
+
+
+def test_rpr005_flags_side_effects_in_kernel_body(tmp_path):
+    found = _lint_snippet(tmp_path, _KERNEL_PRELUDE + (
+        "def kernel(x_ref, o_ref):\n"
+        "    print('debug')\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(functools.partial(kernel),\n"
+        "                          out_shape=x)(x)\n"))
+    assert "RPR005" in _codes(found)
+
+
+def test_rpr005_accepts_pure_kernel(tmp_path):
+    found = _lint_snippet(tmp_path, _KERNEL_PRELUDE + (
+        "def kernel(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...] + 1\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(kernel, out_shape=x)(x)\n"))
+    assert _codes(found) == []
+
+
+def test_repo_src_is_lint_clean():
+    """Satellite invariant: the shipped tree has zero unwaived findings."""
+    assert _codes(lint_paths(["src"])) == []
+
+
+# ---------------------------------------------------------------------------
+# HLO audit
+# ---------------------------------------------------------------------------
+
+def _entry(fn, *args, name="prog"):
+    return types.SimpleNamespace(name=name, fn=fn, args=args, static=())
+
+
+def test_audit_confirms_donation_aliasing():
+    def step(state, x):
+        return state + x
+
+    donated = jax.jit(step, donate_argnums=(0,))
+    arg = jax.ShapeDtypeStruct((64, 64), jnp.int32)
+    audit = audit_entry(_entry(donated, arg, arg), expected_donated=1)
+    assert audit.ok and audit.aliased == 1 and audit.alias_pairs == 1
+
+
+def test_audit_fails_deliberately_non_donated_program():
+    def step(state, x):
+        return state + x
+
+    plain = jax.jit(step)  # same program, donation forgotten
+    arg = jax.ShapeDtypeStruct((64, 64), jnp.int32)
+    audit = audit_entry(_entry(plain, arg, arg), expected_donated=1)
+    assert not audit.ok
+    assert any("donation" in p for p in audit.problems)
+
+
+def test_audit_flags_host_callback_custom_call():
+    def prog(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct((4,), jnp.float32),
+            x)
+
+    audit = audit_entry(_entry(jax.jit(prog),
+                               jax.ShapeDtypeStruct((4,), jnp.float32)),
+                        compile=False)
+    assert not audit.ok
+    assert audit.host_escapes
+
+
+def test_dtype_histograms_flag_wide_buffers_not_weak_scalars():
+    text = ("%0 = stablehlo.add %a, %b : tensor<8x4xi32>\n"
+            "%c = stablehlo.constant dense<0> : tensor<i64>\n"     # weak lit
+            "%1 = stablehlo.convert %c : tensor<1xi64>\n"          # 1-elem
+            "%2 = stablehlo.iota : tensor<2x3xi64>\n")             # real leak
+    assert dtype_histogram(text) == {"i32": 1, "i64": 3}
+    assert wide_buffer_histogram(text) == {"i64": 1}
+
+
+# ---------------------------------------------------------------------------
+# runtime guards
+# ---------------------------------------------------------------------------
+
+def test_no_recompiles_passes_warm_and_catches_cold():
+    f = jax.jit(lambda x: x * 2 + 1)
+    x = jnp.arange(8, dtype=jnp.int32)
+    f(x)  # warm
+    with guards.no_recompiles():
+        f(x)  # cache hit: fine
+    g = jax.jit(lambda x: x * 3 - 1)
+    with pytest.raises(guards.GuardViolation, match="compiled 1"):
+        with guards.no_recompiles():
+            g(x)  # cold compile inside the region
+
+
+def test_no_recompiles_allowance_and_recorder():
+    h = jax.jit(lambda x: x - 7)
+    x = jnp.arange(4, dtype=jnp.int32)
+    with guards.no_recompiles(allow=1) as rec:
+        h(x)
+    assert len(rec.compiled) == 1
+
+
+def test_no_transfers_catches_planted_item():
+    x = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(guards.GuardViolation, match="item"):
+        with guards.no_transfers():
+            x[0].item()  # the planted host sync
+    assert x[0].item() == 0  # instrumentation fully restored
+
+
+def test_no_transfers_catches_np_asarray_and_allows_device_math():
+    x = jnp.arange(8, dtype=jnp.int32)
+    with guards.no_transfers():
+        y = (x * 2).sum()  # pure device work: fine
+    with pytest.raises(guards.GuardViolation):
+        with guards.no_transfers():
+            np.asarray(x)
+    np.testing.assert_array_equal(np.asarray(x), np.arange(8))
+
+
+def test_guard_fixtures_are_exposed(no_recompiles, no_transfers):
+    assert no_recompiles is guards.no_recompiles
+    assert no_transfers is guards.no_transfers
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    from repro.analysis.__main__ import main
+
+    clean = tmp_path / "src/repro/core/ok.py"
+    clean.parent.mkdir(parents=True)
+    clean.write_text("import jax.numpy as jnp\n"
+                     "def f(x):\n"
+                     "    return jnp.sum(x, dtype=jnp.int32)\n")
+    out = tmp_path / "report.json"
+    assert main([str(tmp_path), "--json", str(out)]) == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["ok"] and report["lint"]["unwaived"] == 0
+
+    dirty = tmp_path / "src/repro/core/bad.py"
+    dirty.write_text("import jax.numpy as jnp\n"
+                     "def f(x):\n"
+                     "    return jnp.sum(x)\n")
+    assert main([str(tmp_path)]) == 1
+
+
+def test_cli_list_rules(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in RULES:
+        assert code in out
