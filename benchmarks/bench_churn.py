@@ -1,0 +1,320 @@
+"""Elastic fleet serving under session churn: ElasticFleet vs looped dict.
+
+The steady-state fleet benchmark (bench_fleet.py) measures a fixed
+population.  Real deployments are elastic — electrode streams connect,
+drop, and reconnect continuously — so this module drives an
+:class:`~repro.serve.lifecycle.ElasticFleet` with a SEEDED Poisson churn
+trace (arrivals and departures drawn per round, chunk payloads included)
+and reports what serving looks like while the slot map is in motion:
+
+  churn.S{s}.p50 / .p99        per-decision push latency distribution
+                               across churn rounds (pooled over iters)
+  churn.S{s}.baseline_loop     dict-of-SeizureSession running the SAME
+  churn.S{s}.fleet             trace (identical admissions, evictions
+                               and payloads, replayed from the seed)
+  churn.S{s}.speedup           fleet/baseline sessions-per-second ratio
+                               under churn — the row the CI gate reads
+  churn.S{s}.retention.speedup churn vs steady-state sessions/s in the
+                               same process (how much throughput the
+                               admission/eviction machinery costs)
+  churn.norecompile            status: a full churn trace after warmup
+                               compiles ZERO XLA programs (admit/evict
+                               reuse slots without recompiling)
+  churn.recovery               status: save -> churn -> kill (new fleet
+                               from_checkpoint) -> replay is bit-exact
+                               with the uninterrupted run's decisions
+
+Methodology matches bench_fleet.py: min-over-iters statistic (shared-box
+scheduler noise only ever adds time), explicit ``jax.block_until_ready``
+on the fleet's raw rounds, and the trace covers admission + eviction +
+push cost end to end — the whole point is that lifecycle ops ride inside
+the serving loop.  Between timing iters the fleet is drained (all
+sessions evicted) so every iter replays the trace from the same empty
+slot map.
+
+BENCH_TINY=1 (CI smoke) shrinks to S in {4, 8} on a small geometry.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+# multiple CPU "devices" let the elastic fleet spread tiles across cores;
+# only effective when this module is the first jax-backend user in the
+# process (see bench_fleet.py for why run.py does not force this globally)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count() or 1}"
+    ).strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import tiny
+from repro.analysis.guards import GuardViolation, no_recompiles
+from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.serve.engine import SeizureSession
+from repro.serve.lifecycle import ElasticFleet
+
+PIDS = ("p0", "p1")
+
+
+def _config() -> tuple[HDCConfig, tuple[int, ...], int, int]:
+    """(cfg, capacities, churn rounds per trace, timing iters)."""
+    if tiny():
+        cfg = HDCConfig(dim=256, segments=8, channels=16, window=64,
+                        temporal_threshold=8)
+        return cfg, (4, 8), 10, 2
+    return HDCConfig(), (8, 64), 24, 3
+
+
+def _trained(cfg: HDCConfig, seed: int) -> HDCPipeline:
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(
+        rng.integers(0, cfg.codes, (1, 4 * cfg.window, cfg.channels), np.uint8))
+    labels = np.asarray(rng.integers(0, 2, (1, 4), np.int32))
+    labels[0, :2] = (0, 1)  # every class needs >= 1 example
+    return HDCPipeline.init(jax.random.PRNGKey(42 + seed), cfg).train_one_shot(
+        codes, jnp.asarray(labels))
+
+
+def _pid(tid: int) -> str:
+    return PIDS[tid % len(PIDS)]
+
+
+def _trace(seed: int, rounds: int, capacity: int, cfg: HDCConfig
+           ) -> list[tuple[list[int], list[int], dict[int, np.ndarray]]]:
+    """Seeded Poisson churn trace: per round ``(arrivals, departures,
+    {tid: (window, channels) chunk})`` — both executors replay it verbatim,
+    so their work (and their decisions) is identical by construction.
+    Occupancy is capped at ``capacity`` and floored at 1 live stream."""
+    rng = np.random.default_rng(seed)
+    lam = max(1.0, capacity / 8.0)
+    live: list[int] = []
+    next_tid = 0
+    ops = []
+    for r in range(rounds):
+        n_arr = int(rng.poisson(lam))
+        if r == 0:  # start the trace half-full so round 0 already serves
+            n_arr = max(n_arr, capacity // 2, 1)
+        arrivals = []
+        for _ in range(n_arr):
+            if len(live) < capacity:
+                arrivals.append(next_tid)
+                live.append(next_tid)
+                next_tid += 1
+        n_dep = min(int(rng.poisson(lam)), len(live) - 1)
+        departures = ([int(t) for t in
+                       rng.choice(live, size=n_dep, replace=False)]
+                      if n_dep > 0 else [])
+        for t in departures:
+            live.remove(t)
+        chunks = {t: rng.integers(0, cfg.codes, (cfg.window, cfg.channels),
+                                  np.uint8) for t in live}
+        ops.append((arrivals, departures, chunks))
+    return ops
+
+
+def _run_fleet(fleet: ElasticFleet, ops) -> list[tuple[float, int]]:
+    """Replay the trace on the fleet; returns per-round ``(push seconds,
+    sessions pushed)`` samples.  Caller drains the fleet afterwards."""
+    tid_sid: dict[int, int] = {}
+    lat = []
+    for arrivals, departures, chunks in ops:
+        for t in arrivals:
+            tid_sid[t] = fleet.admit(_pid(t))
+        if departures:
+            fleet.evict([tid_sid.pop(t) for t in departures],
+                        with_state=False)
+        if chunks:
+            t0 = time.perf_counter()
+            rounds, _ = fleet.push_sessions_raw(
+                {tid_sid[t]: c for t, c in chunks.items()})
+            jax.block_until_ready([r.tiles for r in rounds])
+            lat.append((time.perf_counter() - t0, len(chunks)))
+    fleet.evict(sorted(tid_sid.values()), with_state=False)
+    return lat
+
+
+def _run_baseline(pipes: dict[str, HDCPipeline], ops
+                  ) -> list[tuple[float, int]]:
+    """The pre-elastic serving shape on the same trace: a dict of
+    SeizureSession objects, one jit dispatch per live stream per round."""
+    sessions: dict[int, SeizureSession] = {}
+    lat = []
+    for arrivals, departures, chunks in ops:
+        for t in arrivals:
+            sessions[t] = SeizureSession(pipes[_pid(t)])
+        for t in departures:
+            del sessions[t]
+        if chunks:
+            t0 = time.perf_counter()
+            for t, c in chunks.items():
+                sessions[t].push(c)  # decisions are host arrays already
+            lat.append((time.perf_counter() - t0, len(chunks)))
+    return lat
+
+
+def _time_trace(run_once, iters: int) -> tuple[float, list[tuple[float, int]]]:
+    """(min total trace seconds over iters, pooled per-round samples)."""
+    best, pooled = float("inf"), []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        lat = run_once()
+        best = min(best, time.perf_counter() - t0)
+        pooled.extend(lat)
+    return best, pooled
+
+
+def _norecompile_row(fleet: ElasticFleet, ops) -> dict:
+    """Run one full churn trace inside ``no_recompiles()``: after warmup,
+    admissions and evictions must reuse slots without any XLA compile."""
+    n_ops = sum(len(a) + len(d) + bool(c) for a, d, c in ops)
+    try:
+        with no_recompiles():
+            _run_fleet(fleet, ops)
+        derived = (f"ok (0 compiles over {n_ops} lifecycle ops, "
+                   f"{len(ops)} churn rounds)")
+    except GuardViolation as e:
+        derived = f"FAILED: {e}"
+    return {"name": "churn.norecompile", "us_per_call": "", "derived": derived}
+
+
+def _recovery_row(fleet: ElasticFleet, pipes, cfg: HDCConfig,
+                  capacity: int) -> dict:
+    """Checkpoint, keep serving, then prove a restarted fleet replays the
+    post-checkpoint event suffix to bit-exact decisions."""
+    rng = np.random.default_rng(7)
+    sids = [fleet.admit(_pid(i)) for i in range(max(2, capacity // 2))]
+    # settle mid-window so the checkpoint carries partial accumulator state
+    fleet.push_sessions({s: rng.integers(
+        0, cfg.codes, (cfg.window // 2, cfg.channels), np.uint8)
+        for s in sids})
+    with tempfile.TemporaryDirectory() as root:
+        fleet.save(root)
+        cursor = fleet.op_id
+        # post-checkpoint churn the restarted worker must replay
+        live_decisions = []
+        extra = fleet.admit(_pid(len(sids)))
+        for _ in range(3):
+            chunks = {s: rng.integers(0, cfg.codes, (cfg.window, cfg.channels),
+                                      np.uint8) for s in [*sids, extra]}
+            live_decisions.append(fleet.push_sessions(chunks))
+        fleet.evict([sids[0]], with_state=False)
+        events = fleet.events_since(cursor)
+
+        restarted = ElasticFleet.from_checkpoint(
+            pipes, root, tile=fleet.capacity, max_tiles=1,
+            buckets=(cfg.window, cfg.window // 2))
+        replayed = restarted.replay(events)
+    fleet.evict(sorted(fleet.sessions), with_state=False)
+
+    pushes = [r for r in replayed.values() if isinstance(r, dict)
+              and all(isinstance(v, list) for v in r.values())]
+    compared = 0
+    for live, redo in zip(live_decisions, pushes):
+        for sid, decs in live.items():
+            for a, b in zip(decs, redo[sid]):
+                if (a.frame_index != b.frame_index
+                        or a.prediction != b.prediction
+                        or not np.array_equal(a.scores, b.scores)):
+                    return {"name": "churn.recovery", "us_per_call": "",
+                            "derived": f"FAILED: sid {sid} frame "
+                                       f"{a.frame_index} diverged after "
+                                       "restore+replay"}
+                compared += 1
+    if len(pushes) != len(live_decisions) or compared == 0:
+        return {"name": "churn.recovery", "us_per_call": "",
+                "derived": f"FAILED: replay returned {len(pushes)} push "
+                           f"results for {len(live_decisions)} live pushes "
+                           f"({compared} decisions compared)"}
+    return {"name": "churn.recovery", "us_per_call": "",
+            "derived": (f"ok ({len(events)} ops replayed after restart, "
+                        f"{compared} decisions bit-exact)")}
+
+
+def run() -> list[dict]:
+    cfg, s_list, rounds, iters = _config()
+    pipes = {p: _trained(cfg, i) for i, p in enumerate(PIDS)}
+    rows = [{
+        "name": "churn.devices",
+        "us_per_call": "",
+        "derived": (f"n={len(jax.devices())} (elastic tiles round-robin "
+                    "across local devices)"),
+    }]
+    for s in s_list:
+        ops = _trace(seed=s, rounds=rounds, capacity=s, cfg=cfg)
+        n_rounds = sum(1 for _, _, c in ops if c)
+        n_decisions = sum(len(c) for _, _, c in ops)
+
+        _run_baseline(pipes, ops)  # warm the shared per-session jits
+        t_base, _ = _time_trace(lambda: _run_baseline(pipes, ops), iters)
+
+        fleet = ElasticFleet(pipes, tile=s, max_tiles=1,
+                             queue_limit=8, log_rounds=4 * rounds + 16,
+                             buckets=(cfg.window, cfg.window // 2))
+        fleet.warmup()
+        t_fleet, pooled = _time_trace(lambda: _run_fleet(fleet, ops), iters)
+
+        # steady-state control: same process, slot map at rest
+        steady_sids = [fleet.admit(_pid(i)) for i in range(s)]
+        steady = {sid: ops[-1][2][next(iter(ops[-1][2]))]
+                  for sid in steady_sids}
+
+        def push_steady():
+            raw, _ = fleet.push_sessions_raw(steady)
+            jax.block_until_ready([r.tiles for r in raw])
+
+        push_steady()  # settle into pure steady state before timing
+        t_steady = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            push_steady()
+            t_steady = min(t_steady, time.perf_counter() - t0)
+        fleet.evict(steady_sids, with_state=False)
+
+        per_dec = np.array([dt * 1e6 / n for dt, n in pooled])
+        p50, p99 = np.percentile(per_dec, 50), np.percentile(per_dec, 99)
+        for name, val in (("p50", p50), ("p99", p99)):
+            rows.append({
+                "name": f"churn.S{s}.{name}",
+                "us_per_call": f"{val:.0f}",
+                "derived": (f"per-decision push latency under Poisson churn "
+                            f"({n_rounds} rounds, {n_decisions} decisions, "
+                            f"{iters} iters pooled)"),
+            })
+        for name, t in (("baseline_loop", t_base), ("fleet", t_fleet)):
+            rows.append({
+                "name": f"churn.S{s}.{name}",
+                "us_per_call": f"{t * 1e6:.0f}",
+                "derived": (f"sessions/s={n_decisions / t:.1f}"
+                            f";us/decision={t * 1e6 / n_decisions:.1f}"
+                            f";trace={len(ops)} rounds"),
+            })
+        rows.append({
+            "name": f"churn.S{s}.speedup",
+            "us_per_call": "",
+            "derived": (f"{t_base / t_fleet:.2f}x sessions/s vs looped "
+                        f"SeizureSession dict under identical churn trace"),
+        })
+        churn_us = t_fleet * 1e6 / n_decisions
+        steady_us = t_steady * 1e6 / s
+        rows.append({
+            "name": f"churn.S{s}.retention.speedup",
+            "us_per_call": "",
+            "derived": (f"{steady_us / churn_us:.2f}x churn vs steady-state "
+                        f"sessions/s retained (same process, same capacity)"),
+        })
+        if s == s_list[-1]:
+            rows.append(_norecompile_row(fleet, ops))
+            rows.append(_recovery_row(fleet, pipes, cfg, s))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

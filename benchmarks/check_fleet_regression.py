@@ -29,12 +29,23 @@ with ``ok`` — a fast cold start that changed decisions, or a stale
 artifact that did not fall back to JIT, is a correctness bug, not a perf
 win.
 
+``--churn-fresh``/``--churn-reference`` do the same for the elastic-fleet
+churn benchmark (bench_churn.py): the ``churn.*.speedup`` ratio rows
+(fleet vs looped baseline under an identical Poisson churn trace, plus
+the churn-vs-steady-state throughput retention) gate like any other
+known-row family, and the ``churn.norecompile`` / ``churn.recovery``
+status rows must start with ``ok`` — an admission path that recompiles,
+or a restore+replay that changes decisions, defeats the elasticity
+subsystem's whole contract.
+
 Usage::
 
     python -m benchmarks.check_fleet_regression FRESH.json REFERENCE.json \
         [--tolerance 0.25] [--max-spatial-share 0.5] \
         [--coldstart-fresh BENCH_coldstart.json \
-         --coldstart-reference benchmarks/BENCH_coldstart_tiny.json]
+         --coldstart-reference benchmarks/BENCH_coldstart_tiny.json] \
+        [--churn-fresh BENCH_churn.json \
+         --churn-reference benchmarks/BENCH_churn_tiny.json]
 """
 
 from __future__ import annotations
@@ -47,8 +58,9 @@ import sys
 _SPEEDUP = re.compile(r"^([0-9.]+)x ")
 _SHARE = re.compile(r"^share=([0-9.]+)% ")
 
-# coldstart rows whose derived string must start with "ok"
+# rows whose derived string must start with "ok" for the gate to pass
 COLDSTART_STATUS_ROWS = ("coldstart.bitexact", "coldstart.fallback")
+CHURN_STATUS_ROWS = ("churn.norecompile", "churn.recovery")
 
 
 def _load(path: str) -> dict:
@@ -147,11 +159,12 @@ def gate_speedups(fresh_path: str, ref_path: str, *, prefix: str,
     return failed
 
 
-def gate_coldstart_status(fresh_path: str) -> list[str]:
-    """The bitexact/fallback rows must exist and start with "ok"."""
+def gate_status_rows(fresh_path: str,
+                     names: tuple[str, ...]) -> list[str]:
+    """The named status rows must exist and start with "ok"."""
     failed = []
-    rows = status_rows(fresh_path, COLDSTART_STATUS_ROWS)
-    for name in COLDSTART_STATUS_ROWS:
+    rows = status_rows(fresh_path, names)
+    for name in names:
         derived = rows.get(name)
         if derived is None:
             print(f"{name}: missing from {fresh_path} -> FAILED")
@@ -179,9 +192,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--coldstart-reference", default=None,
                     help="committed cold-start reference "
                          "(benchmarks/BENCH_coldstart_tiny.json)")
+    ap.add_argument("--churn-fresh", default=None,
+                    help="BENCH_churn.json from this run (enables the "
+                         "elastic-fleet churn ratio + lifecycle gate)")
+    ap.add_argument("--churn-reference", default=None,
+                    help="committed churn reference "
+                         "(benchmarks/BENCH_churn_tiny.json)")
     args = ap.parse_args(argv)
     if (args.coldstart_fresh is None) != (args.coldstart_reference is None):
         ap.error("--coldstart-fresh and --coldstart-reference go together")
+    if (args.churn_fresh is None) != (args.churn_reference is None):
+        ap.error("--churn-fresh and --churn-reference go together")
 
     failed = gate_speedups(args.fresh, args.reference,
                            prefix="fleet.", tolerance=args.tolerance)
@@ -210,7 +231,13 @@ def main(argv: list[str] | None = None) -> int:
                                 args.coldstart_reference,
                                 prefix="coldstart.",
                                 tolerance=args.tolerance)
-        failed += gate_coldstart_status(args.coldstart_fresh)
+        failed += gate_status_rows(args.coldstart_fresh,
+                                   COLDSTART_STATUS_ROWS)
+
+    if args.churn_fresh:
+        failed += gate_speedups(args.churn_fresh, args.churn_reference,
+                                prefix="churn.", tolerance=args.tolerance)
+        failed += gate_status_rows(args.churn_fresh, CHURN_STATUS_ROWS)
 
     if failed:
         print(f"fleet perf gate failed: {', '.join(failed)}",

@@ -13,6 +13,7 @@ uploads these as artifacts, so the perf trajectory accumulates).
   online      one-shot vs iterative/online retraining   (framework)
   reliability BER degradation curves + AM ECC tradeoff  (framework)
   coldstart   fresh-JIT vs warm-cache vs serialized AOT (framework)
+  churn       elastic fleet under Poisson session churn (framework)
   roofline    aggregated dry-run roofline terms          (framework)
 
 A module that raises still prints a ``<mod>.ERROR`` CSV row (so partial runs
@@ -30,7 +31,7 @@ import traceback
 from benchmarks.common import emit, write_bench_json
 
 DEFAULT_MODULES = ["fig1c", "fig4", "fig5", "table1", "throughput", "fleet",
-                   "online", "reliability", "coldstart", "roofline"]
+                   "online", "reliability", "coldstart", "churn", "roofline"]
 
 
 def main(argv: list[str] | None = None) -> int:

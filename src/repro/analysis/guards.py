@@ -101,14 +101,34 @@ def no_transfers():
     caught too.  Explicit ``jax.device_put`` / ``jax.device_get`` escapes
     are intentionally NOT patched: steady-state code that wants to sync
     must say so.
+
+    DONATED buffers are exempt: reading an array whose buffer was donated
+    (``is_deleted()``) cannot transfer anything — there is no buffer — so
+    the guard steps aside and lets jax raise its "Array has been deleted"
+    RuntimeError.  Before this carve-out the guard reported a phantom
+    host sync on donated-buffer reuse, hiding the actual use-after-donate
+    bug behind a misleading verdict.
     """
     import numpy as np
 
     cls = _array_impl_type()
     saved: dict[str, object] = {}
 
-    def _blocked(name):
+    def _deleted(a) -> bool:
+        # donated-buffer reuse: a donated (deleted) array has NO live device
+        # buffer, so touching it cannot possibly transfer — fall through to
+        # the original method, which raises jax's informative "Array has
+        # been deleted" RuntimeError instead of a false host-sync verdict
+        # that would mask the real use-after-donate bug
+        try:
+            return bool(a.is_deleted())
+        except Exception:  # pragma: no cover - exotic array impls
+            return False
+
+    def _blocked(name, orig):
         def method(self, *args, **kwargs):
+            if _deleted(self) and orig is not None:
+                return orig(self, *args, **kwargs)
             raise GuardViolation(
                 f"implicit host sync via Array.{name} inside a "
                 f"no_transfers() region")
@@ -118,7 +138,7 @@ def no_transfers():
         if hasattr(cls, name):
             saved[name] = cls.__dict__.get(name)
             try:
-                setattr(cls, name, _blocked(name))
+                setattr(cls, name, _blocked(name, saved[name]))
             except TypeError:  # pragma: no cover - immutable type
                 saved.pop(name, None)
 
@@ -127,7 +147,7 @@ def no_transfers():
     # be guarded for np.asarray(device_array) to be caught on CPU
     def _np_guard(orig, name):
         def wrapper(*args, **kwargs):
-            if args and isinstance(args[0], cls):
+            if args and isinstance(args[0], cls) and not _deleted(args[0]):
                 raise GuardViolation(
                     f"implicit host sync via np.{name}(device array) "
                     f"inside a no_transfers() region")

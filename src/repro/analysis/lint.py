@@ -13,7 +13,11 @@ RPR001    unpinned dtype on a width-sensitive ``jnp`` call in a
           X64), factories need an explicit dtype argument.
 RPR002    host-sync call (``.item()``/``.tolist()``/``np.asarray``/
           ``jax.device_get``/``float(arg)`` on a traced operand) inside
-          a function reachable from a jit/pallas/scan entry point.
+          a function reachable from a jit/pallas/scan entry point.  The
+          call graph spans module-level functions AND methods of
+          top-level classes (``jax.jit(self._step)`` roots,
+          ``self.foo()``/``cls.foo()`` edges); methods inherited from a
+          base class in another module are a known blind spot.
 RPR003    nondeterminism source in ``src/``: legacy ``np.random.*``
           global-state API, seedless ``np.random.default_rng()``, or
           the stdlib ``random`` module.
@@ -106,11 +110,15 @@ class _Module:
     tree: ast.Module
     waivers: dict[int, set[str]] = field(default_factory=dict)
     aliases: dict[str, str] = field(default_factory=dict)
+    # module-level functions by name PLUS methods of top-level classes by
+    # qualified "ClassName.method" name — the call graph walks through both
     functions: dict[str, ast.FunctionDef] = field(default_factory=dict)
     jit_roots: set[str] = field(default_factory=set)
     pallas_kernels: set[str] = field(default_factory=set)
-    # calls made from each module-level function: ("local", name) or
-    # ("ext", module, name)
+    # calls made from each function/method: ("local", qname) or
+    # ("ext", module, name); self.foo()/cls.foo() resolve to the OWNING
+    # class's "ClassName.foo" (inherited methods defined elsewhere are a
+    # documented blind spot)
     calls: dict[str, set[tuple]] = field(default_factory=dict)
 
     @property
@@ -169,7 +177,8 @@ def _dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
 
 
 def _fn_target(node: ast.AST, aliases: dict[str, str]):
-    """Resolve a function-valued expression to a bare Name node, unwrapping
+    """Resolve a function-valued expression to a bare Name node or a
+    ``self.x`` / ``cls.x`` Attribute node, unwrapping
     ``functools.partial(fn, ...)``."""
     if isinstance(node, ast.Call):
         dotted = _dotted(node.func, aliases)
@@ -178,7 +187,35 @@ def _fn_target(node: ast.AST, aliases: dict[str, str]):
         return None
     if isinstance(node, ast.Name):
         return node
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and \
+            node.value.id in ("self", "cls"):
+        return node
     return None
+
+
+def _target_qname(node: ast.AST, aliases: dict[str, str],
+                  cls_name: str | None,
+                  functions: dict[str, ast.FunctionDef]) -> str | None:
+    """Resolve a function-valued expression to a key of *functions*:
+    a module-level name, or — inside class *cls_name* — the qualified
+    ``ClassName.method`` of a ``self.x``/``cls.x`` reference."""
+    target = _fn_target(node, aliases)
+    if isinstance(target, ast.Name) and target.id in functions:
+        return target.id
+    if isinstance(target, ast.Attribute) and cls_name is not None:
+        qname = f"{cls_name}.{target.attr}"
+        if qname in functions:
+            return qname
+    return None
+
+
+def _walk_with_class(tree: ast.Module):
+    """Yield ``(enclosing top-level class name | None, node)`` pairs."""
+    for top in tree.body:
+        cls = top.name if isinstance(top, ast.ClassDef) else None
+        for node in ast.walk(top):
+            yield cls, node
 
 
 def _parse_module(path: str, source: str) -> _Module | None:
@@ -208,6 +245,10 @@ def _parse_module(path: str, source: str) -> _Module | None:
     for node in tree.body:
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             mod.functions[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    mod.functions[f"{node.name}.{sub.name}"] = sub
 
     _find_jit_roots(mod)
     _collect_calls(mod)
@@ -221,20 +262,21 @@ def _is_jit_expr(node: ast.AST, aliases: dict[str, str]) -> bool:
 
 def _find_jit_roots(mod: _Module) -> None:
     aliases = mod.aliases
-    # decorators
-    for fn in mod.functions.values():
+    # decorators (module-level functions and class methods alike)
+    for qname, fn in mod.functions.items():
         for dec in fn.decorator_list:
             if _is_jit_expr(dec, aliases):
-                mod.jit_roots.add(fn.name)
+                mod.jit_roots.add(qname)
             elif isinstance(dec, ast.Call):
                 dotted = _dotted(dec.func, aliases)
                 if _is_jit_expr(dec.func, aliases):
-                    mod.jit_roots.add(fn.name)
+                    mod.jit_roots.add(qname)
                 elif dotted in ("functools.partial", "partial") and \
                         dec.args and _is_jit_expr(dec.args[0], aliases):
-                    mod.jit_roots.add(fn.name)
-    # call sites: jax.jit(f, ...), lax.scan(f, ...), pallas_call(f, ...)
-    for node in ast.walk(mod.tree):
+                    mod.jit_roots.add(qname)
+    # call sites: jax.jit(f), lax.scan(f, ...), pallas_call(f, ...) — with
+    # f a module-level name or a self./cls. method of the enclosing class
+    for cls_name, node in _walk_with_class(mod.tree):
         if not isinstance(node, ast.Call):
             continue
         dotted = _dotted(node.func, aliases)
@@ -242,18 +284,20 @@ def _find_jit_roots(mod: _Module) -> None:
             continue
         if _is_jit_expr(node.func, aliases) or dotted in _TRACED_WRAPPERS:
             for arg in node.args:
-                target = _fn_target(arg, aliases)
-                if target is not None and target.id in mod.functions:
-                    mod.jit_roots.add(target.id)
+                qname = _target_qname(arg, aliases, cls_name, mod.functions)
+                if qname is not None:
+                    mod.jit_roots.add(qname)
         if dotted.endswith("pallas_call") and node.args:
-            target = _fn_target(node.args[0], aliases)
-            if target is not None and target.id in mod.functions:
-                mod.jit_roots.add(target.id)
-                mod.pallas_kernels.add(target.id)
+            qname = _target_qname(node.args[0], aliases, cls_name,
+                                  mod.functions)
+            if qname is not None:
+                mod.jit_roots.add(qname)
+                mod.pallas_kernels.add(qname)
 
 
 def _collect_calls(mod: _Module) -> None:
-    for name, fn in mod.functions.items():
+    for qname, fn in mod.functions.items():
+        cls_name = qname.rsplit(".", 1)[0] if "." in qname else None
         targets: set[tuple] = set()
         for node in ast.walk(fn):
             if not isinstance(node, ast.Call):
@@ -268,11 +312,21 @@ def _collect_calls(mod: _Module) -> None:
                         module, _, func = dotted.rpartition(".")
                         targets.add(("ext", module, func))
             elif isinstance(node.func, ast.Attribute):
+                v = node.func.value
+                if isinstance(v, ast.Name) and v.id in ("self", "cls"):
+                    # method call through the instance: resolve against the
+                    # owning class (methods inherited from another module's
+                    # base class are a documented blind spot)
+                    mname = f"{cls_name}.{node.func.attr}" if cls_name \
+                        else None
+                    if mname and mname in mod.functions:
+                        targets.add(("local", mname))
+                    continue
                 dotted = _dotted(node.func, mod.aliases)
                 if dotted and dotted.startswith("repro."):
                     module, _, func = dotted.rpartition(".")
                     targets.add(("ext", module, func))
-        mod.calls[name] = targets
+        mod.calls[qname] = targets
 
 
 def _traced_fixpoint(modules: dict[str, _Module]) -> set[tuple]:

@@ -55,15 +55,34 @@ def _flatten(tree: Any):
     return out
 
 
+def _link_or_copy(src: str, dst: str) -> None:
+    try:
+        os.link(src, dst)  # hard link: refcounted, safe across _gc removals
+    except OSError:  # cross-device root or a filesystem without links
+        shutil.copy2(src, dst)
+
+
 def save(root: str, step: int, tree: Any, meta: dict | None = None,
-         aot: dict | None = None) -> str:
+         aot: dict | None = None,
+         link_from: dict[str, str] | None = None) -> str:
     """Synchronous atomic save. Returns the final directory.
 
     ``aot`` (optional): ``{"path": <artifact dir>, "key": runtime/aot.py's
     ``artifact_key()``}`` — a validity pointer from this checkpoint to the
     serialized-executable deploy artifact its producer compiled against.
     Consumers (``StreamingFleet.from_artifact``) compare the key with the
-    running environment and fall back to JIT warmup when it is stale."""
+    running environment and fall back to JIT warmup when it is stale.
+
+    ``link_from`` (optional): ``{leaf key: existing .npy path}`` for leaves
+    the caller knows are UNCHANGED since a previous step — the incremental
+    path.  Those leaves skip ``device_get`` + serialization entirely and are
+    hard-linked (copied when links are unsupported) from the given file, so
+    a periodic checkpoint of a mostly-idle fleet costs I/O only for the
+    tiles that actually advanced.  Every step directory stays fully
+    self-contained: hard links are per-file refcounts, so ``_gc`` deleting
+    the source step never invalidates a newer one.  The shape/dtype
+    recorded in the manifest is read from the linked file's npy header (a
+    mismatch with the live leaf raises, catching stale-dirty-flag bugs)."""
     final = os.path.join(root, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -72,18 +91,44 @@ def save(root: str, step: int, tree: Any, meta: dict | None = None,
     manifest = {"step": step, "leaves": [], "meta": meta or {}}
     if aot is not None:
         manifest["aot"] = aot
+    link_from = link_from or {}
     for i, (key, leaf) in enumerate(_flatten(tree)):
-        arr = np.asarray(jax.device_get(leaf))
         fname = f"arr_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        src = link_from.get(key)
+        if src is not None:
+            header = np.load(src, mmap_mode="r")  # header only, no read
+            if (tuple(header.shape) != tuple(np.shape(leaf))
+                    or np.dtype(header.dtype) != np.dtype(leaf.dtype)):
+                raise ValueError(
+                    f"link_from[{key!r}]: {src} holds "
+                    f"{header.dtype}{tuple(header.shape)}, live leaf is "
+                    f"{np.dtype(leaf.dtype)}{tuple(np.shape(leaf))}")
+            shape, dtype = list(header.shape), str(header.dtype)
+            del header
+            _link_or_copy(src, os.path.join(tmp, fname))
+        else:
+            arr = np.asarray(jax.device_get(leaf))
+            np.save(os.path.join(tmp, fname), arr)
+            shape, dtype = list(arr.shape), str(arr.dtype)
         manifest["leaves"].append({"key": key, "file": fname,
-                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+                                   "shape": shape, "dtype": dtype})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def leaf_files(root: str, step: int) -> dict[str, str]:
+    """``{leaf key: absolute .npy path}`` for one saved step — the source
+    map an incremental ``save(..., link_from=...)`` draws clean leaves
+    from."""
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    return {leaf["key"]: os.path.join(d, leaf["file"])
+            for leaf in manifest["leaves"]}
 
 
 class AsyncCheckpointer:

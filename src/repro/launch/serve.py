@@ -37,12 +37,48 @@ the codebook/AM banks replicate.
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.launch.train import parse_mesh
+
+
+class _GracefulStop:
+    """SIGTERM/SIGINT -> finish the in-flight round, write one final atomic
+    checkpoint, exit 0.  The flag is only *read* at round boundaries, so a
+    kill mid-push never tears the fleet state — the checkpoint the next
+    worker resumes from is always a complete round (ckpt saves are already
+    atomic: tmp dir + rename)."""
+
+    def __init__(self):
+        self.signum: int | None = None
+        self._old: dict[int, object] = {}
+
+    def __enter__(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._old[sig] = signal.signal(sig, self._handle)
+        return self
+
+    def __exit__(self, *exc):
+        for sig, old in self._old.items():
+            signal.signal(sig, old)
+        return False
+
+    def _handle(self, signum, frame):
+        if self.signum is not None:  # second signal: give up immediately
+            raise KeyboardInterrupt
+        self.signum = signum
+
+    @property
+    def requested(self) -> bool:
+        return self.signum is not None
+
+    @property
+    def name(self) -> str:
+        return signal.Signals(self.signum).name if self.signum else ""
 
 
 def _build_hdc_fleet(args):
@@ -132,18 +168,27 @@ def run_hdc_fleet(args) -> None:
             print(f"--resume: no checkpoint under {args.ckpt_dir}, cold start")
     decisions = 0
     adapted = 0
+    rounds_done = 0
     t0 = time.perf_counter()
-    for r in range(args.rounds):
-        out = fleet.push(chunks)
-        decisions += sum(len(o) for o in out)
-        if args.adapt_every and (r + 1) % args.adapt_every == 0:
-            # synthetic feedback: label each session's last frame at random
-            labels = np.where([len(o) > 0 for o in out],
-                              rng.integers(0, cfg.n_classes, args.sessions), -1)
-            adapted += int(fleet.adapt(labels).sum())
+    with _GracefulStop() as stopper:
+        for r in range(args.rounds):
+            if stopper.requested:
+                break
+            out = fleet.push(chunks)
+            decisions += sum(len(o) for o in out)
+            rounds_done = r + 1
+            if args.adapt_every and (r + 1) % args.adapt_every == 0:
+                # synthetic feedback: label each session's last frame at random
+                labels = np.where([len(o) > 0 for o in out],
+                                  rng.integers(0, cfg.n_classes, args.sessions),
+                                  -1)
+                adapted += int(fleet.adapt(labels).sum())
+            if (args.ckpt_dir and args.ckpt_every
+                    and (r + 1) % args.ckpt_every == 0):
+                fleet.save(args.ckpt_dir)
     dt = time.perf_counter() - t0
-    rate = args.sessions * args.rounds / max(dt, 1e-9)
-    print(f"stream: {args.rounds} rounds x {chunk_len} cycles in {dt * 1e3:.1f} ms "
+    rate = args.sessions * rounds_done / max(dt, 1e-9)
+    print(f"stream: {rounds_done} rounds x {chunk_len} cycles in {dt * 1e3:.1f} ms "
           f"({rate:.0f} session-chunks/s, {decisions} decisions, "
           f"{dt * 1e6 / max(decisions, 1):.1f} us/decision)")
     if args.adapt_every:
@@ -153,6 +198,12 @@ def run_hdc_fleet(args) -> None:
     if args.ckpt_dir:
         path = fleet.save(args.ckpt_dir)
         print(f"saved fleet checkpoint -> {path}")
+    if stopper.requested:
+        # the final atomic checkpoint above IS the shutdown contract; exit
+        # clean so supervisors treat this as a graceful drain, not a crash
+        print(f"caught {stopper.name}: checkpointed after round "
+              f"{rounds_done}, exiting 0")
+        raise SystemExit(0)
 
 
 def run_lm(args) -> None:
@@ -240,6 +291,10 @@ def main():
                     help="run one fleet-wide online AM update every N rounds")
     ap.add_argument("--ckpt-dir", default=None,
                     help="save the fleet state here after the run")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="with --ckpt-dir: also checkpoint every N rounds "
+                         "(periodic crash-recovery saves, not just the "
+                         "final one)")
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint from --ckpt-dir "
                          "before streaming")

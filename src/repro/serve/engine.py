@@ -37,6 +37,8 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import io
+import json
 from dataclasses import dataclass
 from typing import Hashable, Mapping, Sequence
 
@@ -256,6 +258,10 @@ class ServingEngine:
         if fn is not None:  # prewarmed executable; JIT is the safety net
             try:
                 out = fn(*args)
+            except AssertionError:
+                # sanitizer verdicts (guards.GuardViolation) must surface,
+                # not silently demote the executable to a JIT recompile
+                raise
             except Exception:
                 self._exec.pop((b_pad, t), None)
         if out is None:
@@ -279,6 +285,68 @@ class FrameDecision:
     scores: np.ndarray        # (n_classes,)
     prediction: int           # argmax class id
     frame_hv: np.ndarray      # (W,) packed
+
+
+@dataclass(frozen=True)
+class SessionSnapshot:
+    """Compact host-side capture of ONE streaming session's full state.
+
+    This is the unit of reconnect-with-state: ``SeizureSession.snapshot()``
+    and ``ElasticFleet.evict(..., with_state=True)`` both produce one, and
+    either consumer (``SeizureSession.from_snapshot`` or
+    ``ElasticFleet.admit(pid, snapshot=...)``) resumes the stream
+    bit-exactly where it left off — mid-window accumulator, adapted AM
+    counter files, and the last emitted frame (so ``adapt`` feedback
+    survives the reconnect) all round-trip.  The nine array/scalar fields
+    mirror one row of ``serve.fleet.FleetState``.
+
+    ``to_bytes``/``from_bytes`` serialize through one compressed ``.npz``
+    blob (a few KB at paper geometry) for transport or queueing; the
+    patient id must be JSON-representable to cross that boundary.
+    """
+
+    patient_id: Hashable
+    counts: np.ndarray             # (D,) int32 temporal accumulator
+    filled: int                    # cycles toward the next frame (< window)
+    frame_index: int               # frames emitted so far
+    class_rows: np.ndarray         # (C, W) uint32 (possibly adapted) AM
+    am_counts: np.ndarray | None   # (C, D) int32 online counter file
+    am_n: np.ndarray | None        # (C,) int32 frames bundled per class
+    last_frame: np.ndarray         # (W,) uint32 last emitted frame HV
+    last_scores: np.ndarray        # (C,) int32 its AM scores
+    has_frame: int                 # 1 once a frame has been emitted
+
+    def to_bytes(self) -> bytes:
+        arrays = {
+            "counts": np.asarray(self.counts, np.int32),
+            "class_rows": np.asarray(self.class_rows, np.uint32),
+            "last_frame": np.asarray(self.last_frame, np.uint32),
+            "last_scores": np.asarray(self.last_scores, np.int32),
+            "scalars": np.asarray(
+                [self.filled, self.frame_index, self.has_frame,
+                 int(self.am_counts is not None)], np.int64),
+            "pid": np.frombuffer(
+                json.dumps(self.patient_id).encode(), np.uint8),
+        }
+        if self.am_counts is not None:
+            arrays["am_counts"] = np.asarray(self.am_counts, np.int32)
+            arrays["am_n"] = np.asarray(self.am_n, np.int32)
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **arrays)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "SessionSnapshot":
+        with np.load(io.BytesIO(blob)) as d:
+            filled, fidx, has_frame, has_am = (int(x) for x in d["scalars"])
+            return cls(
+                patient_id=json.loads(bytes(d["pid"]).decode()),
+                counts=d["counts"], filled=filled, frame_index=fidx,
+                class_rows=d["class_rows"],
+                am_counts=d["am_counts"] if has_am else None,
+                am_n=d["am_n"] if has_am else None,
+                last_frame=d["last_frame"], last_scores=d["last_scores"],
+                has_frame=has_frame)
 
 
 class SeizureSession:
@@ -374,6 +442,55 @@ class SeizureSession:
             jnp.asarray(label, jnp.int32), jnp.asarray(margin, jnp.float32),
             cfg)
         return bool(applied)
+
+    def snapshot(self, patient_id: Hashable = None) -> SessionSnapshot:
+        """Capture this session's full streaming state as a
+        ``SessionSnapshot`` (the session itself is untouched).  A session
+        rebuilt from it — here or admitted into an ``ElasticFleet`` slot —
+        continues the stream bit-exactly, including mid-window accumulator
+        fill and adapted AM state."""
+        cfg = self._pipe.cfg
+        c = cfg.n_classes
+        last = self._last
+        return SessionSnapshot(
+            patient_id=patient_id,
+            counts=self._counts.astype(np.int32, copy=True),
+            filled=int(self._filled),
+            frame_index=int(self._frame_index),
+            class_rows=np.asarray(self._class_hvs, np.uint32),
+            am_counts=(np.asarray(self._online.counts, np.int32)
+                       if self._online is not None else None),
+            am_n=(np.asarray(self._online.n, np.int32)
+                  if self._online is not None else None),
+            last_frame=(np.asarray(last.frame_hv, np.uint32)
+                        if last is not None
+                        else np.zeros((cfg.words,), np.uint32)),
+            last_scores=(np.asarray(last.scores, np.int32)
+                         if last is not None
+                         else np.zeros((c,), np.int32)),
+            has_frame=int(last is not None))
+
+    @classmethod
+    def from_snapshot(cls, pipeline: HDCPipeline,
+                      snap: SessionSnapshot) -> "SeizureSession":
+        """Rebuild a session from a ``snapshot()`` against the SAME trained
+        pipeline; the reconnect counterpart of ``snapshot``."""
+        sess = cls(pipeline)
+        sess._counts = np.asarray(snap.counts, np.int32).copy()
+        sess._filled = int(snap.filled)
+        sess._frame_index = int(snap.frame_index)
+        sess._class_hvs = jnp.asarray(np.asarray(snap.class_rows, np.uint32))
+        if snap.am_counts is not None:
+            sess._online = online.OnlineAMState(
+                counts=jnp.asarray(np.asarray(snap.am_counts, np.int32)),
+                n=jnp.asarray(np.asarray(snap.am_n, np.int32)))
+        if snap.has_frame:
+            scores = np.asarray(snap.last_scores, np.int32)
+            sess._last = FrameDecision(
+                frame_index=int(snap.frame_index) - 1,
+                scores=scores, prediction=int(np.argmax(scores)),
+                frame_hv=np.asarray(snap.last_frame, np.uint32))
+        return sess
 
     def push(self, codes: jax.Array) -> list[FrameDecision]:
         """Feed (t, channels) uint8 codes; returns decisions for every frame

@@ -598,6 +598,11 @@ class StreamingFleet:
         # (which (session, slot) pairs really emitted) without a round-trip
         self._filled_h = np.zeros((self._np,), np.int64)
         self._fidx_h = np.zeros((self._np,), np.int64)
+        # per-tile "state changed since last checkpoint" flags: steps and
+        # adapts set them, ckpt writers clear them — the incremental
+        # checkpoint path (ckpt.save link_from=...) hard-links untouched
+        # tiles from the previous step instead of re-serializing them
+        self._dirty_t = [True] * len(self._tile_slices)
         self._shapes_seen: set[int] = set()  # buckets JIT-dispatched so far
         # AOT executables (runtime/aot.py): ``warmup`` fills these with
         # pre-compiled step/adapt executables — loaded from a serialized
@@ -639,35 +644,39 @@ class StreamingFleet:
         return [self._put_tile(x[sl], axes, d)
                 for sl, d in zip(self._tile_slices, self._tile_devs)]
 
-    def _zero_states(self) -> list[FleetState]:
+    def _zero_state(self, sl: slice, d) -> FleetState:
+        """Fresh device state for ONE capacity tile (every session reset to
+        its patient's trained bank) — also the template the elastic fleet
+        uses to provision a spilled tile."""
         cfg = self._cfg
         c = self._class_rows0.shape[1]
         axes = _STATE_AXES
-        out = []
-        for sl, d in zip(self._tile_slices, self._tile_devs):
-            s = sl.stop - sl.start
-            if self._am_counts0 is not None:
-                am_counts, am_n = self._am_counts0[sl], self._am_n0[sl]
-            else:
-                am_counts = np.zeros((s, c, cfg.dim), np.int32)
-                am_n = np.zeros((s, c), np.int32)
-            put = self._put_tile
-            out.append(FleetState(
-                counts=put(np.zeros((s, cfg.dim), np.int32),
-                           axes["counts"], d),
-                filled=put(np.zeros((s,), np.int32), axes["filled"], d),
-                frame_index=put(np.zeros((s,), np.int32),
-                                axes["frame_index"], d),
-                class_rows=put(self._class_rows0[sl], axes["class_rows"], d),
-                am_counts=put(am_counts, axes["am_counts"], d),
-                am_n=put(am_n, axes["am_n"], d),
-                last_frame=put(np.zeros((s, cfg.words), np.uint32),
-                               axes["last_frame"], d),
-                last_scores=put(np.zeros((s, c), np.int32),
-                                axes["last_scores"], d),
-                has_frame=put(np.zeros((s,), np.int32), axes["has_frame"], d),
-            ))
-        return out
+        s = sl.stop - sl.start
+        if self._am_counts0 is not None:
+            am_counts, am_n = self._am_counts0[sl], self._am_n0[sl]
+        else:
+            am_counts = np.zeros((s, c, cfg.dim), np.int32)
+            am_n = np.zeros((s, c), np.int32)
+        put = self._put_tile
+        return FleetState(
+            counts=put(np.zeros((s, cfg.dim), np.int32),
+                       axes["counts"], d),
+            filled=put(np.zeros((s,), np.int32), axes["filled"], d),
+            frame_index=put(np.zeros((s,), np.int32),
+                            axes["frame_index"], d),
+            class_rows=put(self._class_rows0[sl], axes["class_rows"], d),
+            am_counts=put(am_counts, axes["am_counts"], d),
+            am_n=put(am_n, axes["am_n"], d),
+            last_frame=put(np.zeros((s, cfg.words), np.uint32),
+                           axes["last_frame"], d),
+            last_scores=put(np.zeros((s, c), np.int32),
+                            axes["last_scores"], d),
+            has_frame=put(np.zeros((s,), np.int32), axes["has_frame"], d),
+        )
+
+    def _zero_states(self) -> list[FleetState]:
+        return [self._zero_state(sl, d)
+                for sl, d in zip(self._tile_slices, self._tile_devs)]
 
     def _split_state(self, full: FleetState) -> list[FleetState]:
         """Scatter a whole-fleet state (e.g. a restored checkpoint) back
@@ -691,6 +700,7 @@ class StreamingFleet:
         self._state_t = self._zero_states()
         self._filled_h[:] = 0
         self._fidx_h[:] = 0
+        self._dirty_t = [True] * len(self._tile_slices)
         if self._plan is not None:
             self._ecc_t = self._zero_ecc()
 
@@ -999,6 +1009,11 @@ class StreamingFleet:
         if fn is not None:
             try:
                 return fn(*args)
+            except AssertionError:
+                # sanitizer verdicts (guards.GuardViolation is an
+                # AssertionError) must surface, not silently demote the
+                # warmed executable to a JIT recompile
+                raise
             except Exception:
                 self._exec.pop(key, None)
         self._shapes_seen.add(t_pad)
@@ -1127,6 +1142,8 @@ class StreamingFleet:
                 else:
                     self._state_t[k], fo, ecc_c = res
                     self._ecc_t[k] = self._ecc_t[k] + ecc_c
+                if round_len[sl].any():  # all-masked rounds leave the tile
+                    self._dirty_t[k] = True  # VALUE-identical (clean)
                 # fo depends on the staged codes: once it is ready the
                 # step has consumed the slot and it is safe to rewrite
                 self._stage_busy[k][(slot, t_pad)] = fo
@@ -1382,11 +1399,15 @@ class StreamingFleet:
             if fn is not None:
                 try:
                     self._state_t[k], app = fn(*args)
+                    self._dirty_t[k] = True
                     applied.append(app)
                     continue
+                except AssertionError:  # sanitizer verdicts must surface
+                    raise
                 except Exception:
                     self._adapt_exec.pop(akey, None)
             self._state_t[k], app = self._adapt_step(*args)
+            self._dirty_t[k] = True
             applied.append(app)
         return np.concatenate([np.asarray(a) for a in applied])[:self._n]
 
@@ -1483,4 +1504,5 @@ class StreamingFleet:
         self._state_t = self._split_state(full)
         self._filled_h = np.asarray(full.filled).astype(np.int64)
         self._fidx_h = np.asarray(full.frame_index).astype(np.int64)
+        self._dirty_t = [True] * len(self._tile_slices)
         return step

@@ -124,6 +124,37 @@ def test_rpr002_ignores_host_side_code(tmp_path):
     assert _codes(found) == []
 
 
+def test_rpr002_traces_through_methods(tmp_path):
+    # jax.jit(self._step) roots the method; self._inner() is an edge; the
+    # sync two method-hops from the root is found (pre-PR the call graph
+    # stopped at module-level functions and missed all three)
+    found = _lint_snippet(tmp_path, (
+        "import jax\n"
+        "import numpy as np\n"
+        "class Engine:\n"
+        "    def __init__(self):\n"
+        "        self.step = jax.jit(self._step)\n"
+        "    def _step(self, x):\n"
+        "        return self._inner(x)\n"
+        "    def _inner(self, x):\n"
+        "        return np.asarray(x) + 1\n"))
+    rpr2 = [f for f in found if f.code == "RPR002"]
+    assert len(rpr2) == 1 and "Engine._inner" in rpr2[0].message
+
+
+def test_rpr002_method_jit_decorator_and_unreached_method(tmp_path):
+    found = _lint_snippet(tmp_path, (
+        "import jax\n"
+        "class Engine:\n"
+        "    @jax.jit\n"
+        "    def step(self, x):\n"
+        "        return x.item()\n"          # traced: flagged
+        "    def host_side(self, x):\n"
+        "        return x.item()\n"))        # unreachable from a root: clean
+    rpr2 = [f for f in found if f.code == "RPR002"]
+    assert len(rpr2) == 1 and "Engine.step" in rpr2[0].message
+
+
 def test_rpr002_scalar_cast_on_traced_operand(tmp_path):
     found = _lint_snippet(tmp_path, (
         "import jax\n"
@@ -302,6 +333,38 @@ def test_no_transfers_catches_np_asarray_and_allows_device_math():
         with guards.no_transfers():
             np.asarray(x)
     np.testing.assert_array_equal(np.asarray(x), np.arange(8))
+
+
+def test_no_transfers_donated_buffer_is_not_a_false_positive():
+    """Reading a DONATED (deleted) array cannot transfer — the guard must
+    step aside and let jax raise its informative use-after-donate error
+    instead of a phantom host-sync verdict (PR 8 follow-on)."""
+    f = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+    a = jnp.arange(8, dtype=jnp.int32)
+    b = f(a)
+    assert a.is_deleted()
+    with guards.no_transfers():
+        with pytest.raises(RuntimeError, match="deleted"):
+            np.asarray(a)
+        with pytest.raises(RuntimeError, match="deleted"):
+            a.__array__()
+        # live arrays keep being guarded in the same region
+        with pytest.raises(guards.GuardViolation, match="asarray"):
+            np.asarray(b)
+    np.testing.assert_array_equal(np.asarray(b), np.arange(1, 9))
+
+
+def test_no_transfers_allows_donating_fleet_step_reuse():
+    """The original false positive: re-invoking a donating jitted step on
+    fresh operands while an old reference floats around must pass clean."""
+    f = jax.jit(lambda x: x * 2, donate_argnums=(0,))
+    x = jnp.arange(4, dtype=jnp.int32)
+    f(x)  # warm + donate
+    with guards.no_transfers():
+        y = jnp.arange(4, dtype=jnp.int32)
+        for _ in range(3):
+            y = f(y)  # steady-state donated reuse: no guard trip
+    assert int(np.asarray(y)[1]) == 8
 
 
 def test_guard_fixtures_are_exposed(no_recompiles, no_transfers):

@@ -205,6 +205,77 @@ def test_coldstart_args_must_pair(fleet_fresh, reference):
         gate.main([fleet_fresh, reference, "--coldstart-fresh", "x.json"])
 
 
+# -- elastic-fleet churn gate (--churn-fresh/--churn-reference) -------------
+
+CHURN_STATUS_ROWS = [
+    {"name": "churn.norecompile", "derived": "ok (0 compiles over 36 ops)"},
+    {"name": "churn.recovery", "derived": "ok (5 ops replayed bit-exact)"},
+]
+
+
+@pytest.fixture
+def churn_reference(tmp_path):
+    return _write(tmp_path, "churn_ref.json", [
+        _speedup("churn.S8.speedup", 2.0),
+        _speedup("churn.S8.retention.speedup", 0.05),
+    ])
+
+
+def _churn_args(fleet_fresh, reference, churn_fresh, churn_reference):
+    return [fleet_fresh, reference,
+            "--churn-fresh", churn_fresh,
+            "--churn-reference", churn_reference]
+
+
+def test_churn_gate_passes(tmp_path, fleet_fresh, reference,
+                           churn_reference):
+    churn = _write(tmp_path, "churn.json", [
+        _speedup("churn.S8.speedup", 2.5),
+        _speedup("churn.S8.retention.speedup", 0.12),
+    ] + CHURN_STATUS_ROWS)
+    assert gate.main(
+        _churn_args(fleet_fresh, reference, churn, churn_reference)) == 0
+
+
+def test_churn_ratio_regression_fails(tmp_path, fleet_fresh, reference,
+                                      churn_reference):
+    churn = _write(tmp_path, "churn.json", [
+        _speedup("churn.S8.speedup", 1.0),  # floor is 1.5
+        _speedup("churn.S8.retention.speedup", 0.12),
+    ] + CHURN_STATUS_ROWS)
+    assert gate.main(
+        _churn_args(fleet_fresh, reference, churn, churn_reference)) == 1
+
+
+def test_churn_norecompile_must_say_ok(tmp_path, fleet_fresh, reference,
+                                       churn_reference):
+    churn = _write(tmp_path, "churn.json", [
+        _speedup("churn.S8.speedup", 2.5),
+        _speedup("churn.S8.retention.speedup", 0.12),
+        {"name": "churn.norecompile",
+         "derived": "FAILED: region compiled 3 XLA program(s)"},
+        CHURN_STATUS_ROWS[1],
+    ])
+    assert gate.main(
+        _churn_args(fleet_fresh, reference, churn, churn_reference)) == 1
+
+
+def test_churn_missing_recovery_row_fails(tmp_path, fleet_fresh, reference,
+                                          churn_reference):
+    churn = _write(tmp_path, "churn.json", [
+        _speedup("churn.S8.speedup", 2.5),
+        _speedup("churn.S8.retention.speedup", 0.12),
+        CHURN_STATUS_ROWS[0],  # no churn.recovery row at all
+    ])
+    assert gate.main(
+        _churn_args(fleet_fresh, reference, churn, churn_reference)) == 1
+
+
+def test_churn_args_must_pair(fleet_fresh, reference):
+    with pytest.raises(SystemExit):
+        gate.main([fleet_fresh, reference, "--churn-reference", "x.json"])
+
+
 # -- reliability zero-BER gate (check_reliability_gate.py) ------------------
 
 def _rel_point(ber, bitexact=True, scheme="none"):
