@@ -1,0 +1,195 @@
+"""Electrode-fault graceful-degradation curves + quarantine parity.
+
+The channel-fault question (``repro.reliability.channels``): how fast does
+end-to-end seizure-detection quality decay as electrodes fail, and how much
+does online quarantine (the per-session channel mask threaded through the
+fleet's spatial encoder) buy back versus leaving the corrupted channel in
+the bundle?
+
+Grid: variant x density x fault kind x n_failed channels.  Per (variant,
+density) cell one clean fleet and one ``channel_masking=True`` fleet serve
+every point — masks move via ``set_channel_mask`` (a traced operand, zero
+recompiles per curve).  Two correctness anchors ride along as CI-gated
+status rows:
+
+* ``channelfault.maskparity`` — the all-live masked fleet is BIT-EXACT
+  (full per-frame score streams) with the unmasked fleet in every cell,
+  and a masked ``dispatch.owner_spatial_codes`` spot-check equals the
+  reduced-channel ORACLE (``dispatch.reduced_channel_config`` on the
+  physically-shrunk channel set).
+* ``channelfault.gracefuldeg`` — sparse variants degrade gracefully: the
+  quarantined fleet retains at least ``CLIFF_RETENTION`` of clean accuracy
+  at 1-2 failed channels (sparse bundling drops a channel's term instead
+  of folding garbage into every spatial HV, so there must be no cliff).
+
+Per-point ``channelfault.*.f<n>.speedup`` rows carry the accuracy
+RETENTION ratio (quarantined / clean) in the same ``N.NNx `` format the
+fleet perf gate parses, so ``check_fleet_regression.py`` holds the
+degradation floor against the committed tiny reference.
+
+BENCH_TINY=1 (CI smoke) shrinks to 2 patients / short records / a 3-point
+failed-channel grid.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import tiny
+from repro.core.classifier import HDCConfig
+from repro.reliability import channels as chan
+from repro.reliability import sweep
+from repro.serve import dispatch
+from repro.serve.fleet import StreamingFleet
+
+VARIANTS = ("dense", "sparse_naive", "sparse_compim", "sparse_opt")
+SPARSE = ("sparse_naive", "sparse_compim", "sparse_opt")
+CLIFF_RETENTION = 0.75  # floor on quarantined/clean accuracy at <=2 failed
+
+
+def _config() -> dict:
+    base = HDCConfig(dim=256, segments=8, window=128)
+    if tiny():
+        return dict(
+            base_cfg=base, n_patients=2, n_test=1,
+            record_kw=dict(pre_s=10.0, ictal_s=14.0, post_s=6.0),
+            variants=("dense", "sparse_naive", "sparse_opt"),
+            densities=(0.25,), kinds=("dead", "line_noise"),
+            n_failed=(0, 1, 2),
+        )
+    return dict(
+        base_cfg=base, n_patients=4, n_test=2,
+        record_kw=dict(pre_s=16.0, ictal_s=20.0, post_s=8.0),
+        variants=VARIANTS, densities=(0.15, 0.25, 0.35),
+        kinds=chan.CODE_FAULT_TYPES,
+        n_failed=(0, 1, 2, 4, 8, 16),
+    )
+
+
+def _oracle_parity(pipes: dict, cfg: HDCConfig, *, n_dead: int = 2,
+                   seed: int = 1) -> bool:
+    """Masked spatial encode == the same encode on the physically-reduced
+    channel set (tables and codes sliced to the live channels, threshold
+    renormalized by ``reduced_channel_config``)."""
+    pipe = next(iter(pipes.values()))
+    tables, _ = dispatch.stack_bound_tables([pipe])
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, cfg.codes,
+                         (1, 2 * cfg.window, cfg.channels), np.uint8)
+    mask = np.ones((1, cfg.channels), np.uint8)
+    mask[0, rng.choice(cfg.channels, size=n_dead, replace=False)] = 0
+    live_idx = np.nonzero(mask[0])[0]
+    owner = jnp.zeros((1,), jnp.int32)
+    got = dispatch.owner_spatial_codes(
+        tables, owner, jnp.asarray(codes), cfg,
+        chan_mask=jnp.asarray(mask))
+    red_cfg = dispatch.reduced_channel_config(cfg, len(live_idx))
+    want = dispatch.owner_spatial_codes(
+        jnp.asarray(np.asarray(tables)[:, live_idx]), owner,
+        jnp.asarray(codes[:, :, live_idx]), red_cfg)
+    return bool((np.asarray(got) == np.asarray(want)).all())
+
+
+def run() -> list[dict]:
+    c = _config()
+    sessions = sweep.make_sessions(
+        n_patients=c["n_patients"], n_test=c["n_test"],
+        channels=c["base_cfg"].channels, record_kw=c["record_kw"], seed=0)
+    batch, owners = sessions["batch"], sessions["owners"]
+    kinds = tuple(c["kinds"])
+    rows: list[dict] = []
+    parity_fail: list[str] = []
+    cliff: list[str] = []
+    min_retention = np.inf  # over sparse variants at n_failed <= 2
+
+    for hw in c["variants"]:
+        for density in c["densities"]:
+            pipes, cfg = sweep.train_pipelines(hw, density, sessions,
+                                               c["base_cfg"], seed=0)
+            buckets = (cfg.window,)
+            clean = StreamingFleet(pipes, owners, buckets=buckets)
+            clean_preds, clean_scores = sweep.replay(clean, batch)
+            clean_agg = sweep.detection_summary(clean_preds, sessions, cfg)
+            masked = StreamingFleet(pipes, owners, buckets=buckets,
+                                    channel_masking=True)
+            m_preds, m_scores = sweep.replay(masked, batch)
+            allive_ok = bool(np.array_equal(m_preds, clean_preds)
+                             and np.array_equal(m_scores, clean_scores))
+            oracle_ok = _oracle_parity(pipes, cfg)
+            if not (allive_ok and oracle_ok):
+                parity_fail.append(f"{hw}/d{density:g}"
+                                   f"(allive={allive_ok},oracle={oracle_ok})")
+            for ki, kind in enumerate(kinds):
+                for n in c["n_failed"]:
+                    faulted, mask = chan.degrade_batch(
+                        batch, n, kind, seed=100 + 13 * n + ki)
+                    # unmasked arm: the corrupted channel stays in the bundle
+                    u_preds, _ = sweep.replay(clean, faulted)
+                    u_agg = sweep.detection_summary(u_preds, sessions, cfg)
+                    # quarantined arm: the monitor's oracle mask drops it
+                    masked.set_channel_mask(mask)
+                    q_preds, _ = sweep.replay(masked, faulted)
+                    q_agg = sweep.detection_summary(q_preds, sessions, cfg)
+                    retention = (q_agg["detection_accuracy"]
+                                 / max(clean_agg["detection_accuracy"], 1e-9))
+                    if hw in SPARSE and 1 <= n <= 2:
+                        min_retention = min(min_retention, retention)
+                        if retention < CLIFF_RETENTION:
+                            cliff.append(f"{hw}/d{density:g}/{kind}/f{n}"
+                                         f"={retention:.2f}")
+                    point = {
+                        "variant": hw, "density": float(density),
+                        "kind": kind, "n_failed": int(n),
+                        "sessions": len(owners),
+                        "frames": int(clean_preds.size),
+                        "clean_accuracy": clean_agg["detection_accuracy"],
+                        "unmasked_accuracy": u_agg["detection_accuracy"],
+                        "masked_accuracy": q_agg["detection_accuracy"],
+                        "retention": float(retention),
+                        "unmasked_delay_s": u_agg["mean_delay_s"],
+                        "masked_delay_s": q_agg["mean_delay_s"],
+                        "unmasked_false_alarm_rate":
+                            u_agg["false_alarm_rate"],
+                        "masked_false_alarm_rate": q_agg["false_alarm_rate"],
+                        "masked_vs_unmasked_disagreement":
+                            float(np.mean(q_preds != u_preds)),
+                    }
+                    rows.append({
+                        "name": (f"channelfault.{hw}.d{density:g}.{kind}"
+                                 f".f{n}.speedup"),
+                        "us_per_call": "",
+                        "derived": (
+                            f"{retention:.2f}x retention"
+                            f";acc={q_agg['detection_accuracy']:.2f}"
+                            f";unmasked_acc="
+                            f"{u_agg['detection_accuracy']:.2f}"
+                            f";clean_acc="
+                            f"{clean_agg['detection_accuracy']:.2f}"
+                            f";delay_s={q_agg['mean_delay_s']:.2f}"
+                            f";fa={q_agg['false_alarm_rate']:.2f}"),
+                        "point": point,
+                    })
+
+    cells = len(c["variants"]) * len(c["densities"])
+    rows.append({
+        "name": "channelfault.maskparity", "us_per_call": "",
+        "derived": (f"ok all-live bit-exact + reduced-channel oracle parity "
+                    f"({cells} cells)" if not parity_fail
+                    else "FAIL " + ",".join(parity_fail)),
+        "point": {"cells": cells, "failed": parity_fail},
+    })
+    rows.append({
+        "name": "channelfault.gracefuldeg", "us_per_call": "",
+        "derived": (f"ok min_retention@f<=2={min_retention:.2f} "
+                    f"(floor {CLIFF_RETENTION})" if not cliff
+                    else "CLIFF " + ",".join(cliff)),
+        "point": {"min_retention": float(min_retention),
+                  "floor": CLIFF_RETENTION, "cliffs": cliff},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

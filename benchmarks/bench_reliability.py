@@ -25,10 +25,13 @@ BER grid.
 
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
 
 from benchmarks.common import tiny
 from repro.core.classifier import HDCConfig
+from repro.reliability import faults as rel_faults
 from repro.reliability import sweep
 
 VARIANTS = ("dense", "sparse_naive", "sparse_compim", "sparse_opt")
@@ -101,6 +104,50 @@ def run() -> list[dict]:
     for p in protected:
         p["section"] = "ecc"
     rows.extend(_row(p, section="ecc.") for p in protected)
+
+    # counter-width section: counts-only faults at the sparse VALUE width
+    # (ceil(log2(window+1)) bits, all a saturating temporal counter can
+    # hold) vs the dense accelerator's full PHYSICAL register file
+    # (core.bundling's D x 8-bit counters, counts_bits=8) — the physical
+    # word exposes high-order bits whose flips inject O(2^7) count errors,
+    # so the sparse binary datapath's narrow counters degrade slower
+    wcfg = replace(c["base_cfg"], window=64)  # value width 7 < physical 8
+    top_ber = max(c["bers"])
+    cw: dict[tuple, dict] = {}
+    for cb in (None, 8):
+        pts = sweep.run_sweep(
+            variants=("sparse_opt", "dense"), densities=(0.25,),
+            bers=(0.0, top_ber), schemes=("none",), targets=("counts",),
+            base_cfg=wcfg, n_patients=c["n_patients"], n_test=c["n_test"],
+            record_kw=c["record_kw"], seed=2, counts_bits=cb)
+        _check_bitexact(pts)
+        width = rel_faults.counter_bits(
+            rel_faults.FaultConfig(counts=0.0, counts_bits=cb).plan(),
+            wcfg.window)
+        for p in pts:
+            p["counts_bits"] = width
+        cw.update({(p["variant"], cb, p["ber"]): p for p in pts})
+        rows.extend(_row(p, section=f"counts.w{width}.") for p in pts)
+    sp = cw[("sparse_opt", None, top_ber)]
+    dn = cw[("dense", 8, top_ber)]
+    rows.append({
+        "name": "reliability.counts.summary", "us_per_call": "",
+        "derived": (f"sparse@w{sp['counts_bits']}:acc="
+                    f"{sp['detection_accuracy']:.2f},disagree="
+                    f"{sp['frame_disagreement']:.3f}"
+                    f";dense@w{dn['counts_bits']}:acc="
+                    f"{dn['detection_accuracy']:.2f},disagree="
+                    f"{dn['frame_disagreement']:.3f}"),
+        "point": {
+            "ber": top_ber, "window": wcfg.window,
+            "sparse_value_width": sp["counts_bits"],
+            "dense_physical_width": dn["counts_bits"],
+            "sparse_accuracy": sp["detection_accuracy"],
+            "dense_accuracy": dn["detection_accuracy"],
+            "sparse_frame_disagreement": sp["frame_disagreement"],
+            "dense_frame_disagreement": dn["frame_disagreement"],
+        },
+    })
 
     # summary: worst BER's accuracy floor per variant + SECDED recovery
     by_var = {

@@ -38,6 +38,16 @@ status rows must start with ``ok`` — an admission path that recompiles,
 or a restore+replay that changes decisions, defeats the elasticity
 subsystem's whole contract.
 
+``--channelfault-fresh``/``--channelfault-reference`` gate the electrode
+fault benchmark (bench_channelfault.py): the ``channelfault.*.speedup``
+rows are accuracy RETENTION ratios (quarantined fleet / clean fleet) —
+another same-process ratio, so the committed tiny reference holds the
+graceful-degradation floor — and the ``channelfault.maskparity`` /
+``channelfault.gracefuldeg`` status rows must start with ``ok``: an
+all-live mask that changes decisions (broken program identity), a masked
+encode diverging from the reduced-channel oracle, or a sparse-variant
+accuracy cliff at 1-2 failed channels all fail CI.
+
 Usage::
 
     python -m benchmarks.check_fleet_regression FRESH.json REFERENCE.json \
@@ -45,7 +55,9 @@ Usage::
         [--coldstart-fresh BENCH_coldstart.json \
          --coldstart-reference benchmarks/BENCH_coldstart_tiny.json] \
         [--churn-fresh BENCH_churn.json \
-         --churn-reference benchmarks/BENCH_churn_tiny.json]
+         --churn-reference benchmarks/BENCH_churn_tiny.json] \
+        [--channelfault-fresh BENCH_channelfault.json \
+         --channelfault-reference benchmarks/BENCH_channelfault_tiny.json]
 """
 
 from __future__ import annotations
@@ -61,6 +73,8 @@ _SHARE = re.compile(r"^share=([0-9.]+)% ")
 # rows whose derived string must start with "ok" for the gate to pass
 COLDSTART_STATUS_ROWS = ("coldstart.bitexact", "coldstart.fallback")
 CHURN_STATUS_ROWS = ("churn.norecompile", "churn.recovery")
+CHANNELFAULT_STATUS_ROWS = ("channelfault.maskparity",
+                            "channelfault.gracefuldeg")
 
 
 def _load(path: str) -> dict:
@@ -198,11 +212,21 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--churn-reference", default=None,
                     help="committed churn reference "
                          "(benchmarks/BENCH_churn_tiny.json)")
+    ap.add_argument("--channelfault-fresh", default=None,
+                    help="BENCH_channelfault.json from this run (enables "
+                         "the electrode-fault retention + parity gate)")
+    ap.add_argument("--channelfault-reference", default=None,
+                    help="committed channel-fault reference "
+                         "(benchmarks/BENCH_channelfault_tiny.json)")
     args = ap.parse_args(argv)
     if (args.coldstart_fresh is None) != (args.coldstart_reference is None):
         ap.error("--coldstart-fresh and --coldstart-reference go together")
     if (args.churn_fresh is None) != (args.churn_reference is None):
         ap.error("--churn-fresh and --churn-reference go together")
+    if (args.channelfault_fresh is None) != \
+            (args.channelfault_reference is None):
+        ap.error("--channelfault-fresh and --channelfault-reference "
+                 "go together")
 
     failed = gate_speedups(args.fresh, args.reference,
                            prefix="fleet.", tolerance=args.tolerance)
@@ -238,6 +262,14 @@ def main(argv: list[str] | None = None) -> int:
         failed += gate_speedups(args.churn_fresh, args.churn_reference,
                                 prefix="churn.", tolerance=args.tolerance)
         failed += gate_status_rows(args.churn_fresh, CHURN_STATUS_ROWS)
+
+    if args.channelfault_fresh:
+        failed += gate_speedups(args.channelfault_fresh,
+                                args.channelfault_reference,
+                                prefix="channelfault.",
+                                tolerance=args.tolerance)
+        failed += gate_status_rows(args.channelfault_fresh,
+                                   CHANNELFAULT_STATUS_ROWS)
 
     if failed:
         print(f"fleet perf gate failed: {', '.join(failed)}",

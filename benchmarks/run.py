@@ -12,6 +12,7 @@ uploads these as artifacts, so the perf trajectory accumulates).
   fleet       StreamingFleet vs looped-session serving  (framework)
   online      one-shot vs iterative/online retraining   (framework)
   reliability BER degradation curves + AM ECC tradeoff  (framework)
+  channelfault electrode faults: quarantine vs unmasked  (framework)
   coldstart   fresh-JIT vs warm-cache vs serialized AOT (framework)
   churn       elastic fleet under Poisson session churn (framework)
   roofline    aggregated dry-run roofline terms          (framework)
@@ -31,7 +32,8 @@ import traceback
 from benchmarks.common import emit, write_bench_json
 
 DEFAULT_MODULES = ["fig1c", "fig4", "fig5", "table1", "throughput", "fleet",
-                   "online", "reliability", "coldstart", "churn", "roofline"]
+                   "online", "reliability", "channelfault", "coldstart",
+                   "churn", "roofline"]
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -26,11 +26,42 @@ FS = 512  # Hz, matches the short-term SWEC-ETHZ recordings
 # LBP preprocessing
 # ---------------------------------------------------------------------------
 
-def lbp_codes_np(x: np.ndarray, bits: int = 6) -> np.ndarray:
+def validate_signal(x: np.ndarray, *, adc_limit: float | None = None
+                    ) -> np.ndarray:
+    """Ingest guard for raw iEEG: reject non-finite samples, clamp rails.
+
+    NaN/Inf samples raise — a NaN propagates through ``np.diff`` into
+    ``False`` comparisons and silently corrupts every LBP code in its
+    6-sample neighborhood, which is far worse than failing loudly at the
+    boundary.  With ``adc_limit`` the signal is clamped to the converter
+    rails ``[-adc_limit, +adc_limit]`` (what a real front-end does in
+    hardware: out-of-range samples saturate, they don't wrap)."""
+    x = np.asarray(x)
+    bad = ~np.isfinite(x)
+    if bad.any():
+        idx = np.argwhere(bad)[0]
+        raise ValueError(
+            f"signal contains {int(bad.sum())} non-finite sample(s) "
+            f"(first at index {tuple(int(i) for i in idx)}); NaN/Inf "
+            "silently corrupts LBP codes — sanitize the recording before "
+            "ingest")
+    if adc_limit is not None:
+        if adc_limit <= 0:
+            raise ValueError(f"adc_limit={adc_limit!r} must be positive")
+        x = np.clip(x, -adc_limit, adc_limit)
+    return x
+
+
+def lbp_codes_np(x: np.ndarray, bits: int = 6,
+                 adc_limit: float | None = None) -> np.ndarray:
     """x: (..., T) raw signal -> (..., T - bits) uint8 LBP codes.
 
     code[t] = sum_i 2^i * [ x[t - i] > x[t - i - 1] ],  i = 0..bits-1
+
+    Rejects NaN/Inf input and (with ``adc_limit``) clamps out-of-range
+    samples to the ADC rails first — see ``validate_signal``.
     """
+    x = validate_signal(x, adc_limit=adc_limit)
     d = (np.diff(x, axis=-1) > 0).astype(np.uint8)           # (..., T-1)
     t_out = d.shape[-1] - bits + 1
     code = np.zeros((*d.shape[:-1], t_out), dtype=np.uint8)
@@ -90,7 +121,13 @@ def _ictal_discharge(rng: np.random.Generator, t: int, channels: int,
 def make_record(rng: np.random.Generator, *, channels: int = 64,
                 pre_s: float = 30.0, ictal_s: float = 40.0, post_s: float = 10.0,
                 fs: int = FS, seed_freq: float | None = None,
-                participation_frac: float = 0.6) -> SeizureRecord:
+                participation_frac: float = 0.6,
+                signal_transform=None) -> SeizureRecord:
+    """``signal_transform`` (optional ``f(x, rng) -> x`` over the raw
+    (channels, T) float signal, applied just before LBP coding) is the
+    electrode-fault injection hook: ``reliability.channels`` builds
+    transforms that kill/saturate/noise individual channels, so faulted
+    records flow through the exact production preprocessing."""
     if seed_freq is None:
         seed_freq = float(rng.uniform(18.0, 40.0))
     t_pre, t_ict, t_post = int(pre_s * fs), int(ictal_s * fs), int(post_s * fs)
@@ -103,6 +140,12 @@ def make_record(rng: np.random.Generator, *, channels: int = 64,
     # ramp the discharge in over 2 s (seizures recruit gradually)
     ramp = np.clip(np.arange(t_ict) / (2.0 * fs), 0.0, 1.0).astype(np.float32)
     x[:, t_pre:t_pre + t_ict] += _ictal_discharge(rng, t_ict, channels, fs, sf, part) * ramp
+    if signal_transform is not None:
+        x = np.asarray(signal_transform(x, rng), np.float32)
+        if x.shape != (channels, t):
+            raise ValueError(
+                f"signal_transform must preserve the ({channels}, {t}) "
+                f"signal shape, got {x.shape}")
     codes = lbp_codes_np(x)                       # (channels, T-6)
     label = np.zeros(t, dtype=np.int32)
     label[t_pre:t_pre + t_ict] = 1

@@ -56,12 +56,18 @@ from repro.core import hv
 
 
 def _spatial_bundle(bound: jax.Array, *, mode: str, channels: int, dim: int,
-                    threshold: int) -> jax.Array:
+                    threshold: int, live=None) -> jax.Array:
     """(32, C, W) bound rows -> (32, W) per-cycle packed spatial HVs.
 
     Mirrors dispatch.owner_spatial_codes: ``or`` = OR tree (optimized
     sparse), ``thin`` = adder tree + threshold (naive sparse), ``majority``
     = adder tree + majority (dense).
+
+    ``live`` (traced int32 scalar) is the channel-masked path's live
+    channel count: the caller has already zeroed quarantined rows (OR
+    identity / zero addend), so this only renormalizes the count-variant
+    denominators — thinning threshold via the ceil rule of
+    dispatch.effective_spatial_threshold, majority over the live count.
     """
     if mode == "or":
         x = bound
@@ -80,18 +86,23 @@ def _spatial_bundle(bound: jax.Array, *, mode: str, channels: int, dim: int,
     bits = (bound[..., None] >> shifts) & jnp.uint32(1)       # (32, C, w, 32)
     counts = jnp.sum(bits.astype(jnp.int32), axis=1, dtype=jnp.int32)
     if mode == "thin":
-        keep = counts >= threshold
+        if live is None:
+            keep = counts >= threshold
+        else:
+            thr = jnp.maximum(1, (threshold * live + channels - 1) // channels)
+            keep = counts >= thr
     else:  # majority (ties broken low, matches hv.majority_pack)
-        keep = counts * 2 > channels
+        keep = counts * 2 > (channels if live is None else live)
     pack_shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, w, 32), 2)
     return jnp.sum(keep.astype(jnp.uint32) << pack_shifts, axis=2,
                    dtype=jnp.uint32)
 
 
-def _fleet_kernel(owner_ref, tab_ref, codes_ref, tm_ref, out_ref, *,
+def _fleet_kernel(owner_ref, tab_ref, codes_ref, tm_ref, *refs,
                   mode: str, channels: int, n_codes: int, dim: int,
-                  threshold: int):
+                  threshold: int, masked: bool):
     del owner_ref  # consumed by the BlockSpec index maps (scalar prefetch)
+    cm_ref, out_ref = (refs if masked else (None,) + refs)
     g = pl.program_id(1)
 
     @pl.when(g == 0)
@@ -106,8 +117,13 @@ def _fleet_kernel(owner_ref, tab_ref, codes_ref, tm_ref, out_ref, *,
     flat = tab.reshape(channels * n_codes, tab.shape[-1])
     cbase = jax.lax.broadcasted_iota(jnp.int32, (32, channels), 1) * n_codes
     bound = jnp.take(flat, cbase + cb, axis=0)             # (32, C, W)
+    live = None
+    if masked:
+        cm = cm_ref[0]                                     # (C,) uint32
+        bound = bound * cm[None, :, None]  # quarantined rows contribute 0
+        live = jnp.sum(cm.astype(jnp.int32), dtype=jnp.int32)
     words = _spatial_bundle(bound, mode=mode, channels=channels, dim=dim,
-                            threshold=threshold)           # (32, W)
+                            threshold=threshold, live=live)  # (32, W)
     planes = hv.bit_transpose32(words)                     # (32b, W)
     tm = tm_ref[0, :, 0]                                   # (K+1,) uint32
     # masked popcount: one AND + popcount bundles 32 cycles into each slot
@@ -118,6 +134,7 @@ def _fleet_kernel(owner_ref, tab_ref, codes_ref, tm_ref, out_ref, *,
 def fleet_counts_pallas(tables: jax.Array, owner: jax.Array,
                         codes: jax.Array, tm: jax.Array, *, mode: str,
                         dim: int, threshold: int = 1,
+                        chan_mask: jax.Array | None = None,
                         interpret: bool = True) -> jax.Array:
     """tables: (P, C, K, W) uint32 stacked pre-bound codebook bank;
     owner: (S,) int32 each session's table row (scalar-prefetched so the
@@ -125,22 +142,34 @@ def fleet_counts_pallas(tables: jax.Array, owner: jax.Array,
     codes: (S, T32, C) uint8 raw LBP codes (T32 a multiple of 32; padded
     cycles are masked off by ``tm``);
     tm: (S, K+1, T32 // 32) uint32 time-packed slot masks
-    (ref.emission_masks).  Returns (S, K+1, D) int32 slot counts."""
+    (ref.emission_masks);
+    chan_mask: optional (S, C) uint32 per-session channel mask (1 = live)
+    — a fourth VMEM operand, one (1, C) row per session: quarantined
+    channels drop out of the spatial bundle and the count-variant
+    denominators renormalize to the live count (see _spatial_bundle).
+    Returns (S, K+1, D) int32 slot counts."""
     p, c, k, w = tables.shape
     s, t32, c2 = codes.shape
     assert c2 == c and t32 % 32 == 0 and w * 32 == dim
     groups = t32 // 32
     kp1 = tm.shape[1]
+    masked = chan_mask is not None
     kernel = functools.partial(_fleet_kernel, mode=mode, channels=c,
-                               n_codes=k, dim=dim, threshold=threshold)
+                               n_codes=k, dim=dim, threshold=threshold,
+                               masked=masked)
+    in_specs = [
+        pl.BlockSpec((1, c, k, w), lambda i, g, owner_ref: (owner_ref[i], 0, 0, 0)),
+        pl.BlockSpec((1, 32, c), lambda i, g, owner_ref: (i, g, 0)),
+        pl.BlockSpec((1, kp1, 1), lambda i, g, owner_ref: (i, 0, g)),
+    ]
+    inputs = [owner.astype(jnp.int32), tables, codes, tm]
+    if masked:
+        in_specs.append(pl.BlockSpec((1, c), lambda i, g, owner_ref: (i, 0)))
+        inputs.append(chan_mask.astype(jnp.uint32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(s, groups),
-        in_specs=[
-            pl.BlockSpec((1, c, k, w), lambda i, g, owner_ref: (owner_ref[i], 0, 0, 0)),
-            pl.BlockSpec((1, 32, c), lambda i, g, owner_ref: (i, g, 0)),
-            pl.BlockSpec((1, kp1, 1), lambda i, g, owner_ref: (i, 0, g)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, kp1, 32, w),
                                lambda i, g, owner_ref: (i, 0, 0, 0)),
     )
@@ -149,6 +178,6 @@ def fleet_counts_pallas(tables: jax.Array, owner: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s, kp1, 32, w), jnp.int32),
         interpret=interpret,
-    )(owner.astype(jnp.int32), tables, codes, tm)
+    )(*inputs)
     # time_pack's (bit, word) layout -> standard d = word * 32 + bit order
     return counts.transpose(0, 1, 3, 2).reshape(s, kp1, dim)

@@ -46,7 +46,8 @@ def fleet_counts(words: jax.Array, filled: jax.Array, lengths: jax.Array,
 def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
                        codes: jax.Array, filled: jax.Array,
                        lengths: jax.Array, cfg: HDCConfig,
-                       tables_xor: jax.Array | None = None) -> jax.Array:
+                       tables_xor: jax.Array | None = None,
+                       chan_mask: jax.Array | None = None) -> jax.Array:
     """(S, T, C) raw uint8 codes -> (S, K+1, D) counts, one fused pass.
 
     ``tables`` is the stacked (P, C, K, W) pre-bound codebook bank and
@@ -62,6 +63,12 @@ def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
     FAULTED bank — the corruption rides the same operand path as the clean
     bank and the kernel body is untouched.  ``None`` (the default) skips
     the XOR entirely.
+
+    ``chan_mask`` (S, C) uint8/uint32, the channel-fault tolerance hook
+    (repro.reliability.channels): quarantined channels drop out of the
+    in-kernel spatial bundle with renormalized count denominators, exactly
+    like dispatch.owner_spatial_codes' masked path.  ``None`` (the
+    default) keeps the kernel's operand list and body untouched.
     """
     s, t, c = codes.shape
     if tables_xor is not None:
@@ -73,4 +80,5 @@ def fleet_counts_fused(tables: jax.Array, owner: jax.Array,
     mode, threshold = spatial_mode(cfg)
     return fleet_counts_pallas(tables, owner, codes, tm, mode=mode,
                                dim=cfg.dim, threshold=threshold,
+                               chan_mask=chan_mask,
                                interpret=use_interpret())

@@ -28,6 +28,19 @@ fleet state (streaming accumulators + online AM banks) after the run and
       --sessions 256 --patients 8 --rounds 8 --adapt-every 2 \
       --ckpt-dir /tmp/fleet-ckpt --resume
 
+Channel-fault tolerance: --channel-health builds the fleet with per-session
+channel masking and runs the online electrode-health monitor
+(reliability/channels.py) over every round's LBP codes — channels whose code
+statistics collapse (dead/railed/line-noise electrodes) are quarantined out
+of the spatial encoder via a traced-operand mask update (zero recompiles)
+and reinstated with hysteresis if they recover; the quarantine event log is
+printed at the end of the run.  --inject-fault CH:KIND demos it by faulting
+a channel of every session's stream:
+
+  PYTHONPATH=src python -m repro.launch.serve --hdc-fleet \
+      --sessions 64 --patients 4 --rounds 8 --channel-health \
+      --inject-fault 3:dead --inject-fault 7:line_noise
+
 On a fleet the same entry points run on the production mesh (--mesh 16x16):
 the LM path shards the KV cache per runtime/sharding.py, the HDC path shards
 the per-session accumulator state along the data axis (serve/fleet.py) while
@@ -105,7 +118,8 @@ def _build_hdc_fleet(args):
     t0 = time.perf_counter()
     bank = {f"patient{p}": trained(p) for p in range(args.patients)}
     owners = [f"patient{i % args.patients}" for i in range(args.sessions)]
-    fleet = StreamingFleet(bank, owners, mesh=mesh)
+    fleet = StreamingFleet(bank, owners, mesh=mesh,
+                           channel_masking=args.channel_health)
     print(f"fleet: {args.sessions} sessions over {args.patients} patients "
           f"({'mesh ' + 'x'.join(map(str, mesh.devices.shape)) if mesh else 'single device'}), "
           f"built in {time.perf_counter() - t0:.1f} s")
@@ -153,6 +167,33 @@ def run_hdc_fleet(args) -> None:
     chunk_len = args.chunk or cfg.window
     chunks = [rng.integers(0, cfg.codes, (chunk_len, cfg.channels), np.uint8)
               for _ in range(args.sessions)]
+    if args.inject_fault:
+        from repro.reliability import channels as chan_mod
+
+        frng = np.random.default_rng(1)
+        for spec in args.inject_fault:
+            ch_s, _, kind = spec.partition(":")
+            try:
+                ch = int(ch_s)
+            except ValueError:
+                raise SystemExit(f"--inject-fault {spec!r}: want CH:KIND")
+            if kind not in chan_mod.CODE_FAULT_TYPES:
+                raise SystemExit(
+                    f"--inject-fault kind {kind!r} must be one of "
+                    f"{chan_mod.CODE_FAULT_TYPES}")
+            if not 0 <= ch < cfg.channels:
+                raise SystemExit(
+                    f"--inject-fault channel {ch} outside "
+                    f"[0, {cfg.channels})")
+            chunks = [chan_mod.inject_code_fault(c, ch, kind, frng)
+                      for c in chunks]
+            print(f"injected {kind} fault on channel {ch} "
+                  f"(all {args.sessions} sessions)")
+    monitor = None
+    if args.channel_health:
+        from repro.reliability.channels import FleetChannelMonitor
+
+        monitor = FleetChannelMonitor(args.sessions, cfg.channels)
     fleet.push(chunks)  # warmup / compile (no-op compile when AOT-warmed)
 
     # restore AFTER the warmup push: restore overwrites the fleet state, so
@@ -177,6 +218,10 @@ def run_hdc_fleet(args) -> None:
             out = fleet.push(chunks)
             decisions += sum(len(o) for o in out)
             rounds_done = r + 1
+            if monitor is not None:
+                masks = monitor.observe(np.stack(chunks))
+                if not np.array_equal(masks, fleet.channel_masks):
+                    fleet.set_channel_mask(masks)
             if args.adapt_every and (r + 1) % args.adapt_every == 0:
                 # synthetic feedback: label each session's last frame at random
                 labels = np.where([len(o) > 0 for o in out],
@@ -193,6 +238,17 @@ def run_hdc_fleet(args) -> None:
           f"{dt * 1e6 / max(decisions, 1):.1f} us/decision)")
     if args.adapt_every:
         print(f"online adaptation: {adapted} gated AM updates across the fleet")
+    if monitor is not None:
+        ev = monitor.events
+        print(f"channel health: {monitor.n_quarantined} channel(s) "
+              f"quarantined across the fleet ({len(ev)} events)")
+        for e in ev[:20]:
+            print(f"  round {e['block']} session {e['session']} "
+                  f"ch {e['channel']}: {e['event']} "
+                  f"(entropy {e['entropy']:.2f} bits, "
+                  f"run {e['stuck_run']})")
+        if len(ev) > 20:
+            print(f"  ... {len(ev) - 20} more event(s)")
     print(f"compiled step executables: {fleet.compile_count} "
           f"(buckets: {fleet._buckets})")
     if args.ckpt_dir:
@@ -287,6 +343,17 @@ def main():
                     help="cycles per session per round (default: one window)")
     ap.add_argument("--variant", default="sparse_compim",
                     choices=["sparse_naive", "sparse_compim", "dense"])
+    ap.add_argument("--channel-health", action="store_true",
+                    help="build the fleet with channel masking and run the "
+                         "online electrode-health monitor: channels whose "
+                         "LBP code statistics collapse are quarantined out "
+                         "of the spatial encoder (traced mask update, no "
+                         "recompiles) and reinstated with hysteresis")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="CH:KIND",
+                    help="inject a code-level electrode fault into channel "
+                         "CH of every session's stream (KIND: dead, "
+                         "saturated, line_noise, dropout); repeatable")
     ap.add_argument("--adapt-every", type=int, default=0,
                     help="run one fleet-wide online AM update every N rounds")
     ap.add_argument("--ckpt-dir", default=None,

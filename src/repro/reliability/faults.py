@@ -47,7 +47,9 @@ class FaultPlan:
 
     ``tables`` / ``am`` / ``counts`` say which targets are compiled into
     the step at all — a disabled target costs literally nothing.  ``ecc``
-    selects the AM word protection (``reliability.ecc.SCHEMES``)."""
+    selects the AM word protection (``reliability.ecc.SCHEMES``).
+    ``counts_bits`` overrides the faulted counter width (None = the
+    VALUE width ceil(log2(window+1)); see ``counter_bits``)."""
 
     tables: bool = False
     am: bool = False
@@ -55,6 +57,7 @@ class FaultPlan:
     mode: str = "transient"
     seed: int = 0
     ecc: str = "none"
+    counts_bits: int | None = None
 
     @property
     def any_target(self) -> bool:
@@ -68,7 +71,15 @@ class FaultConfig:
 
     ``ecc`` may be enabled with ``am=None`` (or BER 0) — protection is a
     hardware design choice, and its energy overhead is paid on every read
-    whether or not faults land."""
+    whether or not faults land.
+
+    ``counts_bits`` widens (or narrows) the faulted temporal-counter word:
+    by default flips land only in the VALUE width ceil(log2(window+1)) —
+    the bits a right-sized sparse counter bank would implement — but the
+    paper's dense datapath carries a full physical D x 8-bit register file
+    (core.bundling.temporal_counts), so ``counts_bits=8`` faults the dense
+    counters at their real hardware width (the sparse-binary-vs-dense-
+    counter degradation rows of bench_reliability.py)."""
 
     tables: float | None = None
     am: float | None = None
@@ -76,6 +87,7 @@ class FaultConfig:
     mode: str = "transient"
     seed: int = 0
     ecc: str = "none"
+    counts_bits: int | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -86,12 +98,17 @@ class FaultConfig:
             if ber is not None and not 0.0 <= float(ber) <= 1.0:
                 raise ValueError(
                     f"{name} BER must be in [0, 1] or None, got {ber!r}")
+        if self.counts_bits is not None and not 1 <= self.counts_bits <= 32:
+            raise ValueError(
+                f"counts_bits must be in [1, 32] or None, got "
+                f"{self.counts_bits!r}")
 
     def plan(self) -> FaultPlan:
         return FaultPlan(tables=self.tables is not None,
                          am=self.am is not None,
                          counts=self.counts is not None,
-                         mode=self.mode, seed=self.seed, ecc=self.ecc)
+                         mode=self.mode, seed=self.seed, ecc=self.ecc,
+                         counts_bits=self.counts_bits)
 
     def ber_vector(self) -> np.ndarray:
         """(3,) float32 [tables, am, counts] BERs (0.0 for disabled targets)
@@ -107,6 +124,19 @@ class FaultConfig:
         return replace(self, **{
             t: (float(ber) if getattr(self, t) is not None else None)
             for t in TARGETS})
+
+
+def counter_bits(plan: FaultPlan, window: int) -> int:
+    """Faulted bit width of one temporal-accumulator counter.
+
+    ``plan.counts_bits`` when set (e.g. 8 = the paper's full physical
+    D x 8-bit dense register file, core.bundling.temporal_counts);
+    otherwise the VALUE width ceil(log2(window+1)) — the minimum a
+    right-sized counter bank implements, where every flip perturbs a bit
+    the accumulation actually uses."""
+    if plan.counts_bits is not None:
+        return plan.counts_bits
+    return max(1, int(np.ceil(np.log2(window + 1))))
 
 
 # ---------------------------------------------------------------------------

@@ -137,20 +137,23 @@ def detection_summary(preds: np.ndarray, sessions: dict, cfg: HDCConfig
 # the sweep
 # ---------------------------------------------------------------------------
 
-def _fault_config(targets, mode: str, scheme: str, seed: int) -> FaultConfig:
+def _fault_config(targets, mode: str, scheme: str, seed: int,
+                  counts_bits: int | None = None) -> FaultConfig:
     bad = set(targets) - set(TARGETS)
     if bad:
         raise ValueError(f"unknown fault targets {sorted(bad)}; "
                          f"pick from {TARGETS}")
     kw = {t: (0.0 if t in targets else None) for t in TARGETS}
-    return FaultConfig(mode=mode, seed=seed, ecc=scheme, **kw)
+    return FaultConfig(mode=mode, seed=seed, ecc=scheme,
+                       counts_bits=counts_bits, **kw)
 
 
 def run_sweep(*, variants=("sparse_opt",), densities=(0.25,),
               bers=(0.0, 1e-3, 1e-2), schemes=("none",),
               targets=("tables", "am", "counts"), mode: str = "transient",
               base_cfg: HDCConfig, n_patients: int = 2, n_test: int = 2,
-              record_kw: dict | None = None, seed: int = 0) -> list[dict]:
+              record_kw: dict | None = None, seed: int = 0,
+              counts_bits: int | None = None) -> list[dict]:
     """Degradation grid: variant x density x ECC scheme x BER.
 
     One fleet per (variant, density, scheme); BER moves via ``set_ber``
@@ -160,7 +163,8 @@ def run_sweep(*, variants=("sparse_opt",), densities=(0.25,),
     ``core.hwmodel`` constants.  BER = 0 points additionally carry
     ``zero_ber_bitexact`` — full score-stream equality against a
     fault-free fleet (the acceptance gate; callers should treat False as
-    an error)."""
+    an error).  ``counts_bits`` widens the faulted temporal-counter word
+    to a physical register width (see ``faults.counter_bits``)."""
     sessions = make_sessions(n_patients=n_patients, n_test=n_test,
                              channels=base_cfg.channels,
                              record_kw=record_kw, seed=seed)
@@ -175,7 +179,8 @@ def run_sweep(*, variants=("sparse_opt",), densities=(0.25,),
             clean_preds, clean_scores = replay(clean, batch)
             clean_agg = detection_summary(clean_preds, sessions, cfg)
             for scheme in schemes:
-                fc = _fault_config(targets, mode, scheme, seed)
+                fc = _fault_config(targets, mode, scheme, seed,
+                                   counts_bits=counts_bits)
                 fleet = StreamingFleet(pipes, owners, buckets=buckets,
                                        faults=fc)
                 n_frames = clean_preds.size

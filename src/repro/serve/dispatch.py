@@ -26,6 +26,25 @@ along as a traced ``(B,)`` array instead of a static config field.
 Everything here is bit-exact with the per-pipeline reference datapaths (the
 bound-table equivalence is the paper's Sec. III-A binding-domain argument:
 ``shift(onehot(p_item), p_elec) == onehot((p_item + p_elec) mod L)``).
+
+**Channel masking (electrode-fault tolerance).**  Every spatial encode here
+optionally takes a per-stream ``chan_mask`` (B/S, channels) uint8 operand
+(1 = live, 0 = quarantined).  The spatial bundle is a symmetric reduction
+over channel HVs, so a masked channel is a droppable TERM, not a retrain:
+
+* OR tree: the masked channel's gathered rows are zeroed — the OR
+  identity — so the term vanishes exactly as if the electrode were absent.
+* adder tree (thinning): zeroed rows add nothing and the thinning
+  threshold renormalizes to the live channel count
+  (``effective_spatial_threshold``), keeping the spatial HV density at the
+  configured operating point as electrodes fail.
+* dense majority: zeroed rows add nothing and the majority denominator
+  becomes the per-stream live count.
+
+The mask is a TRACED operand — walking masks never recompiles — and the
+masked output is bit-exact with the same pipeline built on the physically
+reduced channel set (``reduced_channel_config``), which is the oracle the
+property tests hold it to.
 """
 
 from __future__ import annotations
@@ -118,8 +137,34 @@ def stack_bound_tables(pipes: Sequence[HDCPipeline]) -> tuple[jax.Array, np.ndar
     return jnp.stack(unique), np.asarray(rows, np.int32)
 
 
+def effective_spatial_threshold(live: jax.Array, cfg: HDCConfig) -> jax.Array:
+    """Thinning threshold renormalized to the live channel count.
+
+    ``ceil(spatial_threshold * live / channels)``, floored at 1: the
+    adder-tree thinning threshold tracks the shrinking channel population so
+    the surviving spatial HV density stays near the configured operating
+    point instead of collapsing as electrodes fail.  With every channel
+    live this is exactly ``cfg.spatial_threshold``.
+    """
+    live = live.astype(jnp.int32)
+    c = cfg.channels
+    return jnp.maximum(1, (cfg.spatial_threshold * live + c - 1) // c)
+
+
+def reduced_channel_config(cfg: HDCConfig, live: int) -> HDCConfig:
+    """The config of the reduced-channel ORACLE for a mask with ``live``
+    channels alive: the pipeline an implant with the dead electrodes
+    physically absent would run.  Masked encodes are bit-exact with it."""
+    thr = max(1, -(-cfg.spatial_threshold * live // cfg.channels))
+    return replace(cfg, channels=live, spatial_threshold=thr)
+
+
 def owner_spatial_encode(
-    tables: jax.Array, owner: jax.Array, codes: jax.Array, cfg: HDCConfig
+    tables: jax.Array,
+    owner: jax.Array,
+    codes: jax.Array,
+    cfg: HDCConfig,
+    chan_mask: jax.Array | None = None,
 ) -> jax.Array:
     """Owner-gathered spatial encode: ``(B, ..., channels)`` -> ``(B, ..., W)``.
 
@@ -133,11 +178,23 @@ def owner_spatial_encode(
     ch = jnp.arange(tables.shape[1], dtype=jnp.int32)
     o = owner.reshape((-1,) + (1,) * (codes.ndim - 1))
     bound = tables[o, ch, codes.astype(jnp.int32)]  # (B, ..., C, W)
+    if chan_mask is not None:
+        c = tables.shape[1]
+        m = chan_mask.astype(jnp.uint32).reshape(
+            (-1,) + (1,) * (codes.ndim - 2) + (c, 1))
+        bound = bound * m
+        live = chan_mask.astype(jnp.int32).sum(axis=1, dtype=jnp.int32)
+        live = live.reshape((-1,) + (1,) * (codes.ndim - 1))
     if cfg.variant == "dense":
         counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
-        return hv.majority_pack(counts, cfg.channels, cfg.dim)
+        n = cfg.channels if chan_mask is None else live
+        return hv.majority_pack(counts, n, cfg.dim)
     if cfg.variant == "sparse_naive" or cfg.spatial_thinning:
-        return bundling.spatial_bundle_thinned(bound, cfg.dim, cfg.spatial_threshold)
+        if chan_mask is None:
+            return bundling.spatial_bundle_thinned(
+                bound, cfg.dim, cfg.spatial_threshold)
+        counts = hv.unpacked_counts(bound, axis=-2, dim=cfg.dim)
+        return hv.threshold_pack(counts, effective_spatial_threshold(live, cfg))
     return hv.or_reduce(bound, axis=-2)
 
 
@@ -158,7 +215,11 @@ def spatial_block_len(t_pad: int, cfg: HDCConfig) -> int:
 
 
 def owner_spatial_codes(
-    tables: jax.Array, owner: jax.Array, codes: jax.Array, cfg: HDCConfig
+    tables: jax.Array,
+    owner: jax.Array,
+    codes: jax.Array,
+    cfg: HDCConfig,
+    chan_mask: jax.Array | None = None,
 ) -> jax.Array:
     """Code-domain fused gather+bind+bundle: (S, T, channels) uint8 codes ->
     (S, T, W) per-cycle packed spatial HVs.
@@ -185,6 +246,12 @@ def owner_spatial_codes(
 
     Bit-exact with ``owner_spatial_encode`` for every variant (OR and
     integer adds are associative/commutative; zero pad rows add nothing).
+
+    ``chan_mask`` (S, channels) uint8, when given, drops quarantined
+    channels from the bundle (see the module docstring): the masked output
+    is bit-exact with the same encode on the physically-reduced channel
+    set.  ``chan_mask=None`` leaves the program byte-identical to the
+    mask-free datapath.
     """
     s, t, c = codes.shape
     p, _, k, w = tables.shape
@@ -204,6 +271,9 @@ def owner_spatial_codes(
         lvl = [jnp.take(flat, ob + ci * k + ci32[:, :, ci], axis=0,
                         mode="clip")
                for ci in range(c)]                          # C x (S, T, W)
+        if chan_mask is not None:  # OR identity: masked terms vanish
+            m = chan_mask.astype(jnp.uint32)
+            lvl = [r * m[:, ci, None, None] for ci, r in enumerate(lvl)]
         while len(lvl) > 1:
             nxt = [a | b for a, b in zip(lvl[0::2], lvl[1::2])]
             if len(lvl) % 2:
@@ -217,16 +287,25 @@ def owner_spatial_codes(
     ob = owner[None, :, None].astype(jnp.int32) * (c * k)  # (1, S, 1)
     cbase = (jnp.arange(c, dtype=jnp.int32) * k)[:, None, None]  # (C, 1, 1)
     c32 = -(-c // 32) * 32
+    if chan_mask is not None:
+        cm = chan_mask.astype(jnp.uint32).T[:, :, None, None]  # (C, S, 1, 1)
+        live = chan_mask.astype(jnp.int32).sum(axis=1, dtype=jnp.int32)[:, None, None]
+        denom = (live if cfg.variant == "dense"
+                 else effective_spatial_threshold(live, cfg))
 
     def body(_, cb):
         idx = ob + cbase + cb.transpose(2, 0, 1).astype(jnp.int32)
         bound = jnp.take(flat, idx, axis=0, mode="clip")   # (C, S, block, W)
+        if chan_mask is not None:  # zeroed rows count nothing below
+            bound = bound * cm
         if c32 != c:  # zero rows count nothing; keeps the bit-plane route
             bound = jnp.pad(bound, ((0, c32 - c), (0, 0), (0, 0), (0, 0)))
         counts = hv.unpacked_counts(bound, axis=0, dim=cfg.dim)
         if cfg.variant == "dense":
-            return None, hv.majority_pack(counts, cfg.channels, cfg.dim)
-        return None, hv.threshold_pack(counts, cfg.spatial_threshold)
+            n = cfg.channels if chan_mask is None else denom
+            return None, hv.majority_pack(counts, n, cfg.dim)
+        thr = cfg.spatial_threshold if chan_mask is None else denom
+        return None, hv.threshold_pack(counts, thr)
 
     _, out = jax.lax.scan(body, None, blocks)              # (nb, S, block, W)
     return out.transpose(1, 0, 2, 3).reshape(s, t, cfg.words)
@@ -238,6 +317,7 @@ def owner_encode_frames(
     thresholds: jax.Array,
     codes: jax.Array,
     cfg: HDCConfig,
+    chan_mask: jax.Array | None = None,
 ) -> jax.Array:
     """Vectorized multi-patient ``encode_frames``: (B, T, ch) -> (B, F, W).
 
@@ -249,7 +329,8 @@ def owner_encode_frames(
     """
     b, t, _ = codes.shape
     f = t // cfg.window
-    words = owner_spatial_codes(tables, owner, codes[:, : f * cfg.window], cfg)
+    words = owner_spatial_codes(tables, owner, codes[:, : f * cfg.window], cfg,
+                                chan_mask)
     spatial = words.reshape(b, f, cfg.window, cfg.words)
     counts = bundling.temporal_counts(spatial, cfg.dim)  # (B, F, D)
     if cfg.variant == "dense":

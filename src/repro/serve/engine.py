@@ -298,7 +298,11 @@ class SessionSnapshot:
     bit-exactly where it left off — mid-window accumulator, adapted AM
     counter files, and the last emitted frame (so ``adapt`` feedback
     survives the reconnect) all round-trip.  The nine array/scalar fields
-    mirror one row of ``serve.fleet.FleetState``.
+    mirror one row of ``serve.fleet.FleetState``; ``channel_mask``
+    additionally carries the session's electrode quarantine (a
+    ``channel_masking`` fleet's ``set_channel_mask`` row — electrode
+    health must survive a reconnect) and stays None for sessions without
+    one, keeping old blobs loadable.
 
     ``to_bytes``/``from_bytes`` serialize through one compressed ``.npz``
     blob (a few KB at paper geometry) for transport or queueing; the
@@ -315,6 +319,7 @@ class SessionSnapshot:
     last_frame: np.ndarray         # (W,) uint32 last emitted frame HV
     last_scores: np.ndarray        # (C,) int32 its AM scores
     has_frame: int                 # 1 once a frame has been emitted
+    channel_mask: np.ndarray | None = None  # (channels,) uint8 live mask
 
     def to_bytes(self) -> bytes:
         arrays = {
@@ -331,6 +336,8 @@ class SessionSnapshot:
         if self.am_counts is not None:
             arrays["am_counts"] = np.asarray(self.am_counts, np.int32)
             arrays["am_n"] = np.asarray(self.am_n, np.int32)
+        if self.channel_mask is not None:
+            arrays["channel_mask"] = np.asarray(self.channel_mask, np.uint8)
         buf = io.BytesIO()
         np.savez_compressed(buf, **arrays)
         return buf.getvalue()
@@ -346,7 +353,11 @@ class SessionSnapshot:
                 am_counts=d["am_counts"] if has_am else None,
                 am_n=d["am_n"] if has_am else None,
                 last_frame=d["last_frame"], last_scores=d["last_scores"],
-                has_frame=has_frame)
+                has_frame=has_frame,
+                # key-presence guard: blobs from before channel masking
+                # (or from unmasked sessions) simply lack the array
+                channel_mask=(d["channel_mask"]
+                              if "channel_mask" in d.files else None))
 
 
 class SeizureSession:
@@ -494,10 +505,31 @@ class SeizureSession:
 
     def push(self, codes: jax.Array) -> list[FrameDecision]:
         """Feed (t, channels) uint8 codes; returns decisions for every frame
-        completed by this chunk (possibly empty)."""
-        codes = jnp.asarray(codes)
-        t = codes.shape[0]
+        completed by this chunk (possibly empty).
+
+        Codes are validated at the ingest boundary: a NaN-corrupted or
+        mis-wired preprocessor that ships codes outside the item-memory
+        alphabet fails HERE with a clear error instead of silently
+        clamping into the wrong codebook rows."""
         cfg = self._pipe.cfg
+        host = np.asarray(codes)
+        if host.ndim != 2 or host.shape[1] != cfg.channels:
+            raise ValueError(
+                f"push needs a (t, {cfg.channels}) code chunk, got "
+                f"{host.shape}")
+        if not np.issubdtype(host.dtype, np.integer):
+            raise ValueError(
+                f"push needs integer LBP codes, got dtype {host.dtype} "
+                "(run raw signal through data.ieeg.lbp_codes_np first; "
+                "it rejects NaN/Inf and clamps ADC rails)")
+        if host.size and (host.min() < 0 or host.max() >= cfg.codes):
+            bad = host[(host < 0) | (host >= cfg.codes)][0]
+            raise ValueError(
+                f"code {int(bad)} outside the item-memory alphabet "
+                f"[0, {cfg.codes}); corrupt ingest would silently clamp "
+                "into the wrong codebook rows")
+        codes = jnp.asarray(host.astype(np.uint8, copy=False))
+        t = codes.shape[0]
         out: list[FrameDecision] = []
         if t == 0:
             return out

@@ -250,11 +250,13 @@ def _fleet_step(
     lengths: jax.Array,
     fault_ber: jax.Array | None = None,
     fault_seed: jax.Array | None = None,
+    chan_mask: jax.Array | None = None,
     *,
     cfg: HDCConfig,
     ctx: shd.ShardCtx,
     use_kernel: bool,
     faults: FaultPlan | None = None,
+    masked: bool = False,
 ) -> tuple:
     """Advance all S sessions by one padded chunk batch.
 
@@ -285,30 +287,44 @@ def _fleet_step(
     With ``faults=None`` (the default) none of this is traced and the step
     is the unmodified two-output program; with faults enabled but BER 0
     every mask is all-zero and the outputs are bit-exact with it.
+
+    Channel masking (repro.reliability.channels): with the static
+    ``masked`` flag the step additionally takes the traced ``chan_mask``
+    (S, channels) uint8 operand — 1 = live, 0 = quarantined electrode —
+    and the spatial stage drops masked channels from the bundle with
+    renormalized count denominators (dispatch.owner_spatial_codes /
+    the fused kernel's mask operand).  The mask is DATA: walking masks
+    never recompiles, and an all-live mask is bit-exact with the
+    unmasked step.  ``masked=False`` (the default) keeps the jaxpr
+    byte-identical to the mask-free program.
     """
     s, t_pad, _ = chunk.shape
     counts_in = state.counts
     tables_xor = None
+    if not masked:
+        chan_mask = None
     if faults is not None:
         k_tab, k_am, k_cnt = rel_faults.component_keys(fault_seed)
         if faults.tables:
             tables_xor = rel_faults.xor_mask(tables, k_tab, fault_ber[0],
                                              mode=faults.mode)
         if faults.counts:
-            cbits = int(np.ceil(np.log2(cfg.window + 1)))
             counts_in = rel_faults.flip_counts(
-                counts_in, k_cnt, fault_ber[2], bits=max(1, cbits),
+                counts_in, k_cnt, fault_ber[2],
+                bits=rel_faults.counter_bits(faults, cfg.window),
                 mode=faults.mode)
     if use_kernel:
         # fused kernel: codes in, slot counts out — the table gather,
         # spatial bundle, bit transpose and masked popcount stay in VMEM
         seg = fleet_ops.fleet_counts_fused(tables, owner, chunk,
                                            state.filled, lengths, cfg,
-                                           tables_xor=tables_xor)
+                                           tables_xor=tables_xor,
+                                           chan_mask=chan_mask)
     else:
         if tables_xor is not None:
             tables = tables ^ tables_xor
-        words = dispatch.owner_spatial_codes(tables, owner, chunk, cfg)
+        words = dispatch.owner_spatial_codes(tables, owner, chunk, cfg,
+                                             chan_mask)
         seg = fleet_ops.fleet_counts(words, state.filled, lengths, cfg)
     seg = shd.constrain(seg, ("batch", None, None), ctx)  # (S, K+1, D) int32
 
@@ -457,6 +473,14 @@ class StreamingFleet:
     detected / uncorrectable counts).  BER values are traced operands —
     ``set_ber`` sweeps a grid with no recompiles — and ``faults=None``
     (the default) compiles the exact fault-free step, zero overhead.
+
+    ``channel_masking=True`` threads a per-session (S, channels) electrode
+    mask through the step as a TRACED operand: ``set_channel_mask``
+    quarantines failing channels (the spatial bundle drops them with
+    renormalized denominators — see serve/dispatch.py) and walks mask
+    grids with zero recompiles; an all-live mask (the initial state) is
+    bit-exact with an unmasked fleet.  ``channel_masking=False`` (the
+    default) compiles the exact mask-free step, zero overhead.
     """
 
     def __init__(
@@ -469,10 +493,12 @@ class StreamingFleet:
         backend: str | None = None,
         tile: int | None = None,
         faults: FaultConfig | None = None,
+        channel_masking: bool = False,
     ):
         self._cfg = dispatch.validate_bank(pipelines)
         self._faults = faults
         self._plan = None if faults is None else faults.plan()
+        self._masked = bool(channel_masking)
         if backend is None:
             backend = next(iter(pipelines.values())).cfg.backend
         if backend not in ("jnp", "pallas"):
@@ -593,6 +619,13 @@ class StreamingFleet:
             self._ber_t = [self._put_tile(faults.ber_vector(), (None,), d)
                            for d in self._tile_devs]
             self._ecc_t = self._zero_ecc()
+        # channel-fault quarantine operand: a host-mirrored (S_prov, C)
+        # uint8 mask (1 = live) with per-tile device copies, rides the step
+        # as a TRACED operand like the BER vector (set_channel_mask walks
+        # masks with no recompile).  Phantom capacity rows stay all-live.
+        if self._masked:
+            self._cmask_h = np.ones((self._np, self._cfg.channels), np.uint8)
+            self._cmask_t = self._put_tiles(self._cmask_h, ("batch", None))
         # host mirrors of filled/frame_index: the emission schedule runs on
         # device, but the host needs O(S) mirrors to route raw results
         # (which (session, slot) pairs really emitted) without a round-trip
@@ -613,10 +646,11 @@ class StreamingFleet:
         self._adapt_exec: dict[tuple, jax.stages.Compiled] = {}
         # faults=None keeps the partial's jaxpr IDENTICAL to the fault-free
         # step — the fault path costs nothing unless a plan is configured
+        # (and masked=False likewise keeps the mask-free jaxpr byte-exact)
         self._step = jax.jit(
             functools.partial(_fleet_step, cfg=self._cfg, ctx=self._ctx,
                               use_kernel=self._backend == "pallas",
-                              faults=self._plan),
+                              faults=self._plan, masked=self._masked),
             donate_argnums=(0,),
         )
         # NOT donated: several state leaves pass through adapt untouched and
@@ -757,6 +791,58 @@ class StreamingFleet:
                        for d in self._tile_devs]
 
     @property
+    def channel_masking(self) -> bool:
+        """True when the step carries the channel-mask operand."""
+        return self._masked
+
+    @property
+    def channel_masks(self) -> np.ndarray:
+        """(S, channels) uint8 live-channel masks (1 = live).  All ones —
+        including for fleets built without ``channel_masking`` — until
+        ``set_channel_mask`` quarantines something."""
+        if not self._masked:
+            return np.ones((self._n, self._cfg.channels), np.uint8)
+        return self._cmask_h[:self._n].copy()
+
+    def set_channel_mask(self, mask, sessions: Sequence[int] | None = None
+                         ) -> None:
+        """Quarantine / reinstate electrodes: install per-session live-
+        channel masks (1 = live, 0 = masked out of the spatial bundle).
+
+        ``mask`` is (S, channels) — or (channels,), broadcast to every
+        session — of 0/1 values; ``sessions`` optionally restricts the
+        update to those session indices (then ``mask`` is (len(sessions),
+        channels) or (channels,)).  The mask rides the jitted step as a
+        TRACED operand, so walking a mask grid (the channel-health
+        monitor's quarantine/reinstate churn, the degradation benchmark's
+        sweep) never recompiles.  Masks persist across ``reset`` — they
+        describe electrode health, not stream state — and are carried by
+        ``save``/``restore`` checkpoints.
+        """
+        if not self._masked:
+            raise ValueError(
+                "fleet was built without channel_masking; pass "
+                "StreamingFleet(..., channel_masking=True) to enable "
+                "electrode quarantine")
+        c = self._cfg.channels
+        m = np.asarray(mask)
+        idx = (np.arange(self._n) if sessions is None
+               else np.asarray(list(sessions), np.int64))
+        if sessions is not None and (idx.size == 0 or idx.min() < 0
+                                     or idx.max() >= self._n):
+            raise ValueError(
+                f"sessions must be indices in [0, {self._n})")
+        if m.ndim == 1:
+            m = np.broadcast_to(m, (idx.size, c))
+        if m.shape != (idx.size, c):
+            raise ValueError(
+                f"mask must be ({idx.size}, {c}) or ({c},), got {m.shape}")
+        if not np.isin(m, (0, 1)).all():
+            raise ValueError("mask entries must be 0 or 1")
+        self._cmask_h[idx] = m.astype(np.uint8)
+        self._cmask_t = self._put_tiles(self._cmask_h, ("batch", None))
+
+    @property
     def ecc_stats(self) -> np.ndarray:
         """(S, 3) cumulative per-session ECC word counts since the last
         ``reset``: [corrected, detected, uncorrectable] — ``detected``
@@ -794,13 +880,14 @@ class StreamingFleet:
 
     def _aot_sig(self) -> str:
         """Digest of everything that selects this fleet's step program
-        beyond the argument shapes: datapath config, fault plan, backend,
-        the stacked table-bank geometry and the x64 regime.  Rides in the
-        artifact entry names so a lookup can never hand back an executable
-        compiled for a different program."""
+        beyond the argument shapes: datapath config, fault plan, channel
+        masking, backend, the stacked table-bank geometry and the x64
+        regime.  Rides in the artifact entry names so a lookup can never
+        hand back an executable compiled for a different program."""
         h = hashlib.sha256()
         h.update(repr(self._cfg).encode())
         h.update(repr(self._plan).encode())
+        h.update(str(self._masked).encode())
         h.update(self._backend.encode())
         h.update(str(tuple(jnp.shape(self._tables_t[0]))).encode())
         h.update(str(bool(jax.config.jax_enable_x64)).encode())
@@ -808,7 +895,8 @@ class StreamingFleet:
 
     def _aot_name(self, kind: str, tile_s: int, t_pad: int | None = None) -> str:
         base = (f"fleet.{self._cfg.variant}.{self._backend}"
-                f"{'.faulted' if self._plan is not None else ''}.s{tile_s}")
+                f"{'.faulted' if self._plan is not None else ''}"
+                f"{'.masked' if self._masked else ''}.s{tile_s}")
         mid = f".t{t_pad}" if kind == "step" else ""
         return f"{base}{mid}.{kind}.{self._aot_sig()}"
 
@@ -837,6 +925,9 @@ class StreamingFleet:
         if self._plan is not None:
             avals += (self._sds(np.zeros((3,), np.float32), dev),
                       self._sds(np.int32(0), dev))
+        if self._masked:
+            avals += (self._sds(
+                np.ones((tile_s, self._cfg.channels), np.uint8), dev),)
         return avals
 
     def _adapt_avals(self, k: int, dev) -> tuple:
@@ -1136,6 +1227,8 @@ class StreamingFleet:
                         phase=phase)
                     args += (self._ber_t[k],
                              self._put_tile(np.int32(seed), (), d))
+                if self._masked:
+                    args += (self._cmask_t[k],)
                 res = self._call_step(t_pad, sl, d, args)
                 if self._plan is None:
                     self._state_t[k], fo = res
@@ -1309,9 +1402,16 @@ class StreamingFleet:
 
         # cfg rides in the closure (a static, like the step's partial) —
         # operands stay explicit jit arguments so nothing constant-folds
-        f_spatial = jax.jit(
-            lambda t_, o, c: dispatch.owner_spatial_codes(t_, o, c, cfg))
-        words = jax.block_until_ready(f_spatial(tables, owner, chunk_d))
+        if self._masked:
+            f_spatial = jax.jit(
+                lambda t_, o, c, m: dispatch.owner_spatial_codes(
+                    t_, o, c, cfg, m))
+            spatial_args = (tables, owner, chunk_d, self._cmask_t[0])
+        else:
+            f_spatial = jax.jit(
+                lambda t_, o, c: dispatch.owner_spatial_codes(t_, o, c, cfg))
+            spatial_args = (tables, owner, chunk_d)
+        words = jax.block_until_ready(f_spatial(*spatial_args))
         f_temporal = jax.jit(
             lambda w, f, l: fleet_ops.fleet_counts(w, f, l, cfg))
         seg = jax.block_until_ready(f_temporal(words, filled, lengths))
@@ -1342,7 +1442,7 @@ class StreamingFleet:
         return {
             "ingest": (run_ingest, 1),
             "spatial": (lambda: jax.block_until_ready(
-                f_spatial(tables, owner, chunk_d)), n_tiles),
+                f_spatial(*spatial_args)), n_tiles),
             "temporal": (lambda: jax.block_until_ready(
                 f_temporal(words, filled, lengths)), n_tiles),
             "am": (lambda: jax.block_until_ready(
@@ -1476,7 +1576,17 @@ class StreamingFleet:
         if aot_dir is not None:
             self.save_aot(aot_dir)
             aot_entry = {"path": aot_dir, "key": aot_mod.artifact_key()}
-        return ckpt.save(root, step, self.state, meta=self._meta(),
+        meta = self._meta()
+        if self._masked:
+            # electrode-health carriage: the quarantine masks ride the
+            # manifest meta OUTSIDE the _meta() comparison dict, so
+            # checkpoints stay loadable by mask-free fleets (extra keys
+            # are ignored at restore)
+            meta["channel_mask"] = {
+                "shape": [self._n, self._cfg.channels],
+                "hex": self._cmask_h[:self._n].tobytes().hex(),
+            }
+        return ckpt.save(root, step, self.state, meta=meta,
                          aot=aot_entry)
 
     def restore(self, root: str, step: int | None = None) -> int:
@@ -1505,4 +1615,18 @@ class StreamingFleet:
         self._filled_h = np.asarray(full.filled).astype(np.int64)
         self._fidx_h = np.asarray(full.frame_index).astype(np.int64)
         self._dirty_t = [True] * len(self._tile_slices)
+        if self._masked:
+            # re-establish the checkpoint's electrode quarantine (all-live
+            # when the checkpoint came from a fleet without masking)
+            cm = meta.get("channel_mask")
+            self._cmask_h[:] = 1
+            if cm is not None:
+                n, c = cm["shape"]
+                if (n, c) != (self._n, self._cfg.channels):
+                    raise ValueError(
+                        f"checkpoint channel_mask is ({n}, {c}); this "
+                        f"fleet is ({self._n}, {self._cfg.channels})")
+                self._cmask_h[:self._n] = np.frombuffer(
+                    bytes.fromhex(cm["hex"]), np.uint8).reshape(n, c)
+            self._cmask_t = self._put_tiles(self._cmask_h, ("batch", None))
         return step

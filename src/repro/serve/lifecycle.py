@@ -146,6 +146,7 @@ class ElasticFleet(StreamingFleet):
         log_rounds: int = 64,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         backend: str | None = None,
+        channel_masking: bool = False,
     ):
         if not pipelines:
             raise ValueError("ElasticFleet needs at least one pipeline")
@@ -164,7 +165,8 @@ class ElasticFleet(StreamingFleet):
         # per-PATIENT init registers admissions are written from
         owners = [pids[i % len(pids)] for i in range(tile)]
         super().__init__(pipelines, owners, buckets=buckets,
-                         backend=backend, tile=tile)
+                         backend=backend, tile=tile,
+                         channel_masking=channel_masking)
         assert self._np == tile and len(self._tile_slices) == 1
         self._tile = int(tile)
         self._max_tiles = int(max_tiles)
@@ -325,6 +327,9 @@ class ElasticFleet(StreamingFleet):
         self._param_owner_t[k] = self._put_tile(self._prow_h[sl],
                                                 ("batch",), d)
         self._density_t[k] = self._put_tile(self._dens_h[sl], ("batch",), d)
+        if self._masked:
+            self._cmask_t[k] = self._put_tile(self._cmask_h[sl],
+                                              ("batch", None), d)
 
     def _write_slot(self, slot: int, pid: Hashable,
                     snapshot: SessionSnapshot | None) -> None:
@@ -356,6 +361,20 @@ class ElasticFleet(StreamingFleet):
         self._thr_h[slot] = self._pat_thr[p]
         self._prow_h[slot] = self._pat_prow[p]
         self._dens_h[slot] = self._pat_dens[p]
+        if self._masked:
+            # electrode quarantine follows the SESSION: a reconnecting
+            # snapshot re-installs its mask, a fresh admit (or a snapshot
+            # from an unmasked source) starts all-live
+            ch = self._cfg.channels
+            if snapshot is not None and snapshot.channel_mask is not None:
+                cm = np.asarray(snapshot.channel_mask, np.uint8)
+                if cm.shape != (ch,):
+                    raise ValueError(
+                        f"snapshot channel_mask must be ({ch},), got "
+                        f"{cm.shape}")
+                self._cmask_h[slot] = cm
+            else:
+                self._cmask_h[slot] = 1
         self._reput_registers(k)
 
     def _snapshot_slot(self, slot: int) -> SessionSnapshot:
@@ -389,7 +408,9 @@ class ElasticFleet(StreamingFleet):
             class_rows=rows9,
             am_counts=am_c if has_am else None,
             am_n=am_n if has_am else None,
-            last_frame=lastf, last_scores=lasts, has_frame=int(hasf))
+            last_frame=lastf, last_scores=lasts, has_frame=int(hasf),
+            channel_mask=(self._cmask_h[slot].copy()
+                          if self._masked else None))
 
     # -- tile growth / shrink -----------------------------------------------
 
@@ -432,11 +453,17 @@ class ElasticFleet(StreamingFleet):
             [self._filled_h, np.zeros((t,), np.int64)])
         self._fidx_h = np.concatenate(
             [self._fidx_h, np.zeros((t,), np.int64)])
+        if self._masked:
+            self._cmask_h = np.concatenate(
+                [self._cmask_h,
+                 np.ones((t, self._cfg.channels), np.uint8)])
         self._np += t
         self._n = self._np
         for lst in (self._thresholds_t, self._param_owner_t,
                     self._density_t):
             lst.append(None)  # filled by _reput_registers just below
+        if self._masked:
+            self._cmask_t.append(None)  # likewise
         self._reput_registers(k)
         self._state_t.append(self._zero_state(sl, d))
         self._stage_t.append({})
@@ -480,12 +507,16 @@ class ElasticFleet(StreamingFleet):
                     self._density_t, self._stage_t, self._stage_busy,
                     self._dirty_t, self._free):
             lst.pop()
+        if self._masked:
+            self._cmask_t.pop()
         t = self._tile
         self._np -= t
         self._n = self._np
         for name in ("_filled_h", "_fidx_h", "_thr_h", "_prow_h",
                      "_dens_h"):
             setattr(self, name, getattr(self, name)[:self._np].copy())
+        if self._masked:
+            self._cmask_h = self._cmask_h[:self._np].copy()
         self._class_rows0 = self._class_rows0[:self._np].copy()
         if self._am_counts0 is not None:
             self._am_counts0 = self._am_counts0[:self._np].copy()
@@ -832,7 +863,7 @@ class ElasticFleet(StreamingFleet):
         return h.hexdigest()[:16]
 
     def _lifecycle_meta(self) -> dict:
-        return {
+        out = {
             "n_tiles": len(self._tile_slices),
             "sessions": [[sid, slot, json.dumps(self._sid_pid[sid])]
                          for sid, slot in sorted(self._sid_slot.items())],
@@ -844,6 +875,12 @@ class ElasticFleet(StreamingFleet):
                       for pid, snap in self._queue],
             "stats": dict(self._stats),
         }
+        if self._masked:
+            out["channel_mask"] = {
+                "shape": [self._np, self._cfg.channels],
+                "hex": self._cmask_h[:self._np].tobytes().hex(),
+            }
+        return out
 
     def save(self, root: str, step: int | None = None,
              aot_dir: str | None = None) -> str:
@@ -960,6 +997,18 @@ class ElasticFleet(StreamingFleet):
             self._thr_h[slot] = self._pat_thr[p]
             self._prow_h[slot] = self._pat_prow[p]
             self._dens_h[slot] = self._pat_dens[p]
+        if self._masked:
+            self._cmask_h[:] = 1
+            cm = life.get("channel_mask")
+            if cm is not None:
+                n, c = (int(v) for v in cm["shape"])
+                if (n, c) != (self._np, self._cfg.channels):
+                    raise ValueError(
+                        f"checkpoint channel_mask is ({n}, {c}); this "
+                        f"fleet provisions ({self._np}, "
+                        f"{self._cfg.channels})")
+                self._cmask_h[:] = np.frombuffer(
+                    bytes.fromhex(cm["hex"]), np.uint8).reshape(n, c)
         for k in range(n_tiles):
             self._reput_registers(k)
         for pid_json, b64snap in life["queue"]:

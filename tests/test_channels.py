@@ -1,0 +1,515 @@
+"""Channel-fault tolerance (reliability/channels.py + the masked fleet
+datapath): electrode fault models, online health quarantine with
+hysteresis, per-session channel masks threaded through the jitted fleet
+step (all-live bit-exactness, reduced-channel-oracle parity, recompile-free
+mask walks, checkpoint/snapshot/lifecycle carriage), ingest validation, and
+the dense temporal-counter physical-width fault plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.pipeline import HDCConfig, HDCPipeline
+from repro.data import ieeg
+from repro.kernels.hdc_fleet import ops as fleet_ops
+from repro.reliability import channels as chan
+from repro.reliability import faults as rel_faults
+from repro.serve import dispatch
+from repro.serve.engine import SeizureSession, SessionSnapshot
+from repro.serve.fleet import StreamingFleet
+from repro.serve.lifecycle import ElasticFleet
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIM, SEGMENTS, CHANNELS, WINDOW = 256, 8, 8, 32
+
+# (variant, spatial_thinning): every spatial-bundle mode the mask touches
+MODES = [("sparse_compim", False), ("sparse_compim", True),
+         ("sparse_naive", True), ("dense", False)]
+
+
+def _cfg(variant: str, **overrides) -> HDCConfig:
+    base = dict(dim=DIM, segments=SEGMENTS, channels=CHANNELS, window=WINDOW,
+                variant=variant, spatial_threshold=1, temporal_threshold=4)
+    base.update(overrides)
+    return HDCConfig(**base)
+
+
+def _trained(variant: str, seed: int, **overrides) -> HDCPipeline:
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(variant, **overrides)
+    codes = jnp.asarray(rng.integers(0, 64, (2, 4 * WINDOW, CHANNELS),
+                                     np.uint8))
+    labels = np.asarray(rng.integers(0, 2, (2, 4), np.int32))
+    labels[0, :2] = (0, 1)
+    pipe = HDCPipeline.init(jax.random.PRNGKey(seed), cfg)
+    return pipe.train_one_shot(codes, jnp.asarray(labels))
+
+
+def _chunk(rng, t):
+    return rng.integers(0, 64, (t, CHANNELS), np.uint8)
+
+
+def _assert_decisions_equal(a, b):
+    assert len(a) == len(b)
+    for f, s in zip(a, b):
+        assert f.frame_index == s.frame_index
+        assert f.prediction == s.prediction
+        np.testing.assert_array_equal(f.scores, s.scores)
+        np.testing.assert_array_equal(f.frame_hv, s.frame_hv)
+
+
+# ---------------------------------------------------------------------------
+# electrode fault models
+# ---------------------------------------------------------------------------
+
+def test_signal_faults_shift_code_statistics():
+    """Each signal-level fault leaves other channels untouched and drives
+    the faulted channel's LBP statistics the way the monitor expects."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((CHANNELS, 4096)).astype(np.float32)
+    healthy_ent, _ = chan.channel_stats(ieeg.lbp_codes_np(x).T)
+    for kind in chan.CHANNEL_FAULT_TYPES:
+        y = chan.inject_signal_fault(x, 3, kind, np.random.default_rng(1))
+        assert y.shape == x.shape
+        others = [c for c in range(CHANNELS) if c != 3]
+        np.testing.assert_array_equal(y[others], x[others])
+        ent, stuck = chan.channel_stats(ieeg.lbp_codes_np(y).T)
+        if kind == "dead":
+            assert ent[3] < 0.1 and stuck[3] > 1000
+        elif kind == "gain_drift":
+            # near-healthy: constant-gain invariance holds except at
+            # near-tie first differences
+            assert ent[3] > 0.8 * healthy_ent[3]
+        else:
+            assert ent[3] < healthy_ent[3]
+
+
+def test_signal_fault_transform_validates_kind():
+    with pytest.raises(ValueError, match="kind"):
+        chan.signal_fault_transform([(0, "exploded")])
+
+
+def test_make_record_signal_transform_hook():
+    """A dead-channel transform flows through the exact production
+    preprocessing: the record's codes for that channel collapse to 0."""
+    rng = np.random.default_rng(2)
+    rec = ieeg.make_record(
+        rng, channels=CHANNELS, pre_s=2.0, ictal_s=2.0, post_s=1.0,
+        signal_transform=chan.signal_fault_transform([(5, "dead")]))
+    assert (rec.codes[:, 5] == 0).all()
+    assert (rec.codes[:, 0] != 0).any()
+
+
+def test_make_record_signal_transform_shape_guard():
+    rng = np.random.default_rng(3)
+    with pytest.raises(ValueError, match="preserve"):
+        ieeg.make_record(rng, channels=CHANNELS, pre_s=1.0, ictal_s=1.0,
+                         post_s=1.0, signal_transform=lambda x, r: x[:, :-1])
+
+
+def test_inject_code_fault_models():
+    rng = np.random.default_rng(4)
+    codes = rng.integers(0, 64, (100, CHANNELS), np.uint8)
+    dead = chan.inject_code_fault(codes, 2, "dead", rng)
+    assert (dead[:, 2] == 0).all()
+    np.testing.assert_array_equal(np.delete(dead, 2, axis=1),
+                                  np.delete(codes, 2, axis=1))
+    for kind in ("saturated", "line_noise", "dropout"):
+        out = chan.inject_code_fault(codes, 2, kind, rng)
+        assert out.shape == codes.shape and out.dtype == np.uint8
+        assert (out[:, 2] < 64).all()
+    with pytest.raises(ValueError, match="gain_drift"):
+        chan.inject_code_fault(codes, 2, "gain_drift", rng)
+    with pytest.raises(ValueError, match="start"):
+        chan.inject_code_fault(codes, 2, "dead", rng, start=100)
+
+
+def test_degrade_batch_mask_matches_faults():
+    rng = np.random.default_rng(5)
+    batch = rng.integers(0, 64, (3, 64, CHANNELS), np.uint8)
+    out, mask = chan.degrade_batch(batch, 2, "dead", seed=0)
+    assert mask.shape == (3, CHANNELS)
+    assert (mask.sum(axis=1) == CHANNELS - 2).all()
+    for s in range(3):
+        live = np.nonzero(mask[s])[0]
+        np.testing.assert_array_equal(out[s][:, live], batch[s][:, live])
+        assert (out[s][:, mask[s] == 0] == 0).all()  # dead -> code 0
+    out0, mask0 = chan.degrade_batch(batch, 0, "dead", seed=0)
+    np.testing.assert_array_equal(out0, batch)
+    assert (mask0 == 1).all()
+    with pytest.raises(ValueError, match="n_failed"):
+        chan.degrade_batch(batch, CHANNELS + 1, "dead")
+
+
+# ---------------------------------------------------------------------------
+# online channel-health monitor
+# ---------------------------------------------------------------------------
+
+def _blocks(dead=(), t=256, seed=0):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 64, (t, CHANNELS), np.uint8)
+    for ch in dead:
+        codes[:, ch] = 0
+    return codes
+
+
+def test_monitor_quarantine_and_reinstate_hysteresis():
+    mon = chan.ChannelHealthMonitor(CHANNELS)
+    assert (mon.observe(_blocks(dead=(3,))) == 1).all()  # 1 strike: no trip
+    mask = mon.observe(_blocks(dead=(3,), seed=1))
+    assert mask[3] == 0 and mask.sum() == CHANNELS - 1
+    assert mon.n_quarantined == 1
+    # recovery: reinstates only after reinstate_after consecutive healthy
+    for i in range(mon.reinstate_after - 1):
+        assert mon.observe(_blocks(seed=2 + i))[3] == 0
+    assert mon.observe(_blocks(seed=9))[3] == 1
+    events = [(e["event"], e["channel"]) for e in mon.events]
+    assert events == [("quarantine", 3), ("reinstate", 3)]
+
+
+def test_monitor_does_not_quarantine_gain_drift():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((CHANNELS, 4096)).astype(np.float32)
+    y = chan.inject_signal_fault(x, 3, "gain_drift", rng)
+    mon = chan.ChannelHealthMonitor(CHANNELS)
+    for _ in range(4):
+        mon.observe(ieeg.lbp_codes_np(y).T)
+    assert mon.n_quarantined == 0
+
+
+def test_monitor_shape_validation():
+    mon = chan.ChannelHealthMonitor(CHANNELS)
+    with pytest.raises(ValueError, match="code block"):
+        mon.observe(np.zeros((16, CHANNELS + 1), np.uint8))
+
+
+def test_fleet_monitor_merges_session_events():
+    fm = chan.FleetChannelMonitor(2, CHANNELS)
+    batch = np.stack([_blocks(dead=(1,)), _blocks(dead=(4,), seed=7)])
+    fm.observe(batch)
+    masks = fm.observe(batch)
+    assert masks.shape == (2, CHANNELS)
+    assert masks[0, 1] == 0 and masks[1, 4] == 0
+    assert {(e["session"], e["channel"]) for e in fm.events} == \
+        {(0, 1), (1, 4)}
+    assert fm.n_quarantined == 2
+    with pytest.raises(ValueError, match="batch"):
+        fm.observe(batch[:1])
+
+
+# ---------------------------------------------------------------------------
+# ingest validation
+# ---------------------------------------------------------------------------
+
+def test_validate_signal_rejects_non_finite():
+    x = np.zeros((2, 16), np.float32)
+    x[1, 3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        ieeg.validate_signal(x)
+    x[1, 3] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        ieeg.lbp_codes_np(x)
+
+
+def test_validate_signal_clamps_to_adc_rails():
+    x = np.asarray([[-10.0, 0.5, 10.0]], np.float32)
+    out = ieeg.validate_signal(x, adc_limit=2.0)
+    np.testing.assert_array_equal(out, [[-2.0, 0.5, 2.0]])
+    with pytest.raises(ValueError, match="positive"):
+        ieeg.validate_signal(x, adc_limit=0.0)
+
+
+def test_session_push_validates_codes():
+    sess = SeizureSession(_trained("sparse_compim", seed=0))
+    rng = np.random.default_rng(8)
+    with pytest.raises(ValueError, match="code chunk"):
+        sess.push(rng.integers(0, 64, (16, CHANNELS + 1), np.uint8))
+    with pytest.raises(ValueError, match="lbp_codes_np"):
+        sess.push(rng.random((16, CHANNELS), np.float32))
+    bad = rng.integers(0, 64, (16, CHANNELS), np.int64)
+    bad[3, 2] = 64
+    with pytest.raises(ValueError, match="alphabet"):
+        sess.push(bad)
+    sess.push(rng.integers(0, 64, (WINDOW, CHANNELS), np.uint8))  # clean
+
+
+# ---------------------------------------------------------------------------
+# dense temporal-counter physical width (reliability/faults.py)
+# ---------------------------------------------------------------------------
+
+def test_counter_bits_value_vs_physical_width():
+    plan = rel_faults.FaultConfig(counts=0.0).plan()
+    assert rel_faults.counter_bits(plan, 32) == 6   # ceil(log2(33))
+    assert rel_faults.counter_bits(plan, 128) == 8
+    phys = rel_faults.FaultConfig(counts=0.0, counts_bits=8).plan()
+    assert rel_faults.counter_bits(phys, 32) == 8
+    # default stays equality-compatible with pre-counts_bits plans
+    assert plan == rel_faults.FaultConfig(counts=0.0,
+                                          counts_bits=None).plan()
+    with pytest.raises(ValueError, match="counts_bits"):
+        rel_faults.FaultConfig(counts=0.0, counts_bits=0)
+    with pytest.raises(ValueError, match="counts_bits"):
+        rel_faults.FaultConfig(counts=0.0, counts_bits=33)
+
+
+# ---------------------------------------------------------------------------
+# masked fleet datapath
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant,thinning", MODES)
+def test_all_live_mask_bit_exact_with_unmasked_fleet(variant, thinning):
+    """channel_masking=True with every channel live must change nothing:
+    same decisions, scores and frame HVs as the mask-free fleet."""
+    pipes = {"a": _trained(variant, seed=0, spatial_thinning=thinning),
+             "b": _trained(variant, seed=1, spatial_thinning=thinning)}
+    owners = ["a", "b", "a"]
+    plain = StreamingFleet(pipes, owners, buckets=(16, 32))
+    masked = StreamingFleet(pipes, owners, buckets=(16, 32),
+                            channel_masking=True)
+    assert masked.channel_masking and not plain.channel_masking
+    rng = np.random.default_rng(9)
+    for _ in range(4):
+        chunks = [_chunk(rng, int(t))
+                  for t in rng.integers(0, 40, len(owners))]
+        a, b = plain.push(chunks), masked.push(chunks)
+        for i in range(len(owners)):
+            _assert_decisions_equal(a[i], b[i])
+
+
+def test_masked_fleet_matches_physically_reduced_sessions():
+    """Quarantining channels in the fleet == running plain sessions on a
+    pipeline whose dead channels never existed (the implant oracle),
+    projected back through the mask: decisions agree frame-for-frame."""
+    variant = "sparse_compim"
+    pipes = {"a": _trained(variant, seed=0)}
+    masked = StreamingFleet(pipes, ["a"], buckets=(WINDOW,),
+                            channel_masking=True)
+    mask = np.ones(CHANNELS, np.uint8)
+    mask[[2, 5]] = 0
+    masked.set_channel_mask(mask)
+    live = np.nonzero(mask)[0]
+
+    # oracle: same trained params, tables sliced to the live channels
+    pipe = pipes["a"]
+    tables, _ = dispatch.stack_bound_tables([pipe])
+    red_cfg = dispatch.reduced_channel_config(pipe.cfg, len(live))
+    rng = np.random.default_rng(10)
+    chunk = rng.integers(0, 64, (2 * WINDOW, CHANNELS), np.uint8)
+    owner = jnp.zeros((1,), jnp.int32)
+    got = dispatch.owner_spatial_codes(
+        tables, owner, jnp.asarray(chunk[None]), pipe.cfg,
+        chan_mask=jnp.asarray(mask[None]))
+    want = dispatch.owner_spatial_codes(
+        jnp.asarray(np.asarray(tables)[:, live]), owner,
+        jnp.asarray(chunk[None][:, :, live]), red_cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    out = masked.push([chunk])  # and the full fleet step consumes the mask
+    assert len(out[0]) == 2
+
+
+@pytest.mark.parametrize("variant,thinning", MODES)
+@pytest.mark.parametrize("n_dead", [1, 2, 3])
+def test_masked_spatial_matches_reduced_oracle(variant, thinning, n_dead):
+    """owner_spatial_codes under a mask == the same encode on the
+    physically-reduced channel set, for every bundle mode, jnp AND the
+    fused kernel path."""
+    pipe = _trained(variant, seed=3, spatial_thinning=thinning,
+                    spatial_threshold=2)
+    other = _trained(variant, seed=7, spatial_thinning=thinning,
+                     spatial_threshold=2)
+    cfg = pipe.cfg
+    # two DISTINCT codebooks: stack_bound_tables dedupes shared params, so
+    # [pipe, pipe] would collapse to a one-row bank and owner=1 would read
+    # past it (the jnp gather clamps; the kernel's BlockSpec does not)
+    tables, rows = dispatch.stack_bound_tables([pipe, other])
+    assert tables.shape[0] == 2 and list(rows) == [0, 1]
+    rng = np.random.default_rng(11 + n_dead)
+    s, t = 3, 2 * WINDOW
+    codes = rng.integers(0, 64, (s, t, CHANNELS), np.uint8)
+    owner = jnp.asarray(rng.integers(0, 2, s), jnp.int32)
+    mask = np.ones((s, CHANNELS), np.uint8)
+    for i in range(s):
+        mask[i, rng.choice(CHANNELS, n_dead, replace=False)] = 0
+
+    got = dispatch.owner_spatial_codes(tables, owner, jnp.asarray(codes),
+                                       cfg, chan_mask=jnp.asarray(mask))
+    # per-session oracle: each session has its own live set
+    for i in range(s):
+        live = np.nonzero(mask[i])[0]
+        red_cfg = dispatch.reduced_channel_config(cfg, len(live))
+        want = dispatch.owner_spatial_codes(
+            jnp.asarray(np.asarray(tables)[:, live]), owner[i:i + 1],
+            jnp.asarray(codes[i:i + 1][:, :, live]), red_cfg)
+        np.testing.assert_array_equal(np.asarray(got)[i],
+                                      np.asarray(want)[0])
+
+    # fused-kernel path: masked counts == counts of the masked words
+    filled = jnp.zeros(s, jnp.int32)
+    lengths = jnp.full((s,), t, jnp.int32)
+    k = np.asarray(fleet_ops.fleet_counts_fused(
+        tables, owner, jnp.asarray(codes), filled, lengths, cfg,
+        chan_mask=jnp.asarray(mask)))
+    want_k = np.asarray(fleet_ops.fleet_counts(got, filled, lengths, cfg))
+    np.testing.assert_array_equal(k, want_k)
+
+
+@given(st.integers(0, 2**CHANNELS - 2), st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_masked_oracle_parity_property(maskbits, seed):
+    """Random masks (any live subset, never empty): masked encode equals
+    the reduced-channel oracle for a thinned and an OR-tree variant."""
+    mask = np.asarray([(maskbits >> i) & 1 for i in range(CHANNELS)],
+                      np.uint8) ^ 1  # complement: maskbits=0 -> all live
+    live = np.nonzero(mask)[0]
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 64, (1, WINDOW, CHANNELS), np.uint8)
+    owner = jnp.zeros((1,), jnp.int32)
+    for variant, thinning in (("sparse_compim", False),
+                              ("sparse_naive", True)):
+        pipe = _trained(variant, seed=4, spatial_thinning=thinning,
+                        spatial_threshold=2)
+        tables, _ = dispatch.stack_bound_tables([pipe])
+        got = dispatch.owner_spatial_codes(
+            tables, owner, jnp.asarray(codes), pipe.cfg,
+            chan_mask=jnp.asarray(mask[None]))
+        red_cfg = dispatch.reduced_channel_config(pipe.cfg, len(live))
+        want = dispatch.owner_spatial_codes(
+            jnp.asarray(np.asarray(tables)[:, live]), owner,
+            jnp.asarray(codes[:, :, live]), red_cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mask_walk_is_recompile_free(no_recompiles):
+    """Walking a mask grid is a traced-operand update: zero XLA compiles
+    after the warmup push."""
+    pipes = {"a": _trained("sparse_compim", seed=0)}
+    fleet = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,),
+                           channel_masking=True)
+    rng = np.random.default_rng(12)
+    chunks = [_chunk(rng, WINDOW) for _ in range(2)]
+    fleet.push(chunks)  # warmup: compile the one bucket
+    with no_recompiles():
+        for ch in range(CHANNELS - 1):
+            mask = np.ones((2, CHANNELS), np.uint8)
+            mask[:, ch] = 0
+            fleet.set_channel_mask(mask)
+            out = fleet.push(chunks)
+            assert all(len(o) == 1 for o in out)
+        fleet.set_channel_mask(np.ones(CHANNELS, np.uint8))
+        fleet.push(chunks)
+
+
+def test_set_channel_mask_validation():
+    pipes = {"a": _trained("sparse_compim", seed=0)}
+    plain = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,))
+    with pytest.raises(ValueError, match="channel_masking"):
+        plain.set_channel_mask(np.ones(CHANNELS, np.uint8))
+    np.testing.assert_array_equal(plain.channel_masks,
+                                  np.ones((2, CHANNELS), np.uint8))
+    fleet = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,),
+                           channel_masking=True)
+    with pytest.raises(ValueError, match="mask"):
+        fleet.set_channel_mask(np.ones((2, CHANNELS + 1), np.uint8))
+    with pytest.raises(ValueError, match="0 or 1"):
+        fleet.set_channel_mask(np.full(CHANNELS, 2, np.uint8))
+    with pytest.raises(ValueError, match="sessions"):
+        fleet.set_channel_mask(np.ones(CHANNELS, np.uint8), sessions=[5])
+    # per-session restriction + (C,) broadcast
+    m = np.ones(CHANNELS, np.uint8)
+    m[0] = 0
+    fleet.set_channel_mask(m, sessions=[1])
+    got = fleet.channel_masks
+    assert got[1, 0] == 0 and got[0, 0] == 1
+
+
+def test_mask_survives_reset_and_checkpoint(tmp_path):
+    """Masks describe electrode health, not stream state: reset keeps
+    them; save/restore round-trips them; a mask-free checkpoint restores
+    as all-live."""
+    pipes = {"a": _trained("sparse_compim", seed=0)}
+    fleet = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,),
+                           channel_masking=True)
+    mask = np.ones((2, CHANNELS), np.uint8)
+    mask[0, 3] = 0
+    fleet.set_channel_mask(mask)
+    rng = np.random.default_rng(13)
+    chunks = [_chunk(rng, WINDOW) for _ in range(2)]
+    out_before = fleet.push(chunks)
+    fleet.reset()
+    np.testing.assert_array_equal(fleet.channel_masks, mask)
+    out_after = fleet.push(chunks)  # same mask -> same decisions
+    for i in range(2):
+        _assert_decisions_equal(out_before[i], out_after[i])
+
+    fleet.save(str(tmp_path / "ck"))
+    other = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,),
+                           channel_masking=True)
+    other.restore(str(tmp_path / "ck"))
+    np.testing.assert_array_equal(other.channel_masks, mask)
+    _assert_decisions_equal(fleet.push(chunks)[0], other.push(chunks)[0])
+
+    plain = StreamingFleet(pipes, ["a", "a"], buckets=(WINDOW,))
+    plain.push(chunks)
+    plain.save(str(tmp_path / "ck2"))
+    other.restore(str(tmp_path / "ck2"))  # no mask in meta: all-live
+    np.testing.assert_array_equal(other.channel_masks,
+                                  np.ones((2, CHANNELS), np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# snapshot + lifecycle carriage
+# ---------------------------------------------------------------------------
+
+def test_snapshot_channel_mask_roundtrip():
+    pipe = _trained("sparse_compim", seed=0)
+    sess = SeizureSession(pipe)
+    sess.push(np.random.default_rng(14).integers(
+        0, 64, (WINDOW, CHANNELS), np.uint8))
+    snap = sess.snapshot()
+    assert snap.channel_mask is None  # engine sessions don't mask
+    blob = snap.to_bytes()
+    assert SessionSnapshot.from_bytes(blob).channel_mask is None  # compat
+    mask = np.ones(CHANNELS, np.uint8)
+    mask[6] = 0
+    import dataclasses
+    snap2 = dataclasses.replace(snap, channel_mask=mask)
+    back = SessionSnapshot.from_bytes(snap2.to_bytes())
+    np.testing.assert_array_equal(back.channel_mask, mask)
+
+
+def test_elastic_fleet_mask_follows_session(tmp_path):
+    """Quarantine follows the SESSION through evict/readmit: the snapshot
+    carries the mask, a fresh admission starts all-live, and elastic
+    save/restore round-trips the whole mask table."""
+    bank = {f"p{i}": _trained("sparse_compim", seed=i) for i in range(2)}
+    fleet = ElasticFleet(bank, tile=4, max_tiles=2, buckets=(WINDOW,),
+                         channel_masking=True)
+    sid = fleet.admit("p0")
+    slot = fleet._sid_slot[sid]
+    m = np.ones(CHANNELS, np.uint8)
+    m[2] = 0
+    fleet.set_channel_mask(m, sessions=[slot])
+    rng = np.random.default_rng(15)
+    fleet.push_sessions({sid: _chunk(rng, WINDOW)})
+
+    snap = fleet.evict([sid])[sid]
+    np.testing.assert_array_equal(snap.channel_mask, m)
+
+    sid2 = fleet.admit("p1")  # fresh admission (may reuse the slot)
+    slot2 = fleet._sid_slot[sid2]
+    np.testing.assert_array_equal(fleet.channel_masks[slot2],
+                                  np.ones(CHANNELS, np.uint8))
+
+    sid3 = fleet.admit("p0", snapshot=snap)  # reconnect: mask comes back
+    slot3 = fleet._sid_slot[sid3]
+    np.testing.assert_array_equal(fleet.channel_masks[slot3], m)
+
+    fleet.save(str(tmp_path / "ck"))
+    other = ElasticFleet(bank, tile=4, max_tiles=2, buckets=(WINDOW,),
+                         channel_masking=True)
+    other.restore(str(tmp_path / "ck"))
+    np.testing.assert_array_equal(other.channel_masks, fleet.channel_masks)
